@@ -1,0 +1,61 @@
+"""Multi-model / Meta-Model analysis (paper §2.2; M3SA [28]).
+
+OpenDT "enables ... multi-model simulation that combines the results of
+multiple heterogeneous models ... to improve accuracy and quantify
+fine-grained differences".  We run the OpenDC model zoo over the same
+utilization field and compare each model and three combiners against the
+hidden-model telemetry.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mape
+from repro.core.metamodel import combine, run_multi_model
+from repro.core.power import PowerParams
+from repro.core.twin import TraceGroundTruth
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+
+def run(days: float = 7.0, seed: int = 22) -> dict:
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=seed), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    truth = TraceGroundTruth(w, dc, t_bins)
+    u = jnp.asarray(truth.u_th)
+    real = truth.power
+
+    per = run_multi_model(u, PowerParams())
+    real32 = jnp.asarray(real, dtype=jnp.float32)
+
+    def m(x):
+        return float(mape(real32, jnp.asarray(np.asarray(x, np.float32))))
+
+    out = {f"model_{k}_mape": m(v) for k, v in per.items()}
+    # calibration window for the weighted combiner: day 1 telemetry
+    d1 = slice(0, BINS_PER_DAY)
+    w_out = combine({k: v[d1] for k, v in per.items()}, "inv_mape",
+                    reference=real[d1])
+    weights = w_out.weights
+    stack = np.stack([per[k] for k in sorted(per)])
+    wvec = np.array([weights[k] for k in sorted(per)])
+    out["meta_mean_mape"] = m(combine(per, "mean").combined)
+    out["meta_median_mape"] = m(combine(per, "median").combined)
+    out["meta_weighted_mape"] = m((wvec[:, None] * stack).sum(0))
+    out["weights"] = {k: round(v, 3) for k, v in weights.items()}
+    best_single = min(v for k, v in out.items()
+                      if k.startswith("model_") and k.endswith("_mape"))
+    out["meta_beats_worst_single"] = out["meta_weighted_mape"] < max(
+        v for k, v in out.items()
+        if k.startswith("model_") and k.endswith("_mape"))
+    out["best_single_mape"] = best_single
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful fraction, and peak bytes/device.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':7s} {'status':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>8s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofl%':>7s} {'GB/dev':>7s}")
+    rows = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c["status"] != "ok":
+            rows.append(f"{c['arch']:24s} {c['shape']:12s} {c['mesh']:7s} "
+                        f"{c['status']:8s} -- {c.get('reason', c.get('error', ''))[:60]}")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"{c['arch']:24s} {c['shape']:12s} {c['mesh']:7s} {'ok':8s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:8.4f} {r['dominant']:>10s} "
+            f"{r['useful_flops_fraction']:7.3f} "
+            f"{100*r['roofline_fraction']:7.3f} "
+            f"{c['memory']['peak_bytes_per_device']/1e9:7.2f}")
+    return "\n".join(rows)
+
+
+def summarize(cells: list[dict]) -> dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    dominants: dict[str, int] = {}
+    for c in ok:
+        d = c["roofline"]["dominant"]
+        dominants[d] = dominants.get(d, 0) + 1
+    worst = sorted(ok, key=lambda c: c["roofline"]["roofline_fraction"])[:3]
+    most_coll = sorted(ok, key=lambda c: -c["roofline"]["collective_s"])[:3]
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": len(skipped),
+        "cells_error": len(err),
+        "dominant_counts": dominants,
+        "worst_roofline": [
+            (c["arch"], c["shape"], c["mesh"],
+             c["roofline"]["roofline_fraction"]) for c in worst],
+        "most_collective_bound": [
+            (c["arch"], c["shape"], c["mesh"], c["roofline"]["collective_s"])
+            for c in most_coll],
+    }
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(table(cells))
+    print()
+    print(json.dumps(summarize(cells), indent=2))

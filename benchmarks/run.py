@@ -1,0 +1,107 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), then a
+human-readable summary per experiment.
+
+  E1  (Fig. 4/5)  reproduce FootPrinter + extend with perf/efficiency
+  E2  (Fig. 6)    self-calibration accuracy vs static simulation
+  NFR2 (§3.1)     7 days twinned under 1 hour
+  roofline        dry-run-derived roofline table (results/dryrun)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import e1_footprinter  # noqa: E402
+import m3sa_metamodel  # noqa: E402
+import e2_calibration  # noqa: E402
+import nfr2_speed  # noqa: E402
+import roofline  # noqa: E402
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+
+    e1 = e1_footprinter.run()
+    rows.append((
+        "e1_footprinter_reproduce",
+        e1["wall_seconds"] * 1e6,
+        f"fp_mape={e1['footprinter_mape']:.2f}%"
+        f";opendt_mape={e1['opendt_mape']:.2f}%"
+        f";paper=7.86%/5.13%"
+        f";mean_util={e1['mean_utilization']:.3f}"
+        f";best_eff={e1['best_efficiency_tflops_per_kwh']:.1f}TFLOPs/kWh",
+    ))
+
+    e2 = e2_calibration.run()
+    rows.append((
+        "e2_self_calibration",
+        e2["wall_seconds"] * 1e6,
+        f"uncal={e2['uncalibrated_mape']:.2f}%"
+        f";cal={e2['calibrated_mape']:.2f}%"
+        f";joint={e2['joint_calibrated_mape']:.2f}%"
+        f";paper=5.13%/4.39%"
+        f";nfr1_cal={e2['nfr1_calibrated']['compliance']:.2f}"
+        f";nfr1_unc={e2['nfr1_uncalibrated']['compliance']:.2f}",
+    ))
+
+    n2 = nfr2_speed.run()
+    rows.append((
+        "nfr2_twin_speed",
+        n2["closed_loop_wall_s"] * 1e6,
+        f"7days_in={n2['closed_loop_wall_s']:.1f}s"
+        f";paper=2760s;speedup={n2['speedup_vs_paper']:.0f}x"
+        f";des_days_per_s={n2['sim_days_per_wall_second']:.1f}",
+    ))
+    rows.append((
+        "calibration_grid",
+        n2["calibration_window_s"] * 1e6,
+        f"candidates_per_s={n2['calibration_candidates_per_s']:.0f}",
+    ))
+
+    m3 = m3sa_metamodel.run()
+    rows.append((
+        "m3sa_multi_model",
+        0.0,
+        f"opendc={m3['model_opendc_mape']:.2f}%"
+        f";linear={m3['model_linear_mape']:.2f}%"
+        f";weighted_meta={m3['meta_weighted_mape']:.2f}%"
+        f";weights={m3['weights']}",
+    ))
+
+    cells = roofline.load_cells()
+    summ = roofline.summarize(cells)
+    rows.append((
+        "dryrun_roofline",
+        0.0,
+        f"ok={summ['cells_ok']};skipped={summ['cells_skipped']}"
+        f";errors={summ['cells_error']}"
+        f";dominant={summ['dominant_counts']}",
+    ))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    print("\n=== E1 (paper Fig. 4/5) ===")
+    print(json.dumps(e1, indent=2))
+    print("\n=== E2 (paper Fig. 6) ===")
+    print(json.dumps({k: v for k, v in e2.items()
+                      if not k.startswith("per_window")}, indent=2))
+    print("\n=== Multi-model / Meta-Model (paper §2.2, M3SA) ===")
+    print(json.dumps(m3, indent=2))
+    print("\n=== NFR2 ===")
+    print(json.dumps(n2, indent=2))
+    print("\n=== Roofline (results/dryrun) ===")
+    print(roofline.table(cells))
+    print(json.dumps(summ, indent=2))
+
+
+if __name__ == "__main__":
+    main()

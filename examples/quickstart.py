@@ -1,0 +1,46 @@
+"""Quickstart: twin one day of datacenter operation and self-calibrate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import OrchestratorConfig, run_surf_experiment
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+
+def main() -> None:
+    # 1. A datacenter (SURF-SARA topology: 277 hosts x 16 cores @ 2.1 GHz)
+    dc = DatacenterConfig()
+
+    # 2. A workload trace (synthetic SURF-22; swap in your own Workload)
+    workload = make_surf22_like(SurfTraceSpec(days=1.0), dc)
+
+    # 3. Twin it, closed loop: telemetry -> simulate -> calibrate -> SLOs
+    result = run_surf_experiment(
+        workload, dc, t_bins=BINS_PER_DAY,
+        calibrate=True,
+        cfg=OrchestratorConfig(bins_per_window=36),   # 3 h windows
+    )
+
+    print(f"windows twinned      : {len(result.records)}")
+    print(f"overall MAPE         : {result.overall_mape:.2f}%")
+    for rep in result.slo_reports:
+        print(f"SLO {rep.slo.name:15s}: {rep.compliance:.1%} compliant "
+              f"-> {'MET' if rep.met else 'MISSED'}")
+    print(f"under-estimation     : {result.under_estimation_fraction:.1%} "
+          "of samples")
+    last = result.records[-1].params
+    print(f"calibrated power fit : P(u) = {last.p_idle:.1f} + "
+          f"({last.p_max:.1f} - {last.p_idle:.1f}) * (2u - u^{last.r:.2f})")
+    mean_util = float(np.mean(
+        [np.mean(np.asarray(r.prediction.utilization))
+         for r in result.records]))
+    print(f"mean utilization     : {mean_util:.1%}  "
+          f"({'under' if mean_util < 0.3 else 'well'}-utilized; "
+          "paper §3.3 insight)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""E1: reproduce the FootPrinter comparison and extend it (paper §3.3).
+
+    PYTHONPATH=src python examples/reproduce_footprinter.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+import e1_footprinter  # noqa: E402
+
+
+def main() -> None:
+    res = e1_footprinter.run()
+    print(json.dumps(res, indent=2))
+    print()
+    print(f"FootPrinter (hand-tuned, run once) MAPE : "
+          f"{res['footprinter_mape']:.2f}%   (paper: 7.86%)")
+    print(f"OpenDT continuous (uncalibrated)  MAPE : "
+          f"{res['opendt_mape']:.2f}%   (paper: 5.13%)")
+    print(f"-> OpenDT better by {res['improvement_pp']:.2f} pp; "
+          f"extension: best efficiency "
+          f"{res['best_efficiency_tflops_per_kwh']:.2f} TFLOPs/kWh at "
+          f"peak performance {res['peak_tflops_hour']:.1f} TFLOP/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+Hardware model (TPU v5e-class target, per chip):
+  peak bf16 compute   197 TFLOP/s
+  HBM bandwidth       819 GB/s
+  ICI                 ~50 GB/s per link.  Collectives ride the links of
+                      their mesh axis; we charge the conservative
+                      single-link rate (ring algorithms overlap both
+                      directions, so real deployments can do up to ~2x
+                      better — the relative comparisons are unaffected).
+
+Terms (seconds, per device — the roofline lower-bounds step latency):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = wire_bytes / ICI_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (one link charged)
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    wire_bytes: float
+    model_flops: float          # 6 * N(_active) * D, global
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (global) — remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: how close the step's *useful*
+        math runs to the hardware roofline if the bound is achieved."""
+        useful_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "model_flops_global": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def make_roofline(parsed: dict[str, Any], model_flops: float,
+                  chips: int) -> Roofline:
+    f = parsed["flops_per_device"]
+    b = parsed["bytes_per_device"]
+    w = parsed["collective_wire_bytes_per_device"]
+    return Roofline(
+        compute_s=f / PEAK_FLOPS,
+        memory_s=b / HBM_BW,
+        collective_s=w / ICI_BW,
+        flops=f, bytes=b, wire_bytes=w,
+        model_flops=model_flops, chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, batch: int, seq: int,
+                    train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode processes batch tokens."""
+    from repro.configs.base import active_param_count
+
+    n = active_param_count(cfg)
+    if shape_kind == "train":
+        d = batch * seq
+        return 6.0 * n * d
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token per sequence

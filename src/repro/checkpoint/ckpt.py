@@ -1,0 +1,107 @@
+"""Checkpointing: msgpack + zstd columnar blobs, atomic publish, restore.
+
+Saves the *whole job state*: model params, optimizer moments, data cursor,
+rng, and the digital twin's state (calibrated power parameters + window
+index) — after a restart the twin resumes calibrated, it does not relearn
+from scratch.  Writes are atomic (tmp + rename) and keep a bounded history
+so a crash mid-write can never destroy the latest good checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.mpz$")
+
+
+def _pack_tree(tree: Any) -> Any:
+    """Pytree -> msgpack-able structure (arrays become dicts)."""
+    def enc(x):
+        if isinstance(x, (jax.Array, np.ndarray)):
+            arr = np.asarray(x)
+            return {"__nd__": True, "d": arr.tobytes(),
+                    "t": str(arr.dtype), "s": list(arr.shape)}
+        if isinstance(x, (int, float, str, bool, type(None))):
+            return x
+        raise TypeError(f"unsupported leaf {type(x)}")
+
+    return jax.tree.map(enc, tree)
+
+
+def _unpack_tree(obj: Any) -> Any:
+    def dec(x):
+        if isinstance(x, dict) and x.get("__nd__"):
+            return np.frombuffer(x["d"], x["t"]).reshape(x["s"])
+        return x
+
+    return jax.tree.map(
+        dec, obj, is_leaf=lambda x: isinstance(x, dict) and x.get("__nd__"))
+
+
+def save(path_dir: str, step: int, state: Any, keep: int = 3) -> str:
+    os.makedirs(path_dir, exist_ok=True)
+    blob = zstandard.ZstdCompressor(level=3).compress(
+        msgpack.packb(_pack_tree(state), use_bin_type=True))
+    final = os.path.join(path_dir, f"ckpt_{step:08d}.mpz")
+    fd, tmp = tempfile.mkstemp(dir=path_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, final)                      # atomic publish
+    _gc(path_dir, keep)
+    return final
+
+
+def latest_step(path_dir: str) -> int | None:
+    if not os.path.isdir(path_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path_dir)
+             if (m := _CKPT_RE.search(f))]
+    return max(steps) if steps else None
+
+
+def restore(path_dir: str, step: int | None = None) -> tuple[int, Any]:
+    step = latest_step(path_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {path_dir}")
+    path = os.path.join(path_dir, f"ckpt_{step:08d}.mpz")
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(
+            zstandard.ZstdDecompressor().decompress(f.read()),
+            raw=False, strict_map_key=False)
+    return step, _unpack_tree(obj)
+
+
+def restore_as_jax(path_dir: str, like: Any, step: int | None = None
+                   ) -> tuple[int, Any]:
+    """Restore and cast/shard to match a template pytree (shapes + dtypes +
+    shardings) — the elastic-restart path re-shards here when the mesh
+    changed between runs."""
+    step, host = restore(path_dir, step)
+    flat_h, _ = jax.tree.flatten(host)
+    flat_l, tdef = jax.tree.flatten(like)
+    assert len(flat_h) == len(flat_l), "checkpoint/template mismatch"
+    out = []
+    for h, l in zip(flat_h, flat_l):
+        arr = jnp.asarray(np.asarray(h).astype(l.dtype))
+        if hasattr(l, "sharding") and l.sharding is not None:
+            arr = jax.device_put(arr, l.sharding)
+        out.append(arr)
+    return step, tdef.unflatten(out)
+
+
+def _gc(path_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1)) for f in os.listdir(path_dir)
+        if (m := _CKPT_RE.search(f)))
+    for s in steps[:-keep]:
+        os.unlink(os.path.join(path_dir, f"ckpt_{s:08d}.mpz"))

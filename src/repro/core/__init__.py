@@ -1,0 +1,49 @@
+"""OpenDT core: the paper's contribution as a composable JAX library.
+
+Continuous datacenter digital twinning (Fig. 1/2 of the paper):
+telemetry ingestion -> vectorized discrete-event simulation ->
+self-calibration -> SLO-aware, human-in-the-loop feedback.
+"""
+
+from repro.core.calibrate import (
+    CalibrationResult,
+    CalibrationSpec,
+    SelfCalibrator,
+    calibrate_window,
+    candidate_grid,
+)
+from repro.core.desim import (
+    Prediction,
+    SimOutput,
+    predict_metrics,
+    simulate,
+    simulate_utilization,
+)
+from repro.core.feedback import HITLGate, Proposal, ProposalKind
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig, WindowRecord
+from repro.core.power import (
+    POWER_MODELS,
+    PowerParams,
+    datacenter_power,
+    energy_kwh,
+    linear_power,
+    mape,
+    opendc_power,
+)
+from repro.core.slo import NFR1, SLO, BiasTracker, SLOMonitor
+from repro.core.telemetry import TelemetryStore, TelemetryWindow, clip_to_window
+from repro.core.twin import DigitalTwin, TraceGroundTruth, TwinRunResult, run_surf_experiment
+
+__all__ = [
+    "CalibrationResult", "CalibrationSpec", "SelfCalibrator",
+    "calibrate_window", "candidate_grid",
+    "Prediction", "SimOutput", "predict_metrics", "simulate",
+    "simulate_utilization",
+    "HITLGate", "Proposal", "ProposalKind",
+    "Orchestrator", "OrchestratorConfig", "WindowRecord",
+    "POWER_MODELS", "PowerParams", "datacenter_power", "energy_kwh",
+    "linear_power", "mape", "opendc_power",
+    "NFR1", "SLO", "BiasTracker", "SLOMonitor",
+    "TelemetryStore", "TelemetryWindow", "clip_to_window",
+    "DigitalTwin", "TraceGroundTruth", "TwinRunResult", "run_surf_experiment",
+]

@@ -1,0 +1,180 @@
+"""Self-Calibrator (paper §2.4, component G).
+
+The calibrator measures the difference between simulation-predicted power and
+actual telemetry over recent history, grid-searches the power-model parameter
+space, and ships the argmin-MAPE configuration to the Simulation Engine for
+the *next* window (pipelined: C0 calibrates S1, Fig. 3).
+
+Structural optimization over the paper's implementation (recorded in
+DESIGN.md §3): utilization is independent of the power-model parameters, so
+instead of re-running short simulations per candidate we re-evaluate the
+power map over a **cached utilization window** for all candidates at once —
+a ``[C, T, H]`` embarrassingly parallel grid evaluated either by the fused
+Pallas kernel (TPU target) or its jnp oracle (CPU / dry-run).
+
+Faithful mode (the paper): 1-D grid over the exponent ``r``.
+Beyond-paper mode: 3-D grid over ``(r, p_idle, p_max)`` plus iterative
+coordinate refinement ("zoom"), see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.power import PowerParams
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationSpec:
+    """Grid-search configuration.
+
+    The paper's Self-Calibrator sweeps the calibration exponent ``r`` only.
+    ``mode='joint'`` additionally sweeps idle/max power — the beyond-paper
+    extension evaluated in EXPERIMENTS.md.
+    """
+
+    mode: Literal["r_only", "joint"] = "r_only"
+    r_lo: float = 1.0
+    r_hi: float = 6.0
+    r_points: int = 64
+    # joint mode: multiplicative sweeps around the configured idle/max power
+    scale_lo: float = 0.85
+    scale_hi: float = 1.15
+    scale_points: int = 12
+    refine_iters: int = 0          # 0 = pure grid (faithful); >0 = zoom refine
+    refine_shrink: float = 0.25
+
+
+def candidate_grid(spec: CalibrationSpec, base: PowerParams) -> PowerParams:
+    """Build the candidate parameter grid as a batched PowerParams [C]."""
+    r = np.linspace(spec.r_lo, spec.r_hi, spec.r_points, dtype=np.float32)
+    if spec.mode == "r_only":
+        c = r.shape[0]
+        return PowerParams(
+            p_idle=jnp.full((c,), float(np.asarray(base.p_idle).mean()), jnp.float32),
+            p_max=jnp.full((c,), float(np.asarray(base.p_max).mean()), jnp.float32),
+            r=jnp.asarray(r),
+        )
+    s = np.linspace(spec.scale_lo, spec.scale_hi, spec.scale_points, dtype=np.float32)
+    rr, si, sm = np.meshgrid(r, s, s, indexing="ij")
+    return PowerParams(
+        p_idle=jnp.asarray(si.ravel() * float(np.asarray(base.p_idle).mean())),
+        p_max=jnp.asarray(sm.ravel() * float(np.asarray(base.p_max).mean())),
+        r=jnp.asarray(rr.ravel()),
+    )
+
+
+def evaluate_candidates(
+    u_th: Array,
+    real_power: Array,
+    cand: PowerParams,
+    backend: Backend = "xla",
+) -> Array:
+    """MAPE [%] of every candidate over the window.  ``[C]``.
+
+    Dispatches to the fused Pallas grid kernel (TPU) or the jnp oracle.
+    """
+    return kops.calib_mape_grid(
+        u_th, real_power, cand.p_idle, cand.p_max, cand.r, backend=backend
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    params: PowerParams          # scalar best parameters
+    mape: float                  # best candidate's window MAPE [%]
+    evaluated: int               # number of candidates evaluated
+    mapes: np.ndarray            # [C] all candidate MAPEs (diagnostics)
+
+
+def calibrate_window(
+    u_th: Array,
+    real_power: Array,
+    spec: CalibrationSpec,
+    base: PowerParams,
+    backend: Backend = "xla",
+) -> CalibrationResult:
+    """One calibration cycle (one C-event in Fig. 3)."""
+    cand = candidate_grid(spec, base)
+    mapes = evaluate_candidates(u_th, real_power, cand, backend=backend)
+    mapes_np = np.asarray(mapes)
+    total = int(mapes_np.shape[0])
+    best = int(np.argmin(mapes_np))
+    best_params = PowerParams(
+        p_idle=float(np.asarray(cand.p_idle)[best]),
+        p_max=float(np.asarray(cand.p_max)[best]),
+        r=float(np.asarray(cand.r)[best]),
+    )
+    best_mape = float(mapes_np[best])
+
+    # Beyond-paper: iterative zoom refinement around the incumbent.
+    cur = spec
+    for _ in range(spec.refine_iters):
+        span_r = (cur.r_hi - cur.r_lo) * spec.refine_shrink
+        span_s = (cur.scale_hi - cur.scale_lo) * spec.refine_shrink
+        cur = dataclasses.replace(
+            cur,
+            r_lo=max(1.0, best_params.r - span_r / 2),
+            r_hi=best_params.r + span_r / 2,
+            scale_lo=1.0 - span_s / 2,
+            scale_hi=1.0 + span_s / 2,
+        )
+        cand = candidate_grid(cur, best_params)
+        m = np.asarray(evaluate_candidates(u_th, real_power, cand, backend=backend))
+        total += int(m.shape[0])
+        b = int(np.argmin(m))
+        if float(m[b]) < best_mape:
+            best_mape = float(m[b])
+            best_params = PowerParams(
+                p_idle=float(np.asarray(cand.p_idle)[b]),
+                p_max=float(np.asarray(cand.p_max)[b]),
+                r=float(np.asarray(cand.r)[b]),
+            )
+    return CalibrationResult(best_params, best_mape, total, mapes_np)
+
+
+class SelfCalibrator:
+    """Pipelined calibrator: results from window k feed simulation of k+1.
+
+    Mimics the paper's two-thread timeline (Fig. 3) deterministically: the
+    orchestrator calls :meth:`observe` when window-k telemetry lands and
+    :meth:`params_for_next` when the engine starts window k+1.
+    """
+
+    def __init__(self, spec: CalibrationSpec, base: PowerParams,
+                 backend: Backend = "xla", history_windows: int = 4):
+        self.spec = spec
+        self.base = base
+        self.backend = backend
+        self.history_windows = history_windows
+        self._pending = base       # result of the latest completed cycle
+        self._u: list[np.ndarray] = []
+        self._p: list[np.ndarray] = []
+        self.history: list[CalibrationResult] = []
+
+    def observe(self, u_th: Array, real_power: Array) -> CalibrationResult:
+        """Ingest window telemetry, run one calibration cycle."""
+        self._u.append(np.asarray(u_th))
+        self._p.append(np.asarray(real_power))
+        self._u = self._u[-self.history_windows:]
+        self._p = self._p[-self.history_windows:]
+        u = jnp.asarray(np.concatenate(self._u, axis=0))
+        p = jnp.asarray(np.concatenate(self._p, axis=0))
+        res = calibrate_window(u, p, self.spec, self.base, backend=self.backend)
+        self.history.append(res)
+        self._pending = res.params
+        return res
+
+    def params_for_next(self) -> PowerParams:
+        """Parameters the Simulation Engine should use for the next window."""
+        return self._pending

@@ -1,0 +1,218 @@
+"""Vectorized discrete-event datacenter simulation.
+
+OpenDC — the simulator at the paper's core (FR2) — is an event-queue DES.
+Event queues are pointer-chasing and data-dependent: hostile to TPUs and to
+XLA.  Since the paper only ever *reads out* the simulation at the
+industry-standard 5-minute granularity (§3.3), we adapt the simulator to the
+hardware instead of porting the algorithm: a **dense, fixed-timestep,
+time-marching simulation** whose state is tensors over ``[hosts]`` and
+``[jobs]``, advanced by ``jax.lax.scan`` over 5-minute bins.
+
+Event-driven semantics preserved at bin granularity:
+  * job completion releases cores at the bin where ``start + duration`` falls;
+  * FCFS placement with a bounded ``fori_loop`` of first-fit attempts per bin
+    (strict head-of-line blocking, like OpenDC's default scheduler);
+  * per-job piecewise utilization profiles (OpenDC "fragments").
+
+Everything is one jitted program — NFR2's "7 days in under an hour" becomes
+"7 days in well under a second" on a single CPU core (see benchmarks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.power import PowerParams, datacenter_power, energy_kwh
+from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOutput:
+    """Dense simulation read-out at 5-minute granularity.
+
+    Attributes:
+      u_th: ``[T, H]`` per-host utilization in [0, 1].
+      queue_len: ``[T]`` jobs submitted but not yet started.
+      running: ``[T]`` jobs running.
+      job_start: ``[J]`` assigned start bin (-1 if never started).
+      job_host: ``[J]`` assigned host (-1 if never started).
+    """
+
+    u_th: Array
+    queue_len: Array
+    running: Array
+    job_start: Array
+    job_host: Array
+
+
+jax.tree_util.register_pytree_node(
+    SimOutput,
+    lambda s: ((s.u_th, s.queue_len, s.running, s.job_start, s.job_host), None),
+    lambda _, c: SimOutput(*c),
+)
+
+
+@functools.partial(jax.jit, static_argnames=("num_hosts", "cores_per_host",
+                                             "t_bins", "max_starts_per_bin"))
+def simulate_utilization(
+    w: Workload,
+    *,
+    num_hosts: int,
+    cores_per_host: int,
+    t_bins: int,
+    max_starts_per_bin: int = 64,
+) -> SimOutput:
+    """Run the vectorized DES and return the utilization field.
+
+    Placement (the event-driven part) is a bounded first-fit loop inside the
+    scan body; utilization accumulation is a segment-sum scatter over host
+    assignments.  Utilization is *independent of power-model parameters* —
+    the structural fact the Self-Calibrator exploits (see calibrate.py).
+    """
+    j = w.num_jobs
+    u_phases = w.num_phases
+
+    init = dict(
+        free=jnp.full((num_hosts,), cores_per_host, jnp.int32),
+        job_host=jnp.full((j,), -1, jnp.int32),
+        job_start=jnp.full((j,), -1, jnp.int32),
+        next_job=jnp.asarray(0, jnp.int32),
+    )
+
+    submit = w.submit_bin
+    dur = jnp.maximum(w.duration_bins, 1)
+    cores = w.cores
+    valid = w.valid
+
+    def place_one(_, carry):
+        free, job_host, job_start, next_job, blocked, t = carry
+        jid = jnp.minimum(next_job, j - 1)
+        eligible = (
+            (next_job < j)
+            & (submit[jid] <= t)
+            & valid[jid]
+            & jnp.logical_not(blocked)
+        )
+        need = cores[jid]
+        fits = free >= need
+        any_fit = jnp.any(fits)
+        # worst-fit among fitting hosts (most free cores) — spreads load like
+        # OpenDC's default mem/core-aware filter+weigher pipeline.
+        host = jnp.argmax(jnp.where(fits, free, -1))
+        do_place = eligible & any_fit
+        free = jnp.where(
+            do_place, free.at[host].add(-need), free
+        )
+        job_host = jnp.where(do_place, job_host.at[jid].set(host), job_host)
+        job_start = jnp.where(do_place, job_start.at[jid].set(t), job_start)
+        next_job = next_job + do_place.astype(jnp.int32)
+        # strict FCFS: if the head job could not be placed, stop this bin.
+        blocked = blocked | (eligible & jnp.logical_not(any_fit))
+        return free, job_host, job_start, next_job, blocked, t
+
+    def step(state, t):
+        free, job_host, job_start, next_job = (
+            state["free"], state["job_host"], state["job_start"], state["next_job"],
+        )
+        # 1) completions: release cores for jobs ending at bin t.
+        started = job_start >= 0
+        ends = started & (job_start + dur == t)
+        seg = jnp.where(ends, job_host, num_hosts)  # sentinel bucket
+        released = jax.ops.segment_sum(
+            jnp.where(ends, cores, 0), seg, num_segments=num_hosts + 1
+        )[:num_hosts]
+        free = free + released.astype(jnp.int32)
+
+        # 2) FCFS placement, bounded attempts.
+        free, job_host, job_start, next_job, _, _ = jax.lax.fori_loop(
+            0, max_starts_per_bin, place_one,
+            (free, job_host, job_start, next_job, jnp.asarray(False), t),
+        )
+
+        # 3) utilization accumulation over running jobs.
+        started = job_start >= 0
+        running = started & (t >= job_start) & (t < job_start + dur)
+        phase = jnp.clip(
+            ((t - job_start) * u_phases) // jnp.maximum(dur, 1), 0, u_phases - 1
+        )
+        u_job = jnp.take_along_axis(
+            w.util_levels, phase[:, None], axis=1
+        )[:, 0]
+        busy = jnp.where(running, u_job * cores.astype(u_job.dtype), 0.0)
+        seg = jnp.where(running, job_host, num_hosts)
+        host_busy = jax.ops.segment_sum(busy, seg, num_segments=num_hosts + 1)[:num_hosts]
+        u_h = host_busy / float(cores_per_host)
+
+        queued = jnp.sum((submit <= t) & valid & jnp.logical_not(started))
+        out_t = (u_h, queued.astype(jnp.int32), jnp.sum(running).astype(jnp.int32))
+        new_state = dict(free=free, job_host=job_host, job_start=job_start,
+                         next_job=next_job)
+        return new_state, out_t
+
+    state, (u_th, queue_len, running) = jax.lax.scan(
+        step, init, jnp.arange(t_bins, dtype=jnp.int32)
+    )
+    return SimOutput(
+        u_th=u_th,
+        queue_len=queue_len,
+        running=running,
+        job_start=state["job_start"],
+        job_host=state["job_host"],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """Multi-metric prediction for a window (NFR3: >=2 perf + >=2 sust.)."""
+
+    power_w: Array        # [T] total power draw (sustainability #1)
+    energy_kwh: Array     # [T] per-bin energy (sustainability #2)
+    tflops: Array         # [T] achieved TFLOP/s (performance #1)
+    utilization: Array    # [T] mean datacenter utilization (performance #2)
+    efficiency: Array     # [T] TFLOPs per kWh (paper Fig. 5C)
+
+
+jax.tree_util.register_pytree_node(
+    Prediction,
+    lambda p: ((p.power_w, p.energy_kwh, p.tflops, p.utilization, p.efficiency), None),
+    lambda _, c: Prediction(*c),
+)
+
+
+def predict_metrics(
+    u_th: Array,
+    params: PowerParams,
+    dc: DatacenterConfig,
+    model: str = "opendc",
+) -> Prediction:
+    """Map a utilization field to the paper's metric set (Fig. 5A/B/C)."""
+    power = datacenter_power(u_th, params, model=model)
+    e = energy_kwh(power, SAMPLE_SECONDS)
+    util = jnp.mean(u_th, axis=-1)
+    tflops = util * dc.peak_tflops
+    eff = tflops / jnp.maximum(e, 1e-9)
+    return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
+                      utilization=util, efficiency=eff)
+
+
+def simulate(
+    w: Workload,
+    dc: DatacenterConfig,
+    t_bins: int,
+    params: PowerParams = PowerParams(),
+    model: str = "opendc",
+) -> tuple[SimOutput, Prediction]:
+    """One-call trace-in, metrics-out simulation (FR2)."""
+    sim = simulate_utilization(
+        w,
+        num_hosts=dc.num_hosts,
+        cores_per_host=dc.cores_per_host,
+        t_bins=t_bins,
+    )
+    return sim, predict_metrics(sim.u_th, params, dc, model=model)

@@ -1,0 +1,70 @@
+"""Multi-model / Meta-Model simulation (paper §2.2, M3SA [28]).
+
+OpenDT "enables high-complexity techniques that combine individual
+simulations, e.g., multi-model simulation that combines the results of
+multiple heterogeneous models, simulated independently, to improve accuracy
+and quantify fine-grained differences".  This module runs the OpenDC model
+zoo (opendc / linear / sqrt / cubic) over the same utilization field and
+combines their power predictions.
+
+Combiners: mean, median, and inverse-MAPE weighting (models that tracked
+recent telemetry better get more weight — the meta-model alleviates
+individual model biases [28]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.power import POWER_MODELS, PowerParams, datacenter_power, mape
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiModelOutput:
+    per_model: dict[str, np.ndarray]   # model name -> [T] power
+    combined: np.ndarray               # [T] meta-model power
+    weights: dict[str, float]
+
+
+def run_multi_model(
+    u_th: Array,
+    params: PowerParams,
+    models: tuple[str, ...] = ("opendc", "linear", "sqrt", "cubic"),
+) -> dict[str, np.ndarray]:
+    return {
+        m: np.asarray(datacenter_power(u_th, params, model=m)) for m in models
+    }
+
+
+def combine(
+    per_model: dict[str, np.ndarray],
+    how: str = "mean",
+    reference: np.ndarray | None = None,
+) -> MultiModelOutput:
+    names = sorted(per_model)
+    stack = np.stack([per_model[n] for n in names])    # [M, T]
+    if how == "mean":
+        weights = {n: 1.0 / len(names) for n in names}
+        comb = stack.mean(axis=0)
+    elif how == "median":
+        weights = {n: float("nan") for n in names}
+        comb = np.median(stack, axis=0)
+    elif how == "inv_mape":
+        if reference is None:
+            raise ValueError("inv_mape weighting needs reference telemetry")
+        errs = np.array([
+            float(mape(jnp.asarray(reference), jnp.asarray(per_model[n])))
+            for n in names
+        ])
+        w = 1.0 / np.maximum(errs, 1e-6)
+        w = w / w.sum()
+        weights = dict(zip(names, w.tolist()))
+        comb = (w[:, None] * stack).sum(axis=0)
+    else:
+        raise ValueError(f"unknown combiner {how!r}")
+    return MultiModelOutput(per_model=per_model, combined=comb, weights=weights)

@@ -1,0 +1,215 @@
+"""The Orchestrator (paper §2.3, component C).
+
+Central authority for the windowed twinning cycle: it owns the lock-step,
+synchronized schedule of windows of operation, feeds pre-processed telemetry
+into the simulation engine, runs the Self-Calibrator *pipelined* with the
+engine (C_k calibrates S_{k+1}, Fig. 3), records run metadata, and publishes
+predictions + proposals.
+
+It deliberately does NOT manage its own resource allocation (paper §2.3's
+design choice): execution scheduling stays with the host runtime; the
+orchestrator validates the digital-twinning loop itself.
+
+Acceleration factor (paper §2.3): ratio between simulated and wall time.
+  * factor=1   — live twinning: the loop sleeps out each window's wall time.
+  * factor>1   — fixed acceleration.
+  * factor=None — maximum acceleration (as fast as compute allows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import CalibrationSpec, SelfCalibrator
+from repro.core.desim import Prediction, SimOutput, predict_metrics, simulate_utilization
+from repro.core.feedback import HITLGate, propose_from_state
+from repro.core.power import PowerParams, mape
+from repro.core.slo import NFR1, BiasTracker, SLOMonitor
+from repro.core.telemetry import TelemetryStore, TelemetryWindow
+from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    bins_per_window: int = 36            # 3 h windows at 5-min sampling
+    calibration: CalibrationSpec = CalibrationSpec()
+    calibrate: bool = True               # E2 ablation switch
+    history_windows: int = 4             # telemetry history per calibration
+    acceleration: float | None = None    # None = max acceleration (paper mode 3)
+    power_cap_w: float | None = None
+    power_model: str = "opendc"
+    kernel_backend: str = "xla"          # "pallas" on TPU deployments
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    """Run metadata the orchestrator records per window (paper §2.3:
+    'which outputs belong together')."""
+
+    window: int
+    started_at: float
+    sim_seconds: float
+    calib_seconds: float
+    params: PowerParams
+    prediction: Prediction
+    mape: float | None = None        # filled when telemetry lands
+    proposals: int = 0
+
+
+class Orchestrator:
+    """Drives the closed loop over a trace-driven physical twin.
+
+    The physical twin is abstracted as the TelemetryStore producer —
+    experiments push synthesized ground truth; the live-training example
+    pushes real measurements from the training run.
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        dc: DatacenterConfig,
+        t_bins: int,
+        cfg: OrchestratorConfig = OrchestratorConfig(),
+        base_params: PowerParams = PowerParams(),
+        gate: HITLGate | None = None,
+    ):
+        self.workload = workload
+        self.dc = dc
+        self.t_bins = int(t_bins)
+        self.cfg = cfg
+        self.base_params = base_params
+        self.store = TelemetryStore(cfg.bins_per_window)
+        self.gate = gate or HITLGate()
+        self.monitor = SLOMonitor([NFR1])
+        self.bias = BiasTracker()
+        self.records: list[WindowRecord] = []
+        self.calibrator = SelfCalibrator(
+            cfg.calibration, base_params, backend=cfg.kernel_backend,
+            history_windows=cfg.history_windows,
+        )
+        self._sim: SimOutput | None = None
+
+    # -- simulation engine (component H) ------------------------------------
+    def _ensure_sim(self) -> SimOutput:
+        """Trace-driven utilization simulation for the full horizon.
+
+        Deterministic and power-parameter independent, so it is computed once
+        and windows read slices — the DES itself re-runs only when the
+        workload or topology changes (what-if analysis does exactly that).
+        """
+        if self._sim is None:
+            self._sim = simulate_utilization(
+                self.workload,
+                num_hosts=self.dc.num_hosts,
+                cores_per_host=self.dc.cores_per_host,
+                t_bins=self.t_bins,
+            )
+        return self._sim
+
+    def invalidate(self) -> None:
+        """Drop the cached DES state (topology/workload changed)."""
+        self._sim = None
+
+    @property
+    def num_windows(self) -> int:
+        return self.t_bins // self.cfg.bins_per_window
+
+    def window_slice(self, window: int) -> slice:
+        w = self.cfg.bins_per_window
+        return slice(window * w, (window + 1) * w)
+
+    # -- one window of operation --------------------------------------------
+    def run_window(self, window: int) -> WindowRecord:
+        """Execute one window: predict (S_k) with params from C_{k-1},
+        then — when this window's telemetry has landed — calibrate (C_k)
+        for S_{k+1} and score the prediction."""
+        t_start = time.time()
+        sim = self._ensure_sim()
+        sl = self.window_slice(window)
+
+        # S_k: predict this window using the *pipelined* parameters.
+        params = (self.calibrator.params_for_next()
+                  if self.cfg.calibrate else self.base_params)
+        t0 = time.time()
+        pred = predict_metrics(
+            sim.u_th[sl], params, self.dc, model=self.cfg.power_model
+        )
+        pred.power_w.block_until_ready()
+        sim_seconds = time.time() - t0
+
+        rec = WindowRecord(
+            window=window, started_at=t_start, sim_seconds=sim_seconds,
+            calib_seconds=0.0, params=params, prediction=pred,
+        )
+
+        # Telemetry for this window (produced asynchronously by the physical
+        # twin; in-loop experiments ingest it before calling run_window).
+        tw = self.store.get(window)
+        if tw is not None:
+            rec.mape = float(mape(jnp.asarray(tw.power_w, dtype=jnp.float32),
+                                  pred.power_w))
+            self.monitor.observe("mape", [rec.mape])
+            self.bias.observe(tw.power_w, np.asarray(pred.power_w))
+
+            # C_k: calibrate on observed history -> parameters for S_{k+1}.
+            if self.cfg.calibrate:
+                t0 = time.time()
+                hist = self.store.history(window, self.cfg.history_windows)
+                u = np.concatenate([h.u_th for h in hist], axis=0)
+                p = np.concatenate([h.power_w for h in hist], axis=0)
+                # the calibrator keeps its own history; feed only the newest
+                self.calibrator.observe(tw.u_th, tw.power_w)
+                rec.calib_seconds = time.time() - t0
+                del u, p  # (history is assembled inside the calibrator)
+
+            # SLO-aware proposals through the HITL gate.
+            props = propose_from_state(
+                window,
+                mape=rec.mape,
+                mean_util=float(np.mean(tw.u_th)),
+                queue_len=float(np.mean(np.asarray(sim.queue_len[sl]))),
+                power_w=float(np.mean(np.asarray(pred.power_w))),
+                power_cap_w=self.cfg.power_cap_w,
+            )
+            for p_ in props:
+                self.gate.submit(p_)
+            rec.proposals = len(props)
+
+        self.records.append(rec)
+
+        # acceleration factor: live mode sleeps out the window's wall time.
+        if self.cfg.acceleration:
+            wall = self.cfg.bins_per_window * SAMPLE_SECONDS / self.cfg.acceleration
+            spent = time.time() - t_start
+            if wall > spent:
+                time.sleep(min(wall - spent, 1.0))  # capped for tests
+        return rec
+
+    def run(self, num_windows: int | None = None) -> list[WindowRecord]:
+        n = num_windows if num_windows is not None else self.num_windows
+        for w in range(n):
+            self.run_window(w)
+        return self.records
+
+    # -- results -------------------------------------------------------------
+    def overall_mape(self) -> float:
+        """MAPE over all scored bins (concatenated windows)."""
+        real, simp = [], []
+        for rec in self.records:
+            tw = self.store.get(rec.window)
+            if tw is None:
+                continue
+            real.append(tw.power_w)
+            simp.append(np.asarray(rec.prediction.power_w, np.float64))
+        if not real:
+            return float("nan")
+        return float(mape(jnp.asarray(np.concatenate(real)),
+                          jnp.asarray(np.concatenate(simp))))
+
+    def per_window_mape(self) -> np.ndarray:
+        return np.array([r.mape if r.mape is not None else np.nan
+                         for r in self.records])

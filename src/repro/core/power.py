@@ -1,0 +1,131 @@
+"""Power models for datacenter hosts.
+
+The paper (§3.2) adopts the OpenDC analytical CPU power formula
+
+    P(u) = P_idle + (P_max - P_idle) * (2u - u^r)
+
+where ``u`` is CPU utilization in [0, 1], ``P_idle``/``P_max`` are the host's
+idle and maximum power draw, and ``r`` is the *calibration parameter* tuned by
+the Self-Calibrator (§2.4).  The FootPrinter baseline [30] uses the linear
+special case obtained at r = 1 (P = P_idle + (P_max - P_idle) * u).
+
+All models are pure functions over dense utilization tensors so they can be
+vmapped over calibration candidates and pallas-tiled over (time, host) blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerParams:
+    """Parameters of the OpenDC analytical power model.
+
+    Each field is a scalar (shared across hosts) or a ``[H]`` vector
+    (per-host).  The calibrator treats ``r`` (and, beyond the paper,
+    ``p_idle``/``p_max``) as free parameters.
+    """
+
+    p_idle: Array | float = 70.0   # W, idle draw per host
+    p_max: Array | float = 350.0   # W, full-load draw per host
+    r: Array | float = 2.0         # calibration exponent (paper §3.2)
+
+    def tree_flatten(self):  # pragma: no cover - convenience
+        return (self.p_idle, self.p_max, self.r), None
+
+
+jax.tree_util.register_pytree_node(
+    PowerParams,
+    lambda p: ((p.p_idle, p.p_max, p.r), None),
+    lambda _, c: PowerParams(*c),
+)
+
+
+def opendc_power(u: Array, params: PowerParams) -> Array:
+    """OpenDC analytical model: P(u) = P_idle + (P_max - P_idle)(2u - u^r).
+
+    ``u`` may have any shape; params broadcast against the trailing host dim.
+    Utilization is clipped to [0, 1] — the physical twin can report transient
+    >100 % samples (SMT burst); the model domain is the unit interval.
+    """
+    u = jnp.clip(u, 0.0, 1.0)
+    p_idle = jnp.asarray(params.p_idle, u.dtype)
+    p_max = jnp.asarray(params.p_max, u.dtype)
+    r = jnp.asarray(params.r, u.dtype)
+    # u**r with u==0 and fractional r is fine (0**r = 0 for r>0); guard r<=0.
+    shape = 2.0 * u - jnp.power(u, r)
+    return p_idle + (p_max - p_idle) * shape
+
+
+def linear_power(u: Array, params: PowerParams) -> Array:
+    """FootPrinter-style linear model [30]: the r = 1 special case."""
+    u = jnp.clip(u, 0.0, 1.0)
+    p_idle = jnp.asarray(params.p_idle, u.dtype)
+    p_max = jnp.asarray(params.p_max, u.dtype)
+    return p_idle + (p_max - p_idle) * u
+
+
+def sqrt_power(u: Array, params: PowerParams) -> Array:
+    """Square-root model (OpenDC model zoo; used by the meta-model ensemble)."""
+    u = jnp.clip(u, 0.0, 1.0)
+    p_idle = jnp.asarray(params.p_idle, u.dtype)
+    p_max = jnp.asarray(params.p_max, u.dtype)
+    return p_idle + (p_max - p_idle) * jnp.sqrt(u)
+
+
+def cubic_power(u: Array, params: PowerParams) -> Array:
+    """Cubic model (OpenDC model zoo; used by the meta-model ensemble)."""
+    u = jnp.clip(u, 0.0, 1.0)
+    p_idle = jnp.asarray(params.p_idle, u.dtype)
+    p_max = jnp.asarray(params.p_max, u.dtype)
+    return p_idle + (p_max - p_idle) * u**3
+
+
+PowerModelFn = Callable[[Array, PowerParams], Array]
+
+POWER_MODELS: dict[str, PowerModelFn] = {
+    "opendc": opendc_power,
+    "linear": linear_power,
+    "sqrt": sqrt_power,
+    "cubic": cubic_power,
+}
+
+
+def datacenter_power(u_th: Array, params: PowerParams,
+                     model: str = "opendc",
+                     online_mask: Array | None = None) -> Array:
+    """Aggregate datacenter power trace.
+
+    Args:
+      u_th: ``[T, H]`` per-host utilization.
+      params: power model parameters (scalar or per-host).
+      model: key into :data:`POWER_MODELS`.
+      online_mask: optional ``[T, H]`` or ``[H]`` 0/1 mask of powered hosts
+        (offline hosts draw nothing — availability events).
+
+    Returns:
+      ``[T]`` total power draw in watts.
+    """
+    p = POWER_MODELS[model](u_th, params)
+    if online_mask is not None:
+        p = p * online_mask
+    return jnp.sum(p, axis=-1)
+
+
+def energy_kwh(power_w: Array, dt_seconds: float) -> Array:
+    """Integrate a power trace [T] (W) into per-sample energy (kWh)."""
+    return power_w * (dt_seconds / 3600.0) / 1000.0
+
+
+def mape(real: Array, sim: Array, eps: float = 1e-9) -> Array:
+    """Mean Absolute Percentage Error, % (paper §3.2)."""
+    real = jnp.asarray(real)
+    sim = jnp.asarray(sim)
+    return jnp.mean(jnp.abs((real - sim) / (real + eps))) * 100.0

@@ -1,0 +1,99 @@
+"""SLO definitions and monitors (SLO-aware simulation + NFR checks).
+
+NFR1 (paper §2.1): prediction error (MAPE) must stay below 10 % for at least
+90 % of the operational time.  The monitor tracks the per-window MAPE stream
+and the under/over-estimation bias the paper analyses in Fig. 6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """A service-level objective over a telemetry-derived series."""
+
+    name: str
+    metric: str                  # e.g. "mape", "power_w", "queue_len"
+    threshold: float
+    comparison: str = "lt"       # metric must be: lt | le | gt | ge threshold
+    min_compliance: float = 0.90 # fraction of time the comparison must hold
+
+    def holds(self, value: float) -> bool:
+        return {
+            "lt": value < self.threshold,
+            "le": value <= self.threshold,
+            "gt": value > self.threshold,
+            "ge": value >= self.threshold,
+        }[self.comparison]
+
+
+#: NFR1 exactly as stated in the paper.
+NFR1 = SLO(name="NFR1-accuracy", metric="mape", threshold=10.0,
+           comparison="lt", min_compliance=0.90)
+
+
+@dataclasses.dataclass
+class SLOReport:
+    slo: SLO
+    samples: int
+    compliant: int
+
+    @property
+    def compliance(self) -> float:
+        return self.compliant / self.samples if self.samples else 1.0
+
+    @property
+    def met(self) -> bool:
+        return self.compliance >= self.slo.min_compliance
+
+
+class SLOMonitor:
+    """Streams per-sample metric values against a set of SLOs."""
+
+    def __init__(self, slos: list[SLO]):
+        self.slos = slos
+        self._counts = {s.name: [0, 0] for s in slos}  # [samples, compliant]
+
+    def observe(self, metric: str, values: np.ndarray | list[float]) -> None:
+        arr = np.atleast_1d(np.asarray(values, np.float64))
+        for s in self.slos:
+            if s.metric != metric:
+                continue
+            c = self._counts[s.name]
+            c[0] += arr.size
+            c[1] += int(sum(s.holds(float(v)) for v in arr))
+
+    def report(self) -> list[SLOReport]:
+        return [
+            SLOReport(s, *self._counts[s.name]) for s in self.slos
+        ]
+
+
+@dataclasses.dataclass
+class BiasTracker:
+    """Under/over-estimation bias of the predictive model (paper Fig. 6).
+
+    Under-estimation (sim < real) risks under-provisioning; over-estimation
+    wastes energy (paper §3.4, SPEC RG Cloud framing [13]).
+    """
+
+    under: int = 0
+    over: int = 0
+
+    def observe(self, real: np.ndarray, sim: np.ndarray) -> None:
+        real = np.asarray(real)
+        sim = np.asarray(sim)
+        self.under += int(np.sum(sim < real))
+        self.over += int(np.sum(sim >= real))
+
+    @property
+    def samples(self) -> int:
+        return self.under + self.over
+
+    @property
+    def under_fraction(self) -> float:
+        return self.under / self.samples if self.samples else 0.0

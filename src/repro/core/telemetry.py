@@ -1,0 +1,159 @@
+"""Telemetry ingestion and the data platform (paper components B & D).
+
+The paper's prototype moves telemetry over Kafka and parks it in a
+Parquet-on-shared-FS data platform.  In this single-program JAX runtime the
+*semantics* that matter are kept (FR1):
+
+  * telemetry arrives **asynchronously** and is **windowed** — records are
+    clipped to the window of operation before the simulator sees them;
+  * the store is **columnar** and persistent (zstd-compressed msgpack
+    columns — same role Parquet played in the prototype);
+  * consumers (simulator, calibrator, UI) read *consistent snapshots* keyed
+    by window index, never a half-written window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import threading
+from typing import Iterable
+
+import msgpack
+import numpy as np
+import zstandard
+
+from repro.traces.schema import SAMPLE_SECONDS
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryWindow:
+    """One window of operation's worth of physical-twin telemetry."""
+
+    window: int               # window index (lock-step schedule)
+    t0_bin: int               # first 5-min bin covered
+    u_th: np.ndarray          # [Tw, H] per-host utilization
+    power_w: np.ndarray       # [Tw] measured total power draw
+    extras: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def bins(self) -> int:
+        return int(self.power_w.shape[0])
+
+
+def clip_to_window(window: int, bins_per_window: int, t0_bin: int,
+                   u_th: np.ndarray, power_w: np.ndarray,
+                   **extras: np.ndarray) -> TelemetryWindow:
+    """Pre-processing step: clip raw records to the window of operation.
+
+    Telemetry "does not arrive all at once" (paper §2.3) — producers may
+    deliver partial or overflowing slices; everything outside
+    ``[window*W, (window+1)*W)`` is dropped, gaps are forward-filled.
+    """
+    w0 = window * bins_per_window
+    w1 = w0 + bins_per_window
+    lo = max(w0 - t0_bin, 0)
+    hi = max(min(w1 - t0_bin, power_w.shape[0]), lo)
+    u = u_th[lo:hi]
+    p = power_w[lo:hi]
+    if p.shape[0] < bins_per_window:  # forward-fill missing tail
+        pad = bins_per_window - p.shape[0]
+        if p.shape[0] == 0:
+            u = np.zeros((bins_per_window,) + u_th.shape[1:], u_th.dtype)
+            p = np.zeros((bins_per_window,), power_w.dtype)
+        else:
+            u = np.concatenate([u, np.repeat(u[-1:], pad, axis=0)])
+            p = np.concatenate([p, np.repeat(p[-1:], pad)])
+    ex = {k: v[lo:hi] for k, v in extras.items()}
+    return TelemetryWindow(window=window, t0_bin=w0, u_th=u, power_w=p, extras=ex)
+
+
+class TelemetryStore:
+    """Columnar, windowed, thread-safe telemetry store.
+
+    Append-only per window; readers get immutable snapshots.  ``flush`` and
+    ``load`` persist columns as zstd(msgpack) — inspectable runtime state,
+    like the prototype's shared-directory workspace (§3.1).
+    """
+
+    def __init__(self, bins_per_window: int,
+                 sample_seconds: float = SAMPLE_SECONDS):
+        self.bins_per_window = int(bins_per_window)
+        self.sample_seconds = float(sample_seconds)
+        self._windows: dict[int, TelemetryWindow] = {}
+        self._lock = threading.Lock()
+
+    # -- producer side ------------------------------------------------------
+    def ingest(self, tw: TelemetryWindow) -> None:
+        if tw.bins != self.bins_per_window:
+            raise ValueError(
+                f"window {tw.window}: got {tw.bins} bins, "
+                f"expected {self.bins_per_window} (clip first)"
+            )
+        with self._lock:
+            if tw.window in self._windows:
+                raise ValueError(f"window {tw.window} already ingested")
+            self._windows[tw.window] = tw
+
+    # -- consumer side ------------------------------------------------------
+    def get(self, window: int) -> TelemetryWindow | None:
+        with self._lock:
+            return self._windows.get(window)
+
+    def latest(self) -> int:
+        with self._lock:
+            return max(self._windows, default=-1)
+
+    def history(self, upto: int, n: int) -> list[TelemetryWindow]:
+        """The last ``n`` complete windows ending at ``upto`` (inclusive)."""
+        with self._lock:
+            return [self._windows[w] for w in range(max(0, upto - n + 1), upto + 1)
+                    if w in self._windows]
+
+    def windows(self) -> Iterable[int]:
+        with self._lock:
+            return sorted(self._windows)
+
+    # -- persistence --------------------------------------------------------
+    def flush(self, path: str) -> None:
+        cols: dict = {"bins_per_window": self.bins_per_window,
+                      "sample_seconds": self.sample_seconds, "windows": {}}
+        with self._lock:
+            for w, tw in sorted(self._windows.items()):
+                cols["windows"][w] = {
+                    "t0_bin": tw.t0_bin,
+                    "u_th": tw.u_th.astype(np.float32).tobytes(),
+                    "u_shape": list(tw.u_th.shape),
+                    "power_w": tw.power_w.astype(np.float64).tobytes(),
+                    "extras": {
+                        k: {"b": v.astype(np.float32).tobytes(),
+                            "s": list(v.shape)}
+                        for k, v in tw.extras.items()
+                    },
+                }
+        blob = zstandard.ZstdCompressor(level=6).compress(
+            msgpack.packb(cols, use_bin_type=True)
+        )
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)  # atomic publish
+
+    @classmethod
+    def load(cls, path: str) -> "TelemetryStore":
+        with open(path, "rb") as f:
+            cols = msgpack.unpackb(
+                zstandard.ZstdDecompressor().decompress(f.read()), raw=False,
+                strict_map_key=False,
+            )
+        store = cls(cols["bins_per_window"], cols["sample_seconds"])
+        for w, rec in cols["windows"].items():
+            u = np.frombuffer(rec["u_th"], np.float32).reshape(rec["u_shape"])
+            p = np.frombuffer(rec["power_w"], np.float64)
+            extras = {
+                k: np.frombuffer(v["b"], np.float32).reshape(v["s"])
+                for k, v in rec["extras"].items()
+            }
+            store.ingest(TelemetryWindow(int(w), rec["t0_bin"], u, p, extras))
+        return store

@@ -1,0 +1,121 @@
+"""DigitalTwin facade — the whole OpenDT loop in one object.
+
+Wires the physical-twin telemetry source, the Orchestrator (windows,
+pipelined simulate/calibrate), the SLO monitor and the HITL gate into the
+closed cycle of Figure 1:  telemetry -> twin -> (simulate + calibrate) ->
+SLO-aware feedback -> human-in-the-loop.
+
+Two physical-twin flavors ship with the repo:
+  * ``TraceGroundTruth`` — replays a workload trace with synthesized hidden-
+    model telemetry (experiments E1/E2);
+  * the live-training producer in examples/live_twin_training.py, which
+    pushes measured telemetry from an actual JAX training run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.core.desim import simulate_utilization
+from repro.core.feedback import HITLGate, Proposal
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig, WindowRecord
+from repro.core.power import PowerParams
+from repro.core.slo import SLOReport
+from repro.core.telemetry import TelemetryWindow, clip_to_window
+
+# NOTE: repro.traces.* is imported lazily inside functions — traces depends on
+# repro.core.power, and importing it at module scope would close a cycle
+# through the repro.core package __init__.
+
+
+class TraceGroundTruth:
+    """Physical-twin stand-in: hidden-model telemetry over a trace replay."""
+
+    def __init__(self, workload, dc, t_bins: int, gt=None):
+        from repro.traces.surf import GroundTruthSpec, synthesize_ground_truth
+        gt = gt or GroundTruthSpec()
+        sim = simulate_utilization(
+            workload, num_hosts=dc.num_hosts,
+            cores_per_host=dc.cores_per_host, t_bins=t_bins,
+        )
+        self.u_th = np.asarray(sim.u_th)
+        self.power = synthesize_ground_truth(self.u_th, gt)
+
+    def window(self, idx: int, bins_per_window: int) -> TelemetryWindow:
+        return clip_to_window(
+            idx, bins_per_window, 0, self.u_th, self.power
+        )
+
+
+@dataclasses.dataclass
+class TwinRunResult:
+    records: list[WindowRecord]
+    overall_mape: float
+    per_window_mape: np.ndarray
+    slo_reports: list[SLOReport]
+    under_estimation_fraction: float
+    approved_proposals: list[Proposal]
+
+
+class DigitalTwin:
+    """OpenDT's outer loop."""
+
+    def __init__(
+        self,
+        workload,
+        dc,
+        t_bins: int,
+        cfg: OrchestratorConfig = OrchestratorConfig(),
+        base_params: PowerParams = PowerParams(),
+        hitl_policy: Callable[[Proposal], bool | None] | None = None,
+    ):
+        self.gate = HITLGate(policy=hitl_policy)
+        self.orchestrator = Orchestrator(
+            workload, dc, t_bins, cfg, base_params, gate=self.gate,
+        )
+
+    def run(
+        self,
+        telemetry_source: Callable[[int, int], TelemetryWindow],
+        num_windows: int | None = None,
+    ) -> TwinRunResult:
+        """Run the closed loop: per window, ingest telemetry then twin it."""
+        orch = self.orchestrator
+        n = num_windows if num_windows is not None else orch.num_windows
+        approved: list[Proposal] = []
+        for w in range(n):
+            tw = telemetry_source(w, orch.cfg.bins_per_window)
+            orch.store.ingest(tw)
+            orch.run_window(w)
+            approved.extend(self.gate.drain())
+        return TwinRunResult(
+            records=orch.records,
+            overall_mape=orch.overall_mape(),
+            per_window_mape=orch.per_window_mape(),
+            slo_reports=orch.monitor.report(),
+            under_estimation_fraction=orch.bias.under_fraction,
+            approved_proposals=approved,
+        )
+
+
+def run_surf_experiment(
+    workload,
+    dc,
+    t_bins: int,
+    *,
+    calibrate: bool,
+    cfg: OrchestratorConfig | None = None,
+    base_params: PowerParams = PowerParams(),
+    gt=None,
+    hitl_policy: Callable[[Proposal], bool | None] | None = None,
+) -> TwinRunResult:
+    """One E1/E2-style run: trace replay + hidden-model telemetry."""
+    cfg = cfg or OrchestratorConfig()
+    cfg = dataclasses.replace(cfg, calibrate=calibrate)
+    truth = TraceGroundTruth(workload, dc, t_bins, gt)
+    twin = DigitalTwin(workload, dc, t_bins, cfg, base_params,
+                       hitl_policy=hitl_policy)
+    return twin.run(truth.window)

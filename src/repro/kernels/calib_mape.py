@@ -1,0 +1,119 @@
+"""Fused grid-search MAPE Pallas kernel (the Self-Calibrator's hot spot).
+
+The calibrator evaluates C candidate power-model parameterizations against a
+cached utilization window [T, H] (see core/calibrate.py).  The naive
+formulation materializes a [C, T] (or worse, [C, T, H]) tensor in HBM; with
+the beyond-paper joint grid C reaches 10^4-10^5 and the window grows with the
+history length, so the intermediate dominates HBM traffic.
+
+TPU adaptation: tile candidates x time.  Each grid step loads one [Tb, Hp]
+utilization block into VMEM once and evaluates a whole [Cb] candidate tile
+against it, accumulating per-candidate |rel-err| partial sums in the output
+block across the T grid dimension (TPU grids execute sequentially, so the
+last grid axis is a legal reduction axis).  Arithmetic intensity rises by Cb
+per utilization byte vs. the naive map; nothing [C, T]-shaped ever exists.
+
+Grid:     (C_tiles, T_tiles)               (T last => sequential reduction)
+Blocks:   u:    (Tb, Hp)   VMEM            Hp = H padded to 128 lanes
+          real: (Tb, 1)    VMEM
+          p_*:  (1, Cb)    VMEM
+          out:  (1, Cb)    VMEM accumulator
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# default tile sizes — MXU/VPU aligned (lane dim multiples of 128)
+TB_T = 256     # time-bins per block
+TB_C = 128     # candidates per block
+
+
+def _kernel(u_ref, real_ref, pidle_ref, pmax_ref, r_ref, out_ref, *,
+            n_t: int, n_h: int, t_tiles: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)            # [Tb, Hp]
+    u = jnp.clip(u, 0.0, 1.0)
+    log_u = jnp.log(jnp.maximum(u, 1e-30))        # [Tb, Hp]
+    s2 = jnp.sum(2.0 * u, axis=1, keepdims=True)  # [Tb, 1]
+
+    real = real_ref[...].astype(jnp.float32)      # [Tb, 1]
+    p_idle = pidle_ref[...].astype(jnp.float32)   # [1, Cb]
+    p_max = pmax_ref[...].astype(jnp.float32)     # [1, Cb]
+    r = r_ref[...].astype(jnp.float32)            # [1, Cb]
+
+    # valid-time mask for the ragged last block
+    t0 = ti * u.shape[0]
+    t_ids = t0 + jax.lax.broadcasted_iota(jnp.int32, (u.shape[0], 1), 0)
+    t_mask = (t_ids < n_t).astype(jnp.float32)    # [Tb, 1]
+
+    # sum_h u^r per candidate: einsum over the host dim keeps the MXU busy:
+    # exp(r * log u) is [Tb, Hp, Cb]-shaped logically; we stream it per
+    # candidate tile as exp(log_u[...,None] * r) then reduce hosts.
+    # [Tb, Hp, 1] * [1, 1, Cb] -> [Tb, Hp, Cb] in VREGs, reduce axis 1.
+    sr = jnp.sum(jnp.exp(log_u[:, :, None] * r[None]), axis=1)  # [Tb, Cb]
+
+    sim = n_h * p_idle + (p_max - p_idle) * (s2 - sr)            # [Tb, Cb]
+    rel = jnp.abs((real - sim) / (real + 1e-9)) * t_mask         # [Tb, Cb]
+    out_ref[...] += jnp.sum(rel, axis=0, keepdims=True)          # [1, Cb]
+
+    @pl.when(ti == t_tiles - 1)
+    def _finish():
+        out_ref[...] = out_ref[...] * (100.0 / n_t)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tb_t", "tb_c"))
+def calib_mape_grid_pallas(
+    u_th: Array,        # [T, H] float
+    real_power: Array,  # [T]
+    p_idle: Array,      # [C]
+    p_max: Array,       # [C]
+    r: Array,           # [C]
+    *,
+    interpret: bool = False,
+    tb_t: int = TB_T,
+    tb_c: int = TB_C,
+) -> Array:             # [C] MAPE %
+    t, h = u_th.shape
+    c = r.shape[0]
+    hp = pl.cdiv(h, 128) * 128
+    tp = pl.cdiv(t, tb_t) * tb_t
+    cp = pl.cdiv(c, tb_c) * tb_c
+
+    u = jnp.pad(u_th.astype(jnp.float32), ((0, tp - t), (0, hp - h)))
+    real = jnp.pad(real_power.astype(jnp.float32), (0, tp - t),
+                   constant_values=1.0)[:, None]           # avoid /0 in pad
+    pad_c = (0, cp - c)
+    pi = jnp.pad(p_idle.astype(jnp.float32), pad_c)[None, :]
+    pm = jnp.pad(p_max.astype(jnp.float32), pad_c, constant_values=1.0)[None, :]
+    rr = jnp.pad(r.astype(jnp.float32), pad_c, constant_values=1.0)[None, :]
+
+    t_tiles = tp // tb_t
+    c_tiles = cp // tb_c
+    kernel = functools.partial(_kernel, n_t=t, n_h=h, t_tiles=t_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid=(c_tiles, t_tiles),
+        in_specs=[
+            pl.BlockSpec((tb_t, hp), lambda ci, ti: (ti, 0)),    # u
+            pl.BlockSpec((tb_t, 1), lambda ci, ti: (ti, 0)),     # real
+            pl.BlockSpec((1, tb_c), lambda ci, ti: (0, ci)),     # p_idle
+            pl.BlockSpec((1, tb_c), lambda ci, ti: (0, ci)),     # p_max
+            pl.BlockSpec((1, tb_c), lambda ci, ti: (0, ci)),     # r
+        ],
+        out_specs=pl.BlockSpec((1, tb_c), lambda ci, ti: (0, ci)),
+        out_shape=jax.ShapeDtypeStruct((1, cp), jnp.float32),
+        interpret=interpret,
+    )(u, real, pi, pm, rr)
+    return out[0, :c]

@@ -1,0 +1,146 @@
+"""Flash-attention forward Pallas kernel (TPU target), GQA-aware.
+
+The LM substrate's chunked-XLA attention (models/attention.py) is the exact
+same blocking expressed with lax.scan so the multi-pod dry-run can lower on
+any backend; this kernel is the TPU-native realization for the perf path.
+
+Blocking: grid (B, Hq, Q_tiles, KV_tiles).  TPU grids execute sequentially
+over the last axis, so the online-softmax running state (m, l, acc) lives in
+VMEM scratch that persists across the KV axis.  K/V BlockSpec index maps
+divide the query head by the GQA group size, so grouped heads read the same
+KV block without materializing the head expansion in HBM.
+
+Causal skipping: KV tiles strictly above the diagonal are skipped via
+pl.when (zero work, not just masking).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_QB = 256
+DEFAULT_KB = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, kv_tiles: int, q_blk: int, k_blk: int,
+            s_q: int, s_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # query offset includes the kv/q length delta so decode/prefix caches
+    # (s_kv >= s_q) line up on the last diagonal.
+    diag_off = s_kv - s_q
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [Qb, D]
+        k = k_ref[0, 0].astype(jnp.float32)                # [Kb, D]
+        v = v_ref[0, 0].astype(jnp.float32)                # [Kb, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                   # [Qb, Kb]
+        q_ids = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_ids = ki * k_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_ids < s_kv                                 # ragged kv pad
+        if causal:
+            mask &= (q_ids + diag_off) >= k_ids
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                 # [Qb, 1]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                              # [Qb, Kb]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # last query row of this q tile vs first kv row of this kv tile
+        needed = (qi * q_blk + q_blk - 1 + diag_off) >= ki * k_blk
+        pl.when(needed)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == kv_tiles - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "q_blk", "k_blk", "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,   # [B, Hq, Sq, D]
+    k: Array,   # [B, Hkv, Skv, D]
+    v: Array,   # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_blk: int = DEFAULT_QB,
+    k_blk: int = DEFAULT_KB,
+    interpret: bool = False,
+) -> Array:
+    b, hq, s_q, d = q.shape
+    _, hkv, s_kv, _ = k.shape
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    q_blk = min(q_blk, max(s_q, 8))
+    k_blk = min(k_blk, max(s_kv, 8))
+    sqp = pl.cdiv(s_q, q_blk) * q_blk
+    skp = pl.cdiv(s_kv, k_blk) * k_blk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - s_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - s_kv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - s_kv), (0, 0)))
+
+    q_tiles = sqp // q_blk
+    kv_tiles = skp // k_blk
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, kv_tiles=kv_tiles,
+        q_blk=q_blk, k_blk=k_blk, s_q=s_q, s_kv=s_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, q_tiles, kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, k_blk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, k_blk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, d), jnp.float32),   # acc
+            pltpu.VMEM((q_blk, 1), jnp.float32),   # m
+            pltpu.VMEM((q_blk, 1), jnp.float32),   # l
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s_q, :]

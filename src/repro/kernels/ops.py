@@ -1,0 +1,94 @@
+"""Jit'd public wrappers for the kernels, with a backend switch.
+
+backend = "pallas"           — compiled Pallas (TPU deployment target)
+backend = "pallas_interpret" — Pallas interpret mode (CPU validation; the
+                               kernel body runs in Python, semantics identical)
+backend = "xla"              — the pure-jnp oracle (ref.py); used on CPU for
+                               speed and in the multi-pod dry-run lowering.
+
+The default is resolved from the platform at call time so library code never
+hard-codes a backend.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.calib_mape import calib_mape_grid_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.power_sim import power_sim_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+Array = jax.Array
+Backend = Literal["auto", "pallas", "pallas_interpret", "xla"]
+
+
+def resolve_backend(backend: Backend) -> str:
+    if backend != "auto":
+        return backend
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def calib_mape_grid(
+    u_th: Array, real_power: Array,
+    p_idle: Array, p_max: Array, r: Array,
+    *, backend: Backend = "auto",
+) -> Array:
+    """[C] candidate MAPEs over a cached utilization window."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return ref.calib_mape_grid_ref(u_th, real_power, p_idle, p_max, r)
+    return calib_mape_grid_pallas(
+        u_th, real_power, p_idle, p_max, r,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def power_sim(
+    u_th: Array, *, p_idle: float, p_max: float, r: float,
+    peak_tflops: float, dt_seconds: float, backend: Backend = "auto",
+) -> tuple[Array, Array, Array]:
+    """Fused (power, energy, tflops) window map."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return ref.power_sim_ref(
+            u_th, p_idle, p_max, r,
+            peak_tflops=peak_tflops, dt_seconds=dt_seconds,
+        )
+    return power_sim_pallas(
+        u_th, p_idle=p_idle, p_max=p_max, r=r,
+        peak_tflops=peak_tflops, dt_seconds=dt_seconds,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, scale: float | None = None,
+    backend: Backend = "auto",
+) -> Array:
+    """GQA flash attention forward."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def ssd_chunk(
+    x: Array, dt: Array, a_log: Array, b: Array, c: Array, d_skip: Array,
+    *, backend: Backend = "auto",
+) -> tuple[Array, Array]:
+    """Mamba2/SSD intra-chunk term + boundary states."""
+    bk = resolve_backend(backend)
+    if bk == "xla":
+        return ref.ssd_chunk_ref(x, dt, a_log, b, c, d_skip)
+    return ssd_chunk_pallas(x, dt, a_log, b, c, d_skip,
+                            interpret=(bk == "pallas_interpret"))

@@ -1,0 +1,70 @@
+"""Fused windowed power/energy/TFLOPs map (Pallas).
+
+One VMEM pass over the utilization field [T, H] produces all three read-out
+metrics of the prediction layer (paper Fig. 5A/B/C) without re-reading the
+field per metric: power [T], per-bin energy [T], achieved TFLOP/s [T].
+
+Grid:   (T_tiles,)
+Blocks: u (Tb, Hp) VMEM;  outputs 3x (Tb, 1) VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+TB_T = 512
+
+
+def _kernel(u_ref, pow_ref, en_ref, tf_ref, *,
+            p_idle: float, p_max: float, r: float, n_h: int,
+            peak_tflops: float, dt_seconds: float):
+    u = u_ref[...].astype(jnp.float32)
+    u = jnp.clip(u, 0.0, 1.0)
+    shape = 2.0 * u - jnp.exp(r * jnp.log(jnp.maximum(u, 1e-30)))
+    ssum = jnp.sum(shape, axis=1, keepdims=True)            # [Tb, 1]
+    power = n_h * p_idle + (p_max - p_idle) * ssum
+    pow_ref[...] = power
+    en_ref[...] = power * (dt_seconds / 3600.0 / 1000.0)
+    tf_ref[...] = jnp.sum(u, axis=1, keepdims=True) / n_h * peak_tflops
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p_idle", "p_max", "r", "peak_tflops", "dt_seconds",
+                     "interpret", "tb_t"),
+)
+def power_sim_pallas(
+    u_th: Array,
+    *,
+    p_idle: float,
+    p_max: float,
+    r: float,
+    peak_tflops: float,
+    dt_seconds: float,
+    interpret: bool = False,
+    tb_t: int = TB_T,
+) -> tuple[Array, Array, Array]:
+    t, h = u_th.shape
+    hp = pl.cdiv(h, 128) * 128
+    tp = pl.cdiv(t, tb_t) * tb_t
+    u = jnp.pad(u_th.astype(jnp.float32), ((0, tp - t), (0, hp - h)))
+    kernel = functools.partial(
+        _kernel, p_idle=p_idle, p_max=p_max, r=r, n_h=h,
+        peak_tflops=peak_tflops, dt_seconds=dt_seconds,
+    )
+    shape_t = jax.ShapeDtypeStruct((tp, 1), jnp.float32)
+    power, energy, tflops = pl.pallas_call(
+        kernel,
+        grid=(tp // tb_t,),
+        in_specs=[pl.BlockSpec((tb_t, hp), lambda ti: (ti, 0))],
+        out_specs=[pl.BlockSpec((tb_t, 1), lambda ti: (ti, 0))] * 3,
+        out_shape=[shape_t, shape_t, shape_t],
+        interpret=interpret,
+    )(u)
+    return power[:t, 0], energy[:t, 0], tflops[:t, 0]

@@ -1,0 +1,103 @@
+"""Mamba2 / SSD intra-chunk Pallas kernel (TPU target).
+
+One grid step computes, for a (batch x chunk, head) pair, the quadratic
+intra-chunk term and the chunk boundary state of the state-space-duality
+decomposition [arXiv:2405.21060]:
+
+    att[i,j] = (C_i . B_j) * exp(csum_i - csum_j) * dt_j      (j <= i)
+    y_intra  = att @ x + D * x
+    state    = sum_j exp(csum_Q - csum_j) * dt_j * (B_j (x) x_j)
+
+The [Q, Q] decay/score tile, the [Q, N] B/C blocks and the [Q, P] head
+activations all live in VMEM (Q=128, P<=64, N<=128 -> < 0.5 MB per step);
+nothing chunk-quadratic touches HBM.  The O(chunks) inter-chunk recurrence
+stays in JAX (models/mamba2.ssd_chunked) — it is linear and sequential.
+
+Grid:   (B*C, H)
+Blocks: x   (1, Q, 1, P)   dt/da (1, Q, 1)    B/C (1, Q, 1, N) via group map
+Out:    y   (1, Q, 1, P)   state (1, 1, P, N)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref, *,
+            q: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [Q]
+    a = a_ref[0, 0].astype(jnp.float32)                # scalar A_log
+    bb = b_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+    cc = c_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+    d_skip = d_ref[0, 0].astype(jnp.float32)
+
+    da = dt * (-jnp.exp(a))                             # [Q]
+    csum = jnp.cumsum(da)                               # [Q]
+
+    seg = csum[:, None] - csum[None, :]                 # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    att = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+    y_ref[0, :, 0, :] = (y + x * d_skip).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(csum[q - 1] - csum) * dt        # [Q]
+    # state[p, n] = sum_j x[j, p] * decay_end[j] * B[j, n]
+    st = jax.lax.dot_general(x * decay_end[:, None], bb,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: Array,       # [BC, Q, H, P]   chunked head activations
+    dt: Array,      # [BC, Q, H]      post-softplus
+    a_log: Array,   # [H]
+    b: Array,       # [BC, Q, G, N]
+    c: Array,       # [BC, Q, G, N]
+    d_skip: Array,  # [H]
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """-> (y_intra [BC, Q, H, P] f32, states [BC, H, P, N] f32)."""
+    bc, q, h, p = x.shape
+    g = b.shape[2]
+    hpg = h // g
+    kernel = functools.partial(_kernel, q=q)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(bc, h),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, hh: (i, 0, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, hh: (i, 0, hh)),
+            pl.BlockSpec((1, 1), lambda i, hh: (0, hh)),
+            pl.BlockSpec((1, q, 1, b.shape[-1]),
+                         lambda i, hh, k=hpg: (i, 0, hh // k, 0)),
+            pl.BlockSpec((1, q, 1, b.shape[-1]),
+                         lambda i, hh, k=hpg: (i, 0, hh // k, 0)),
+            pl.BlockSpec((1, 1), lambda i, hh: (0, hh)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, hh: (i, 0, hh, 0)),
+            pl.BlockSpec((1, 1, p, b.shape[-1]), lambda i, hh: (i, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bc, h, p, b.shape[-1]), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a_log[None, :], b, c, d_skip[None, :])
+    return y, st

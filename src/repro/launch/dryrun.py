@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build the production mesh, abstract params/opt/caches
+(ShapeDtypeStructs — zero allocation), jit the step with explicit
+in/out shardings, .lower().compile(), then record memory_analysis(),
+cost_analysis(), and the trip-count-corrected HLO costs + roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import analyze_compiled_text
+from repro.analysis.roofline import make_roofline, model_flops_for
+from repro.configs import all_archs, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, ShapeSpec, batch_axes, cell_supported, input_structs
+from repro.launch.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    param_specs_for,
+    state_specs_for,
+)
+from repro.models.common import abstract_params, specs_to_shardings
+from repro.optim.adamw import AdamWConfig, abstract_opt_state
+from repro.parallel.sharding import ShardingCtx, logical_to_spec
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, mode: str):
+    structs = input_structs(cfg, shape)
+    axes = batch_axes(cfg, shape)
+    return {
+        k: NamedSharding(mesh, logical_to_spec(axes[k], v.shape, mesh, mode))
+        for k, v in structs.items()
+    }
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(arch, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        return {**meta, "status": "skipped", "reason": reason}
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mode = "train" if shape.kind == "train" else "serve"
+    ctx = ShardingCtx(mesh=mesh, mode=mode)
+    dtype = jnp.dtype(cfg.dtype)
+
+    pspecs = param_specs_for(cfg)
+    p_abs = abstract_params(pspecs, dtype)
+    p_shard = specs_to_shardings(pspecs, mesh, mode)
+    b_abs = input_structs(cfg, shape)
+    b_shard = batch_shardings(cfg, shape, mesh, mode)
+    rep = NamedSharding(mesh, P())
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        o_abs = abstract_opt_state(p_abs, opt_cfg)
+        # moments shard exactly like their parameter; step is replicated
+        o_shard = type(o_abs)(step=rep, mu=p_shard, nu=p_shard)
+        step = make_train_step(cfg, opt_cfg, ctx)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(p_abs, o_abs, b_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=None)
+        lowered = jitted.lower(p_abs, b_abs)
+    else:
+        sspecs = state_specs_for(cfg, shape.batch, shape.seq)
+        s_abs = abstract_params(sspecs, dtype)
+        s_shard = specs_to_shardings(sspecs, mesh, mode)
+        step = make_serve_step(cfg, ctx)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, s_shard, b_shard),
+            out_shardings=(None, s_shard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(p_abs, s_abs, b_abs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    parsed = analyze_compiled_text(hlo_text, chips)
+    mf = model_flops_for(cfg, shape.kind, shape.batch, shape.seq,
+                         shape.kind == "train")
+    roof = make_roofline(parsed, mf, chips)
+
+    out = {
+        **meta,
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        },
+        "cost_analysis_flops": float(ca.get("flops", -1.0)),
+        "hlo": parsed,
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        peak_gb = out["memory"]["peak_bytes_per_device"] / 1e9
+        print(f"[{arch} x {shape_name} x {mesh_name}] ok "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"peak {peak_gb:.2f} GB/dev "
+              f"dominant={roof.dominant} "
+              f"terms(c/m/n)=({roof.compute_s:.4f}/{roof.memory_s:.4f}/"
+              f"{roof.collective_s:.4f})s "
+              f"useful={roof.useful_flops_fraction:.2f}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[{arch} x {shape} x {mesh_name}] cached", flush=True)
+                    continue
+                try:
+                    res = dryrun_cell(arch, shape, mesh_name == "multi")
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures += 1
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[{arch} x {shape} x {mesh_name}] ERROR {e!r}",
+                          flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"dry-run complete; {failures} failures", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Serving launcher: batched greedy decoding on a reduced config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --reduce 8 --batch 4 --prompt-len 32 --gen 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step, param_specs_for, state_specs_for
+from repro.launch.train import reduce_config
+from repro.models.common import init_params
+from repro.parallel.sharding import ShardingCtx
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduce", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch), args.reduce)
+    max_seq = args.prompt_len + args.gen
+    print(f"serving {cfg.name} (reduced x{args.reduce}) batch={args.batch} "
+          f"cache={max_seq}", flush=True)
+
+    key = jax.random.PRNGKey(args.seed)
+    dtype = jnp.dtype(cfg.dtype)
+    params = init_params(param_specs_for(cfg), key, dtype)
+    state = init_params(state_specs_for(cfg, args.batch, max_seq),
+                        jax.random.PRNGKey(1), dtype)
+    # zero caches/states
+    state = jax.tree.map(lambda t: jnp.zeros_like(t), state)
+
+    serve = jax.jit(make_serve_step(cfg, ShardingCtx()), donate_argnums=(1,))
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 min(cfg.vocab, 1000), jnp.int32)
+
+    batchd = {"cache_len": jnp.zeros((args.batch,), jnp.int32)}
+    if cfg.mrope:
+        batchd["positions"] = jnp.zeros((3, args.batch, 1), jnp.int32)
+
+    # prefill by stepping the prompt tokens (cache fills token-by-token)
+    t0 = time.time()
+    tok = prompts[:, 0:1]
+    for i in range(args.prompt_len):
+        b = {**batchd, "token": prompts[:, i:i + 1],
+             "cache_len": jnp.full((args.batch,), i, jnp.int32)}
+        if cfg.mrope:
+            b["positions"] = jnp.full((3, args.batch, 1), i, jnp.int32)
+        tok, state = serve(params, state, b)
+    t_prefill = time.time() - t0
+
+    # generate
+    out = []
+    t0 = time.time()
+    for i in range(args.gen):
+        pos = args.prompt_len + i
+        b = {**batchd, "token": tok[:, None],
+             "cache_len": jnp.full((args.batch,), pos, jnp.int32)}
+        if cfg.mrope:
+            b["positions"] = jnp.full((3, args.batch, 1), pos, jnp.int32)
+        tok, state = serve(params, state, b)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    toks = np.stack(out, axis=1)
+    print(f"prefill {args.prompt_len} steps in {t_prefill:.2f}s; "
+          f"generated {args.gen} x {args.batch} tokens in {dt:.2f}s "
+          f"({args.gen*args.batch/dt:.1f} tok/s)", flush=True)
+    print("sample:", toks[0][:16].tolist(), flush=True)
+    assert np.isfinite(toks).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Assigned input shapes and per-(arch x shape) input ShapeDtypeStructs.
+
+Every model input — including the parameter pytree and decode state — is
+produced as ShapeDtypeStructs so the dry-run lowers without allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SUBQUADRATIC, get_config
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("pure full-attention arch: 500k-context decode is a "
+                       "quadratic-regime artifact; skipped per assignment "
+                       "(DESIGN.md §6)")
+    return True, ""
+
+
+def _frames_for(cfg: ModelConfig, seq: int) -> int:
+    """Stub audio frontend: ~4x temporal downsampling of the target length."""
+    return max(min(seq // 4, 4096), 64)
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, tuple]:
+    """Logical axes per input tensor (for shardings)."""
+    if shape.kind == "train":
+        ax: dict[str, tuple] = {"tokens": ("batch", "seq"),
+                                "labels": ("batch", "seq")}
+        if cfg.family == "vlm":
+            ax["vision_embeds"] = ("batch", "patches", None)
+            ax["vision_pos"] = ("batch", "patches")
+            ax["positions"] = (None, "batch", "seq")
+        if cfg.family == "encdec":
+            ax["frames"] = ("batch", "frames", None)
+        return ax
+    if shape.kind == "prefill":
+        ax = {"tokens": ("batch", "seq")}
+        if cfg.family == "vlm":
+            ax["vision_embeds"] = ("batch", "patches", None)
+            ax["vision_pos"] = ("batch", "patches")
+            ax["positions"] = (None, "batch", "seq")
+        if cfg.family == "encdec":
+            ax["frames"] = ("batch", "frames", None)
+        return ax
+    ax = {"token": ("batch", None), "cache_len": ("batch",)}
+    if cfg.mrope:
+        ax["positions"] = (None, "batch", None)
+    return ax
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStructs for the step's ``batch`` argument."""
+    b, s = shape.batch, shape.seq
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        out: dict[str, Any] = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            out["labels"] = sds((b, s), i32)
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            out["vision_embeds"] = sds((b, p, cfg.d_model), dt)
+            out["vision_pos"] = sds((b, p), i32)
+            out["positions"] = sds((3, b, s), i32)
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, _frames_for(cfg, s), cfg.d_model), dt)
+        return out
+    out = {"token": sds((b, 1), i32), "cache_len": sds((b,), i32)}
+    if cfg.mrope:
+        out["positions"] = sds((3, b, 1), i32)
+    return out
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0
+                    ) -> dict[str, Any]:
+    """Small-footprint concrete batch (for smoke tests on reduced configs)."""
+    key = jax.random.PRNGKey(seed)
+    structs = input_structs(cfg, shape)
+    out = {}
+    for k, v in structs.items():
+        if v.dtype == jnp.int32:
+            if k == "cache_len":
+                out[k] = jnp.full(v.shape, shape.seq // 2, jnp.int32)
+            elif k in ("tokens", "labels", "token"):
+                out[k] = jax.random.randint(key, v.shape, 0,
+                                            min(cfg.vocab, 1000), jnp.int32)
+            elif k == "vision_pos":
+                out[k] = jnp.broadcast_to(
+                    jnp.arange(v.shape[1], dtype=jnp.int32)[None], v.shape)
+            else:
+                out[k] = jnp.zeros(v.shape, jnp.int32)
+        else:
+            out[k] = jnp.ones(v.shape, v.dtype) * 0.02
+    return out

@@ -1,0 +1,128 @@
+"""Step factories: train_step / prefill_step / serve_step per architecture.
+
+These are the jitted units the launcher, the dry-run, and the examples all
+share.  Shardings for params/opt/caches come from the ParamSpec trees;
+shardings for batches come from launch.shapes.batch_axes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.common import dense, rms_norm
+from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.parallel.sharding import ShardingCtx, use_ctx
+
+
+def loss_for(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return ed.encdec_loss
+    return lm.loss_fn
+
+
+def param_specs_for(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return ed.encdec_specs(cfg)
+    return lm.model_specs(cfg)
+
+
+def state_specs_for(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "encdec":
+        return ed.encdec_state_specs(cfg, batch, seq)
+    return lm.decode_state_specs(cfg, batch, seq)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    ctx: ShardingCtx = ShardingCtx(),
+                    grad_accum: int = 1):
+    """One optimizer step; ``grad_accum`` > 1 splits the batch into
+    microbatches scanned sequentially (elastic re-mesh keeps the global
+    batch constant by raising grad_accum when data shards shrink)."""
+    loss_fn = loss_for(cfg)
+
+    def _grads(params, batch):
+        def lossf(p):
+            return loss_fn(cfg, p, batch, ctx)
+
+        return jax.value_and_grad(lossf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        with use_ctx(ctx):
+            if grad_accum == 1:
+                (loss, metrics), grads = _grads(params, batch)
+            else:
+                def split(x):
+                    b = x.shape[0] if x.ndim and x.shape[0] > 3 else None
+                    if b is None or b % grad_accum:
+                        raise ValueError("batch not divisible by grad_accum")
+                    return x.reshape((grad_accum, b // grad_accum)
+                                     + x.shape[1:])
+
+                micro = {k: split(v) for k, v in batch.items()
+                         if k != "positions"}
+
+                def body(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = _grads(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    body, (g0, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / grad_accum, grads)
+                loss = loss_sum / grad_accum
+                metrics = {"ce": loss,
+                           "moe_aux": jnp.zeros((), jnp.float32),
+                           "tokens": jnp.zeros((), jnp.int32)}
+            params, opt_state, om = apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+            out = {"loss": loss, **metrics, **om}
+            return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardingCtx = ShardingCtx()):
+    """Prefill: hidden states -> LAST-position logits only (the [B, S, V]
+    logits tensor is never materialized — vocab 256k x 32k seq would be TBs).
+    Cache write-out is elided in the dry-run cell (documented)."""
+
+    def prefill_step(params, batch):
+      with use_ctx(ctx):
+        if cfg.family == "encdec":
+            enc_out = ed.encode(cfg, params, batch["frames"], ctx)
+            x = ed.decode_train(cfg, params, batch["tokens"], enc_out, ctx)
+            w = params["unembed"]
+        else:
+            x, _ = lm.backbone(cfg, params, batch, ctx)
+            w = lm._unembed_matrix(cfg, params)
+        return dense(x[:, -1], w)            # [B, vocab]
+
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardingCtx = ShardingCtx()):
+    """One-token greedy decode against the cache/state."""
+
+    def serve_step(params, state, batch):
+      with use_ctx(ctx):
+        if cfg.family == "encdec":
+            logits, state = ed.encdec_decode_step(cfg, params, state, batch,
+                                                  ctx)
+        else:
+            logits, state = lm.decode_step(cfg, params, state, batch, ctx)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, state
+
+    return serve_step

@@ -1,0 +1,159 @@
+"""Training launcher: real steps on the available devices, fault-tolerant,
+with the digital twin ingesting live telemetry.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --seq 256 --batch 8 --reduce 8
+
+``--reduce N`` divides layer count / widths by N for CPU-scale runs (the
+full configs are exercised via the dry-run; real training here is for
+end-to-end validation and the live-twin example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.data.tokens import DataConfig, TokenPipeline
+from repro.launch.steps import make_train_step, param_specs_for
+from repro.models.common import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.parallel.sharding import ShardingCtx
+from repro.runtime.fault import FaultConfig, FailureInjector, run_with_restarts
+
+
+def reduce_config(cfg: ModelConfig, factor: int) -> ModelConfig:
+    """Scale a config down by ~factor for CPU-scale end-to-end runs."""
+    if factor <= 1:
+        return cfg
+    def sh(x, lo=1):
+        return max(x // factor, lo)
+    kv = max(sh(cfg.n_kv_heads, 1), 1)
+    heads = max(sh(cfg.n_heads, 1), kv)
+    heads = (heads // kv) * kv or kv
+    repl = dataclasses.replace(
+        cfg,
+        num_layers=sh(cfg.num_layers, 2),
+        d_model=sh(cfg.d_model, 64),
+        d_ff=sh(cfg.d_ff, 64) if cfg.d_ff else 0,
+        n_heads=heads if cfg.n_heads else 0,
+        n_kv_heads=kv if cfg.n_kv_heads else 0,
+        head_dim=max(sh(cfg.head_dim, 16), 16) if cfg.head_dim else 0,
+        vocab=max(cfg.vocab // factor, 512),
+        moe_d_ff=sh(cfg.moe_d_ff, 32) if cfg.moe_d_ff else 0,
+        shared_d_ff=sh(cfg.shared_d_ff, 32) if cfg.shared_d_ff else 0,
+        n_experts=min(cfg.n_experts, 8) if cfg.moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.moe else 0,
+        q_lora=sh(cfg.q_lora, 16) if cfg.q_lora else 0,
+        kv_lora=sh(cfg.kv_lora, 16) if cfg.kv_lora else 0,
+        qk_nope_dim=max(sh(cfg.qk_nope_dim, 8), 8) if cfg.qk_nope_dim else 0,
+        qk_rope_dim=max(sh(cfg.qk_rope_dim, 8), 8) if cfg.qk_rope_dim else 0,
+        v_head_dim=max(sh(cfg.v_head_dim, 8), 8) if cfg.v_head_dim else 0,
+        d_state=max(sh(cfg.d_state, 16), 16) if cfg.d_state else 0,
+        ssm_headdim=max(sh(cfg.ssm_headdim, 16), 16) if cfg.d_state else 64,
+        ssd_chunk=64,
+        enc_layers=sh(cfg.enc_layers, 1) if cfg.enc_layers else 0,
+        dec_layers=sh(cfg.dec_layers, 1) if cfg.dec_layers else 0,
+        shared_attn_every=cfg.shared_attn_every,
+        shared_attn_lora=sh(cfg.shared_attn_lora, 8) if cfg.shared_attn_lora else 0,
+        num_patches=min(cfg.num_patches, 64) if cfg.num_patches else 0,
+        mrope_sections=(
+            tuple(int(x) for x in _scale_sections(cfg, factor))
+            if cfg.mrope else cfg.mrope_sections),
+    )
+    return repl.validate()
+
+
+def _scale_sections(cfg: ModelConfig, factor: int):
+    hd = max(cfg.head_dim // factor, 16)
+    half = hd // 2
+    t = max(half // 4, 1)
+    rest = half - t
+    h = rest // 2
+    w = rest - h
+    return (t, h, w)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduce", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch), args.reduce)
+    print(f"arch={cfg.name} reduced x{args.reduce}: L={cfg.num_layers} "
+          f"d={cfg.d_model} vocab={cfg.vocab}", flush=True)
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5),
+                          total_steps=args.steps)
+    ctx = ShardingCtx()          # single device
+    step_fn_jit = jax.jit(make_train_step(cfg, opt_cfg, ctx))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=args.seed))
+
+    def make_state():
+        key = jax.random.PRNGKey(args.seed)
+        params = init_params(param_specs_for(cfg), key, jnp.dtype(cfg.dtype))
+        opt = init_opt_state(params, opt_cfg)
+        return {"params": params, "opt": opt}
+
+    times = []
+
+    def step_fn(state, step):
+        batch = pipe.global_batch(step)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.ones(
+                (args.batch, 64, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.02
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            batch["vision_embeds"] = jnp.ones(
+                (args.batch, p, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.02
+            batch["vision_pos"] = jnp.broadcast_to(
+                jnp.arange(p, dtype=jnp.int32)[None], (args.batch, p))
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(args.seq, dtype=jnp.int32)[None, None],
+                (3, args.batch, args.seq))
+        t0 = time.time()
+        params, opt, metrics = step_fn_jit(state["params"], state["opt"],
+                                           batch)
+        loss = float(metrics["loss"])
+        times.append(time.time() - t0)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"{times[-1]*1e3:.0f} ms", flush=True)
+        return {"params": params, "opt": opt}, loss
+
+    report = run_with_restarts(
+        total_steps=args.steps,
+        make_state=make_state,
+        step_fn=step_fn,
+        fault_cfg=FaultConfig(ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every),
+        injector=FailureInjector(tuple(args.fail_at)) if args.fail_at else None,
+    )
+    print(f"done: {report.steps_done} steps, {report.restarts} restarts, "
+          f"{report.checkpoints} checkpoints, "
+          f"median step {np.median(times)*1e3:.0f} ms, "
+          f"final loss {report.losses[-1]:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Attention: chunked-flash (pure JAX, the dry-run/XLA path), Pallas-backed
+option, and cache decode.  GQA throughout.
+
+The chunked path is the same blocking as kernels/flash_attention.py expressed
+with lax.scan over KV chunks + online softmax, so it lowers on any backend
+and never materializes the [S, S] score matrix (prefill_32k would otherwise
+need TBs).  Layout: q [B, S, Hq, D];  k/v [B, Skv, Hkv, D].
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.parallel.sharding import activation, current_ctx
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _gqa_logits(q: Array, k: Array) -> Array:
+    """q [B,S,Hkv,G,D] x k [B,T,Hkv,D] -> [B,Hkv,G,S,T] f32."""
+    return jnp.einsum(
+        "bshgd,bthd->bhgst", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+    kv_len: Array | None = None,
+    backend: str = "xla",
+) -> Array:
+    """Online-softmax attention over KV chunks.
+
+    kv_len: optional [B] active cache lengths (decode with a partially
+    filled cache); positions >= kv_len are masked out.
+    """
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    if backend in ("pallas", "pallas_interpret") and kv_len is None:
+        # kernel layout is [B, H, S, D]
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, scale=scale,
+            backend=backend,
+        )
+        return out.transpose(0, 2, 1, 3)
+
+    # Distribution of the attention interior: shard KV heads over 'model'
+    # when divisible; otherwise fall back to sharding the QUERY sequence over
+    # 'model' (context parallelism) — K/V stay replicated (they already are
+    # when heads don't divide), and every model shard owns an S/tp query
+    # slice, so the O(S^2) score traffic and FLOPs distribute instead of
+    # replicating.  See EXPERIMENTS.md §Perf.
+    # REPRO_BASELINE_ATTN=1 restores the paper-baseline behavior (no CP
+    # fallback, plain autodiff through the scan) for §Perf A/B measurement.
+    baseline = os.environ.get("REPRO_BASELINE_ATTN") == "1"
+    mesh = current_ctx().mesh
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if hkv % tp == 0:
+        q_axes = ("batch", None, "kv_heads", None, None)
+        acc_axes = ("batch", "kv_heads", None, None, None)
+    elif not baseline:
+        q_axes = ("batch", "attn_q_seq", None, None, None)
+        acc_axes = ("batch", None, None, "attn_q_seq", None)
+    else:
+        q_axes = ("batch", None, "kv_heads", None, None)
+        acc_axes = ("batch", "kv_heads", None, "seq", None)
+    qg = activation((q * scale).reshape(b, s, hkv, g, d), *q_axes)
+    n_chunks = max(t // kv_chunk, 1)
+    kv_chunk = t // n_chunks
+    assert t % kv_chunk == 0, (t, kv_chunk)
+
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    if kv_len is None and not baseline:
+        # training/prefill: flash custom-VJP — the backward recomputes the
+        # per-chunk score tile instead of letting autodiff stack every
+        # [.., S, C] intermediate as scan residuals (EXPERIMENTS.md §Perf).
+        out = _flash(qg, kc, vc, causal, kv_chunk, t, s, acc_axes)
+    else:
+        out, _ = _flash_fwd_scan(qg, kc, vc, causal, kv_chunk, t, s,
+                                 acc_axes, kv_len)
+    return (out.transpose(0, 3, 1, 2, 4).reshape(b, s, hkv * g, dv)
+            .astype(q.dtype))
+
+
+def _flash_fwd_scan(qg, kc, vc, causal, kv_chunk, t, s, acc_axes,
+                    kv_len=None):
+    """Online-softmax forward.  Returns (out [b,hkv,g,s,dv] f32,
+    lse [b,hkv,g,s,1])."""
+    _, b, _, hkv, _ = kc.shape             # kc: [n_chunks, B, C, Hkv, D]
+    dv = vc.shape[-1]                      # V head dim (may differ: MLA)
+    g = qg.shape[3]
+    q_pos = jnp.arange(s)[:, None] + (t - s)      # global query positions
+    acc0 = activation(jnp.zeros((b, hkv, g, s, dv), jnp.float32), *acc_axes)
+    m0 = activation(jnp.full((b, hkv, g, s, 1), NEG_INF, jnp.float32),
+                    *acc_axes)
+    l0 = activation(jnp.zeros((b, hkv, g, s, 1), jnp.float32), *acc_axes)
+
+    def step(carry, inp):
+        acc, m, l, ci = carry
+        kb, vb = inp                               # [B, C, Hkv, D]
+        logits = _gqa_logits(qg, kb)               # [B,Hkv,G,S,C]
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((s, kv_chunk), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        if kv_len is not None:
+            live = (ci * kv_chunk
+                    + jnp.arange(kv_chunk))[None, :] < kv_len[:, None]
+            logits = jnp.where(live[:, None, None, None, :], logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jnp.einsum("bhgsc,bchd->bhgsd", p, vb.astype(jnp.float32))
+        acc = activation(acc * alpha + pv, *acc_axes)
+        return (acc, m_new, l, ci + 1), None
+
+    (acc, m, l, _), _ = jax.lax.scan(
+        step, (acc0, m0, l0, jnp.asarray(0)), (kc, vc)
+    )
+    l = jnp.maximum(l, 1e-30)
+    return acc / l, m + jnp.log(l)
+
+
+def _chunk_mask(ci, kv_chunk, t, s, causal):
+    q_pos = jnp.arange(s)[:, None] + (t - s)
+    k_pos = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+    mask = jnp.ones((s, kv_chunk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    return mask
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(qg, kc, vc, causal, kv_chunk, t, s, acc_axes):
+    out, _ = _flash_fwd_scan(qg, kc, vc, causal, kv_chunk, t, s, acc_axes)
+    return out
+
+
+def _flash_vjp_fwd(qg, kc, vc, causal, kv_chunk, t, s, acc_axes):
+    out, lse = _flash_fwd_scan(qg, kc, vc, causal, kv_chunk, t, s, acc_axes)
+    return out, (qg, kc, vc, out, lse)
+
+
+def _flash_vjp_bwd(causal, kv_chunk, t, s, acc_axes, res, dout):
+    qg, kc, vc, out, lse = res
+    dout = activation(dout.astype(jnp.float32), *acc_axes)
+    # D_i = sum_d dO * O  (flash-attention-2 backward)
+    delta = jnp.sum(dout * out, axis=-1, keepdims=True)   # [b,hkv,g,s,1]
+
+    def step(dq, inp):
+        kb, vb, ci = inp                                   # [B,C,Hkv,D]
+        logits = _gqa_logits(qg, kb)
+        mask = _chunk_mask(ci, kv_chunk, t, s, causal)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        p = jnp.exp(logits - lse)                          # normalized probs
+        dp = jnp.einsum("bhgsd,bchd->bhgsc", dout,
+                        vb.astype(jnp.float32))
+        ds = p * (dp - delta)                              # [b,hkv,g,s,c]
+        dq = dq + jnp.einsum("bhgsc,bchd->bshgd", ds,
+                             kb.astype(jnp.float32))
+        dkb = jnp.einsum("bhgsc,bshgd->bchd", ds,
+                         qg.astype(jnp.float32))
+        dvb = jnp.einsum("bhgsc,bhgsd->bchd", p, dout)
+        return dq, (dkb, dvb)
+
+    n_chunks = kc.shape[0]
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(
+        step, dq0, (kc, vc, jnp.arange(n_chunks)))
+    return dq.astype(qg.dtype), dk.astype(kc.dtype), dv.astype(vc.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def decode_attention(
+    q: Array,         # [B, 1, Hq, D]
+    k_cache: Array,   # [B, T, Hkv, D]
+    v_cache: Array,
+    *,
+    cache_len: Array | None = None,    # [B] live lengths
+    scale: float | None = None,
+) -> Array:
+    """Single-token attention against a (possibly seq-sharded) cache.
+
+    One einsum over the cache: under pjit, sharding the cache's T axis over
+    'model' turns this into sequence-parallel decode — XLA inserts the
+    partial-softmax reduction collectives automatically.
+    """
+    b, _, hq, d = q.shape
+    _, t, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = (q * scale).reshape(b, hkv, g, d)
+    logits = activation(
+        jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32),
+        "batch", "cache_heads", None, "cache_seq")
+    if cache_len is not None:
+        live = jnp.arange(t)[None] < cache_len[:, None]       # [B, T]
+        logits = jnp.where(live[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

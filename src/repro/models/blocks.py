@@ -1,0 +1,121 @@
+"""Transformer blocks: GQA attention (+cache decode), dense/parallel FFN.
+
+Layout conventions: activations [B, S, d]; caches [B, T, KV, hd];
+stacked layer params carry a leading L dim and are scanned.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.common import ParamSpec, dense, rms_norm, swiglu
+from repro.models.rope import apply_mrope, apply_rope
+from repro.parallel.sharding import activation
+
+Array = jax.Array
+
+
+def attn_specs(cfg: ModelConfig, L: int, prefix: str = "") -> dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        f"{prefix}wq": ParamSpec((L, d, h, hd), (None, "embed", "heads", "qk")),
+        f"{prefix}wk": ParamSpec((L, d, kv, hd), (None, "embed", "kv_heads", "qk")),
+        f"{prefix}wv": ParamSpec((L, d, kv, hd), (None, "embed", "kv_heads", "qk")),
+        f"{prefix}wo": ParamSpec((L, h, hd, d), (None, "heads", "qk", "embed")),
+    }
+    if cfg.qk_norm:
+        s[f"{prefix}q_norm"] = ParamSpec((L, hd), (None, None), init="ones")
+        s[f"{prefix}k_norm"] = ParamSpec((L, hd), (None, None), init="ones")
+    return s
+
+
+def ffn_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((L, d, f), (None, "embed", "ff")),
+        "w_up": ParamSpec((L, d, f), (None, "embed", "ff")),
+        "w_down": ParamSpec((L, f, d), (None, "ff", "embed")),
+    }
+
+
+def block_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = {"ln1": ParamSpec((L, d), (None, None), init="ones")}
+    s.update(attn_specs(cfg, L))
+    if not cfg.parallel_block:
+        s["ln2"] = ParamSpec((L, d), (None, None), init="ones")
+    s.update(ffn_specs(cfg, L))
+    return s
+
+
+def _rope_q_k(cfg: ModelConfig, q: Array, k: Array, positions: Array
+              ) -> tuple[Array, Array]:
+    if cfg.mrope:
+        return (apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    return (apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction),
+            apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction))
+
+
+def gqa_attention(p: dict[str, Array], cfg: ModelConfig, x: Array,
+                  positions: Array, *, causal: bool = True,
+                  kv_chunk: int = 1024, prefix: str = "") -> Array:
+    q = activation(dense(x, p[f"{prefix}wq"]),
+                   "batch", "seq", "heads", None)   # [B,S,H,hd]
+    k = activation(dense(x, p[f"{prefix}wk"]),
+                   "batch", "seq", "kv_heads", None)
+    v = activation(dense(x, p[f"{prefix}wv"]),
+                   "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[f"{prefix}q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p[f"{prefix}k_norm"], cfg.norm_eps)
+    q, k = _rope_q_k(cfg, q, k, positions)
+    out = chunked_attention(q, k, v, causal=causal, kv_chunk=kv_chunk)
+    return jnp.einsum("bshd,hdq->bsq", out, p[f"{prefix}wo"]).astype(x.dtype)
+
+
+def gqa_decode(p: dict[str, Array], cfg: ModelConfig, x: Array,
+               cache: dict[str, Array], positions: Array,
+               cache_len: Array | None, prefix: str = ""
+               ) -> tuple[Array, dict[str, Array]]:
+    """Single-token attention with cache insert.  x [B,1,d]."""
+    b = x.shape[0]
+    q = dense(x, p[f"{prefix}wq"])
+    k = dense(x, p[f"{prefix}wk"])
+    v = dense(x, p[f"{prefix}wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p[f"{prefix}q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p[f"{prefix}k_norm"], cfg.norm_eps)
+    q, k = _rope_q_k(cfg, q, k, positions)
+    t = cache["k"].shape[1]
+    idx = (cache_len if cache_len is not None
+           else jnp.full((b,), t - 1, jnp.int32))
+    bidx = jnp.arange(b)
+    kc = cache["k"].at[bidx, idx].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, idx].set(v[:, 0].astype(cache["v"].dtype))
+    out = decode_attention(q, kc, vc,
+                           cache_len=idx + 1 if cache_len is not None else None)
+    y = jnp.einsum("bshd,hdq->bsq", out, p[f"{prefix}wo"]).astype(x.dtype)
+    return y, {"k": kc, "v": vc}
+
+
+def dense_ffn(p: dict[str, Array], cfg: ModelConfig, x: Array) -> Array:
+    if cfg.ffn_act == "swiglu":
+        h = swiglu(dense(x, p["w_gate"]), dense(x, p["w_up"]))
+    else:
+        h = jax.nn.gelu(dense(x, p["w_up"]))
+    return dense(h, p["w_down"])
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, seq: int, dtype: Any,
+                    layers: int | None = None) -> dict[str, Array]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, seq, kv, hd)
+    if layers is not None:
+        shape = (layers,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

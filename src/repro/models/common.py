@@ -1,0 +1,139 @@
+"""Parameter-spec system and common layers.
+
+A model is declared as a pytree of ParamSpec (shape + logical axes + init).
+From the single spec tree we derive, without duplication:
+  * materialized parameters           (init_params)
+  * ShapeDtypeStructs for the dry-run (abstract_params — never allocates)
+  * NamedShardings                     (specs_to_shardings)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import logical_to_spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float = 1.0          # multiplier on the fan-in init
+    dtype: str | None = None    # None = model dtype (caches may pin f32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, key: Array, dtype: jnp.dtype) -> Any:
+    """Materialize a spec tree into parameters (host-splittable rng)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: ParamSpec, k: Array) -> Array:
+        dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "embed":
+            return (jax.random.normal(k, spec.shape, jnp.float32)
+                    * spec.scale).astype(dt)
+        # fan-in scaled normal over the last contraction dim
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: Any, dtype: jnp.dtype) -> Any:
+    """ShapeDtypeStructs — for .lower() in the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype) if s.dtype else dtype),
+        specs, is_leaf=_is_spec,
+    )
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def specs_to_shardings(specs: Any, mesh: Mesh, mode: str) -> Any:
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_spec(s.axes, s.shape, mesh, mode)),
+        specs, is_leaf=_is_spec,
+    )
+
+
+def spec_param_count(specs: Any) -> int:
+    return sum(int(math.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+# -- layers -------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma + beta
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate) * up
+
+
+def dense(x: Array, w: Array) -> Array:
+    """x [..., d_in] @ w [d_in, ...out] with f32 accumulation."""
+    out_dims = w.ndim - 1
+    return jax.lax.dot_general(
+        x, w,
+        ((tuple(range(x.ndim - 1, x.ndim)), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype) if out_dims == 1 else _dense_multi(x, w)
+
+
+def _dense_multi(x: Array, w: Array) -> Array:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def cross_entropy(logits: Array, labels: Array, ignore: int = -100
+                  ) -> tuple[Array, Array]:
+    """Mean CE over non-ignored labels.  Returns (loss, token_count)."""
+    mask = labels != ignore
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), safe[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / n, n

@@ -1,0 +1,174 @@
+"""Encoder-decoder backbone (Seamless-M4T medium, [arXiv:2308.11596]).
+
+The modality frontend (speech encoder frontend / text tokenizer) is a STUB:
+``input_specs()`` supplies precomputed frame embeddings [B, F, d] — per the
+assignment, only the transformer backbone is modeled.  The encoder is
+bidirectional; the decoder is causal with cross-attention.  RoPE replaces
+Seamless' relative position bias (TPU-friendlier; recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.blocks import attn_specs, dense_ffn, ffn_specs, gqa_decode
+from repro.models.common import ParamSpec, dense, rms_norm
+from repro.models.lm import KV_CHUNK, _remat
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import ShardingCtx
+
+Array = jax.Array
+
+
+def encdec_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    enc: dict[str, ParamSpec] = {
+        "ln1": ParamSpec((cfg.enc_layers, d), (None, None), init="ones"),
+        "ln2": ParamSpec((cfg.enc_layers, d), (None, None), init="ones"),
+    }
+    enc.update(attn_specs(cfg, cfg.enc_layers))
+    enc.update(ffn_specs(cfg, cfg.enc_layers))
+
+    dec: dict[str, ParamSpec] = {
+        "ln1": ParamSpec((cfg.dec_layers, d), (None, None), init="ones"),
+        "ln_x": ParamSpec((cfg.dec_layers, d), (None, None), init="ones"),
+        "ln2": ParamSpec((cfg.dec_layers, d), (None, None), init="ones"),
+    }
+    dec.update(attn_specs(cfg, cfg.dec_layers))
+    dec.update(attn_specs(cfg, cfg.dec_layers, prefix="x_"))
+    dec.update(ffn_specs(cfg, cfg.dec_layers))
+
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed",
+                           scale=0.02),
+        "enc_norm": ParamSpec((d,), (None,), init="ones"),
+        "final_norm": ParamSpec((d,), (None,), init="ones"),
+        "unembed": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _self_attn(cfg: ModelConfig, p, x, positions, causal, prefix=""):
+    q = dense(x, p[f"{prefix}wq"])
+    k = dense(x, p[f"{prefix}wk"])
+    v = dense(x, p[f"{prefix}wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, kv_chunk=KV_CHUNK)
+    return jnp.einsum("bshd,hdq->bsq", out, p[f"{prefix}wo"]).astype(x.dtype)
+
+
+def _cross_attn(cfg: ModelConfig, p, x, enc_out):
+    q = dense(x, p["x_wq"])
+    k = dense(enc_out, p["x_wk"])
+    v = dense(enc_out, p["x_wv"])
+    out = chunked_attention(q, k, v, causal=False, kv_chunk=KV_CHUNK)
+    return jnp.einsum("bshd,hdq->bsq", out, p["x_wo"]).astype(x.dtype)
+
+
+def encode(cfg: ModelConfig, params, frames: Array,
+           ctx: ShardingCtx = ShardingCtx()) -> Array:
+    """frames [B, F, d] (stub frontend embeddings) -> [B, F, d]."""
+    b, f, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    def body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _self_attn(cfg, lp, h, positions, causal=False)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + dense_ffn(lp, cfg, h2), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), frames, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens: Array, enc_out: Array,
+                 ctx: ShardingCtx = ShardingCtx()) -> Array:
+    """Teacher-forced decoder.  tokens [B, S] -> hidden [B, S, d]."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _self_attn(cfg, lp, h, positions, causal=True)
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        x = x + _cross_attn(cfg, lp, hx, enc_out)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + dense_ffn(lp, cfg, h2), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["decoder"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(cfg: ModelConfig, params, batch,
+                ctx: ShardingCtx = ShardingCtx()
+                ) -> tuple[Array, dict[str, Array]]:
+    from repro.models.lm import chunked_ce
+
+    enc_out = encode(cfg, params, batch["frames"], ctx)
+    x = decode_train(cfg, params, batch["tokens"], enc_out, ctx)
+    loss, tok = chunked_ce(cfg, x, params["unembed"], batch["labels"])
+    return loss, {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32),
+                  "tokens": tok}
+
+
+def encdec_state_specs(cfg: ModelConfig, batch: int, seq: int
+                       ) -> dict[str, Any]:
+    """Self-attn cache + precomputed cross K/V (encoder ran at prefill)."""
+    kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.dec_layers
+    f = cfg.num_frames
+    c = ("batch", "cache_seq", "cache_heads", None)
+    return {
+        "self": {
+            "k": ParamSpec((L, batch, seq, kv, hd), (None,) + c, init="zeros"),
+            "v": ParamSpec((L, batch, seq, kv, hd), (None,) + c, init="zeros"),
+        },
+        "cross": {
+            "k": ParamSpec((L, batch, f, kv, hd),
+                           (None, "batch", None, "cache_heads", None),
+                           init="zeros"),
+            "v": ParamSpec((L, batch, f, kv, hd),
+                           (None, "batch", None, "cache_heads", None),
+                           init="zeros"),
+        },
+    }
+
+
+def encdec_decode_step(cfg: ModelConfig, params, state, batch,
+                       ctx: ShardingCtx = ShardingCtx()
+                       ) -> tuple[Array, dict[str, Any]]:
+    """One decoder token against self cache + fixed cross K/V."""
+    x = jnp.take(params["embed"], batch["token"], axis=0)   # [B,1,d]
+    cache_len = batch.get("cache_len")
+    positions = (batch.get("positions") if batch.get("positions") is not None
+                 else cache_len[:, None])
+
+    def body(carry, inp):
+        lp, self_c, cross_k, cross_v = inp
+        x = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn, self_c = gqa_decode(lp, cfg, h, self_c, positions, cache_len)
+        x = x + attn
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q = dense(hx, lp["x_wq"])
+        out = decode_attention(q, cross_k, cross_v)
+        x = x + jnp.einsum("bshd,hdq->bsq", out, lp["x_wo"]).astype(x.dtype)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + dense_ffn(lp, cfg, h2), self_c
+
+    x, new_self = jax.lax.scan(
+        body, x,
+        (params["decoder"], state["self"], state["cross"]["k"],
+         state["cross"]["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x[:, 0], params["unembed"])
+    return logits, {"self": new_self, "cross": state["cross"]}

@@ -1,0 +1,516 @@
+"""Unified decoder-only LM over ModelConfig: dense / MoE / MLA / SSM /
+hybrid (Zamba2) / VLM (Qwen2-VL backbone).
+
+Single source of truth per architecture:
+  model_specs(cfg)        -> ParamSpec pytree (init, shardings, dry-run)
+  forward(cfg, p, batch)  -> [B, S, vocab] logits (or chunked loss directly)
+  loss_fn(...)            -> scalar CE (+ MoE aux), seq-chunked so the full
+                             [B, S, V] logits tensor never materializes
+  decode_state_specs(cfg) -> cache/state ParamSpec pytree
+  decode_step(...)        -> one-token serve step over the cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models import mla
+from repro.models import moe as moe_mod
+from repro.models.blocks import (
+    attn_specs,
+    block_specs,
+    dense_ffn,
+    ffn_specs,
+    gqa_attention,
+    gqa_decode,
+)
+from repro.models.common import (
+    ParamSpec,
+    cross_entropy,
+    dense,
+    rms_norm,
+    spec_param_count,
+)
+from repro.parallel.sharding import ShardingCtx, activation
+
+Array = jax.Array
+
+LOSS_CHUNK = 1024         # seq tokens per unembed/CE chunk
+KV_CHUNK = 1024           # flash attention KV block
+
+
+# -- specs -----------------------------------------------------------------
+
+
+def _layer_specs(cfg: ModelConfig, L: int, moe_layer: bool) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    s: dict[str, ParamSpec] = {
+        "ln1": ParamSpec((L, d), (None, None), init="ones")}
+    if cfg.attn_kind == "mla":
+        s.update(mla.mla_specs(cfg, L))
+    else:
+        s.update(attn_specs(cfg, L))
+    if not cfg.parallel_block:
+        s["ln2"] = ParamSpec((L, d), (None, None), init="ones")
+    if moe_layer:
+        s.update(moe_mod.moe_specs(cfg, L))
+    else:
+        s.update(ffn_specs(cfg, L))
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed",
+                           scale=0.02),
+        "final_norm": ParamSpec((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"),
+                                     scale=1.0)
+
+    if cfg.family in ("dense", "vlm"):
+        specs["layers"] = _layer_specs(cfg, cfg.num_layers, moe_layer=False)
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            specs["dense_layers"] = _layer_specs(cfg, nd, moe_layer=False)
+        specs["layers"] = _layer_specs(cfg, cfg.num_layers - nd,
+                                       moe_layer=True)
+    elif cfg.family == "ssm":
+        specs["layers"] = m2.mamba2_specs(cfg, cfg.num_layers)
+    elif cfg.family == "hybrid":
+        n_groups, per_group, tail = _hybrid_shape(cfg)
+        group_specs = m2.mamba2_specs(cfg, per_group)
+        specs["groups"] = jax.tree.map(
+            lambda s: ParamSpec((n_groups,) + s.shape, (None,) + s.axes,
+                                init=s.init, scale=s.scale, dtype=s.dtype),
+            group_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        if tail:
+            specs["tail"] = m2.mamba2_specs(cfg, tail)
+        # one shared attention block + per-invocation q-LoRA adapters
+        shared = _layer_specs(cfg, 1, moe_layer=False)
+        specs["shared_attn"] = shared
+        r = cfg.shared_attn_lora
+        if r:
+            specs["shared_lora_a"] = ParamSpec(
+                (n_groups, d, r), (None, "embed", "lora"))
+            specs["shared_lora_b"] = ParamSpec(
+                (n_groups, r, d), (None, "lora", None), init="zeros")
+    else:
+        raise ValueError(f"model_specs: family {cfg.family} (encdec lives in"
+                         " models/encdec.py)")
+    return specs
+
+
+def _hybrid_shape(cfg: ModelConfig) -> tuple[int, int, int]:
+    per = cfg.shared_attn_every
+    n_groups = cfg.num_layers // per
+    tail = cfg.num_layers - n_groups * per
+    return n_groups, per, tail
+
+
+# -- forward ------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def _block_forward(cfg: ModelConfig, p: dict[str, Array], x: Array,
+                   positions: Array, ctx: ShardingCtx, moe_layer: bool
+                   ) -> tuple[Array, Array]:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        attn = mla.mla_prefill(p, cfg, h, positions, kv_chunk=KV_CHUNK)
+    else:
+        attn = gqa_attention(p, cfg, h, positions, kv_chunk=KV_CHUNK)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        f = dense_ffn(p, cfg, h)
+        return x + attn + f, aux
+    x = x + attn
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe_layer:
+        f, aux = moe_mod.moe_ffn(ctx, cfg, p, h2)
+    else:
+        f = dense_ffn(p, cfg, h2)
+    return x + f, aux
+
+
+def _scan_blocks(cfg: ModelConfig, stacked: dict[str, Array], x: Array,
+                 positions: Array, ctx: ShardingCtx, moe_layer: bool
+                 ) -> tuple[Array, Array]:
+    def body(carry, lp):
+        y, aux = _block_forward(cfg, lp, carry, positions, ctx, moe_layer)
+        return activation(y, "batch", "seq", None), aux
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body, x, stacked)
+        return x, jnp.sum(auxs)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(n):
+        lp = jax.tree.map(lambda t: t[i], stacked)
+        x, aux = body(x, lp)
+        aux_total += aux
+    return x, aux_total
+
+
+def _scan_mamba(cfg: ModelConfig, stacked: dict[str, Array], x: Array
+                ) -> Array:
+    def body(carry, lp):  # pre-norm residual mamba block
+        h = rms_norm(carry, lp["norm_in"], cfg.norm_eps)
+        return carry + m2.mamba2_forward(lp, cfg, h), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _hybrid_forward(cfg: ModelConfig, params: dict[str, Any], x: Array,
+                    positions: Array, ctx: ShardingCtx) -> Array:
+    n_groups, per, tail = _hybrid_shape(cfg)
+
+    def superblock(carry, inp):
+        gp, lora_a, lora_b = inp
+        x = carry
+        # shared attention block (weights broadcast, q-LoRA per invocation)
+        sp = jax.tree.map(lambda t: t[0], params["shared_attn"])
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        attn = gqa_attention(sp, cfg, h, positions, kv_chunk=KV_CHUNK)
+        if cfg.shared_attn_lora:
+            dq = dense(dense(h, lora_a), lora_b)
+            attn = attn + dq
+        x = x + attn
+        h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + dense_ffn(sp, cfg, h2)
+        # inner mamba stack
+        def inner(c, lp):
+            hh = rms_norm(c, lp["norm_in"], cfg.norm_eps)
+            return c + m2.mamba2_forward(lp, cfg, hh), None
+        x, _ = jax.lax.scan(_remat(inner, cfg), x, gp)
+        return x, None
+
+    lora_a = params.get("shared_lora_a")
+    lora_b = params.get("shared_lora_b")
+    if lora_a is None:
+        lora_a = jnp.zeros((n_groups, cfg.d_model, 1), x.dtype)
+        lora_b = jnp.zeros((n_groups, 1, cfg.d_model), x.dtype)
+    x, _ = jax.lax.scan(superblock, x, (params["groups"], lora_a, lora_b))
+    if tail:
+        def inner(c, lp):
+            hh = rms_norm(c, lp["norm_in"], cfg.norm_eps)
+            return c + m2.mamba2_forward(lp, cfg, hh), None
+        x, _ = jax.lax.scan(_remat(inner, cfg), x, params["tail"])
+    return x
+
+
+def embed_tokens(cfg: ModelConfig, params: dict[str, Any], batch
+                 ) -> Array:
+    x = activation(jnp.take(params["embed"], batch["tokens"], axis=0),
+                   "batch", "seq", None)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        b = x.shape[0]
+        bidx = jnp.arange(b)[:, None]
+        x = x.at[bidx, batch["vision_pos"]].set(
+            batch["vision_embeds"].astype(x.dtype))
+    return x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype) \
+        if cfg.tie_embeddings else x
+
+
+def backbone(cfg: ModelConfig, params: dict[str, Any], batch,
+             ctx: ShardingCtx) -> tuple[Array, Array]:
+    """Token embed -> final norm.  Returns (hidden [B,S,d], moe aux)."""
+    x = embed_tokens(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm"):
+        x, aux = _scan_blocks(cfg, params["layers"], x, positions, ctx, False)
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            x, _ = _scan_blocks(cfg, params["dense_layers"], x, positions,
+                                ctx, False)
+        x, aux = _scan_blocks(cfg, params["layers"], x, positions, ctx, True)
+    elif cfg.family == "ssm":
+        x = _scan_mamba(cfg, params["layers"], x)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, ctx)
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _unembed_matrix(cfg: ModelConfig, params: dict[str, Any]) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def forward(cfg: ModelConfig, params: dict[str, Any], batch,
+            ctx: ShardingCtx = ShardingCtx()) -> Array:
+    """Full logits (use loss_fn for training: it never materializes these)."""
+    x, _ = backbone(cfg, params, batch, ctx)
+    return dense(x, _unembed_matrix(cfg, params))
+
+
+def chunked_ce(cfg: ModelConfig, x: Array, w: Array, labels: Array
+               ) -> tuple[Array, Array]:
+    """Seq-chunked CE: logits chunks of [B, LOSS_CHUNK, V], never [B, S, V]."""
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    n = max(s // chunk, 1)
+    chunk = s // n
+
+    def ce_chunk(carry, inp):
+        xc, yc = inp                          # [B, C, d], [B, C]
+        logits = dense(xc, w)
+        nll_sum, cnt = _ce_sums(logits, yc)
+        loss_sum, tok = carry
+        return (loss_sum + nll_sum, tok + cnt), None
+
+    xc = activation(x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3),
+                    None, "batch", None, None)
+    yc = activation(labels.reshape(b, n, chunk).transpose(1, 0, 2),
+                    None, "batch", None)
+    (loss_sum, tok), _ = jax.lax.scan(
+        _remat(ce_chunk, cfg), (jnp.zeros((), jnp.float32),
+                                jnp.zeros((), jnp.int32)), (xc, yc))
+    return loss_sum / jnp.maximum(tok, 1), tok
+
+
+def loss_fn(cfg: ModelConfig, params: dict[str, Any], batch,
+            ctx: ShardingCtx = ShardingCtx(),
+            aux_weight: float = 0.01) -> tuple[Array, dict[str, Array]]:
+    x, aux = backbone(cfg, params, batch, ctx)
+    loss, tok = chunked_ce(cfg, x, _unembed_matrix(cfg, params),
+                           batch["labels"])
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "moe_aux": aux, "tokens": tok}
+
+
+def _ce_sums(logits: Array, labels: Array, ignore: int = -100
+             ) -> tuple[Array, Array]:
+    mask = labels != ignore
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), safe[..., None], axis=-1)[..., 0]
+    return ((logz - picked) * mask).sum(), mask.sum().astype(jnp.int32)
+
+
+# -- decode ---------------------------------------------------------------------
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq: int
+                       ) -> dict[str, Any]:
+    """Cache/state ParamSpec tree for serve_step (shardable, abstractable)."""
+    def kv_cache(layers: int | None) -> dict[str, ParamSpec]:
+        if cfg.attn_kind == "mla":
+            shp = lambda d: ((layers,) if layers else ()) + (batch, seq, d)
+            axes = lambda: ((None,) if layers else ()) + (
+                "batch", "cache_seq", None)
+            return {
+                "c_kv": ParamSpec(shp(cfg.kv_lora), axes()),
+                "k_rope": ParamSpec(shp(cfg.qk_rope_dim), axes()),
+            }
+        shp = ((layers,) if layers else ()) + (
+            batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        axes = ((None,) if layers else ()) + (
+            "batch", "cache_seq", "cache_heads", None)
+        return {"k": ParamSpec(shp, axes, init="zeros"),
+                "v": ParamSpec(shp, axes, init="zeros")}
+
+    def ssm_state(lead: tuple[int, ...]) -> dict[str, ParamSpec]:
+        h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+        gn = cfg.ssm_ngroups * cfg.d_state
+        k = cfg.d_conv
+        la = (None,) * len(lead)
+        return {
+            "ssm": ParamSpec(lead + (batch, h, pdim, n),
+                             la + ("batch", "cache_heads", None, None),
+                             init="zeros", dtype="float32"),
+            "conv_x": ParamSpec(lead + (batch, k - 1, cfg.d_inner),
+                                la + ("batch", None, "ssm_inner"),
+                                init="zeros"),
+            "conv_B": ParamSpec(lead + (batch, k - 1, gn),
+                                la + ("batch", None, None), init="zeros"),
+            "conv_C": ParamSpec(lead + (batch, k - 1, gn),
+                                la + ("batch", None, None), init="zeros"),
+        }
+
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": kv_cache(cfg.num_layers)}
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        out: dict[str, Any] = {"layers": kv_cache(cfg.num_layers - nd)}
+        if nd:
+            out["dense_layers"] = kv_cache(nd)
+        return out
+    if cfg.family == "ssm":
+        return {"layers": ssm_state((cfg.num_layers,))}
+    if cfg.family == "hybrid":
+        n_groups, per, tail = _hybrid_shape(cfg)
+        out = {
+            "groups": ssm_state((n_groups, per)),
+            "shared": kv_cache(n_groups),
+        }
+        if tail:
+            out["tail"] = ssm_state((tail,))
+        return out
+    raise ValueError(cfg.family)
+
+
+def _block_decode(cfg: ModelConfig, p, x, cache, positions, cache_len,
+                  ctx: ShardingCtx, moe_layer: bool):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        attn, cache = mla.mla_decode(p, cfg, h, cache, positions, cache_len)
+    else:
+        attn, cache = gqa_decode(p, cfg, h, cache, positions, cache_len)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        f = dense_ffn(p, cfg, h)
+        return x + attn + f, cache
+    x = x + attn
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe_layer:
+        f, aux = moe_mod.moe_ffn(ctx, cfg, p, h2)
+    else:
+        f = dense_ffn(p, cfg, h2)
+    return x + f, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict[str, Any],
+                state: dict[str, Any], batch,
+                ctx: ShardingCtx = ShardingCtx()
+                ) -> tuple[Array, dict[str, Any]]:
+    """One-token decode.  batch: {"token": [B,1], "cache_len": [B],
+    "positions": [B,1] or [3,B,1]}.  Returns (logits [B, vocab], new state).
+    """
+    x = jnp.take(params["embed"], batch["token"], axis=0)   # [B,1,d]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = batch["cache_len"][:, None]
+    cache_len = batch.get("cache_len")
+    new_state: dict[str, Any] = {}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            def body_d(carry, inp):
+                lp, lc = inp
+                y, c = _block_decode(cfg, lp, carry, lc, positions,
+                                     cache_len, ctx, False)
+                return y, c
+            x, new_dc = jax.lax.scan(
+                body_d, x, (params["dense_layers"], state["dense_layers"]))
+            new_state["dense_layers"] = new_dc
+
+        moe_layer = cfg.family == "moe"
+
+        def body(carry, inp):
+            lp, lc = inp
+            y, c = _block_decode(cfg, lp, carry, lc, positions, cache_len,
+                                 ctx, moe_layer)
+            return y, c
+
+        x, new_c = jax.lax.scan(body, x, (params["layers"], state["layers"]))
+        new_state["layers"] = new_c
+
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            lp, lc = inp
+            hh = rms_norm(carry, lp["norm_in"], cfg.norm_eps)
+            y, c = m2.mamba2_decode(lp, cfg, hh, lc)
+            return carry + y, c
+
+        x, new_c = jax.lax.scan(body, x, (params["layers"], state["layers"]))
+        new_state["layers"] = new_c
+
+    elif cfg.family == "hybrid":
+        n_groups, per, tail = _hybrid_shape(cfg)
+        lora_a = params.get("shared_lora_a")
+        lora_b = params.get("shared_lora_b")
+        if lora_a is None:
+            lora_a = jnp.zeros((n_groups, cfg.d_model, 1), x.dtype)
+            lora_b = jnp.zeros((n_groups, 1, cfg.d_model), x.dtype)
+        sp = jax.tree.map(lambda t: t[0], params["shared_attn"])
+
+        def superblock(carry, inp):
+            gp, la, lb, shared_c, group_c = inp
+            x = carry
+            h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            attn, shared_c = gqa_decode(sp, cfg, h, shared_c, positions,
+                                        cache_len)
+            attn = attn + dense(dense(h, la), lb)
+            x = x + attn
+            h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + dense_ffn(sp, cfg, h2)
+
+            def inner(c, inp2):
+                lp, lc = inp2
+                hh = rms_norm(c, lp["norm_in"], cfg.norm_eps)
+                y, lc = m2.mamba2_decode(lp, cfg, hh, lc)
+                return c + y, lc
+
+            x, group_c = jax.lax.scan(inner, x, (gp, group_c))
+            return x, (shared_c, group_c)
+
+        x, (new_shared, new_groups) = jax.lax.scan(
+            superblock, x,
+            (params["groups"], lora_a, lora_b, state["shared"],
+             state["groups"]))
+        new_state["shared"] = new_shared
+        new_state["groups"] = new_groups
+        if tail:
+            def inner(c, inp2):
+                lp, lc = inp2
+                hh = rms_norm(c, lp["norm_in"], cfg.norm_eps)
+                y, lc = m2.mamba2_decode(lp, cfg, hh, lc)
+                return c + y, lc
+            x, new_tail = jax.lax.scan(inner, x,
+                                       (params["tail"], state["tail"]))
+            new_state["tail"] = new_tail
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x[:, 0], _unembed_matrix(cfg, params))
+    return logits, new_state
+
+
+# -- param counting ---------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    if cfg.family == "encdec":
+        from repro.models.encdec import encdec_specs
+
+        return spec_param_count(encdec_specs(cfg))
+    specs = model_specs(cfg)
+    total = spec_param_count(specs)
+    if cfg.moe:
+        e_pad = moe_mod.padded_experts(cfg)
+        n_moe_layers = cfg.num_layers - cfg.first_dense_layers
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        total -= n_moe_layers * per_expert * (e_pad - cfg.n_experts)  # padding
+        if active_only:
+            total -= n_moe_layers * per_expert * (cfg.n_experts - cfg.top_k)
+    return total

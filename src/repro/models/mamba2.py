@@ -1,0 +1,224 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill: the chunked SSD algorithm — intra-chunk "attention-like"
+quadratic term + inter-chunk linear state recurrence (lax.scan over chunks).
+This is the exact blocking a TPU Pallas SSD kernel uses; expressed in jnp so
+the multi-pod dry-run lowers everywhere.
+
+Decode: O(1) recurrent state update — the reason ``long_500k`` runs for the
+SSM/hybrid archs: the "cache" is a fixed-size [B, H, P, N] state plus a
+[B, k-1, channels] conv window, independent of context length.
+
+TP sharding: d_inner (= heads x headdim) is sharded over 'model'; the B/C
+group projections (G*N small) stay replicated; out_proj is row-parallel.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, dense, rms_norm
+from repro.parallel.sharding import activation
+
+Array = jax.Array
+
+
+def mamba2_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    din = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.d_state
+    h = cfg.ssm_heads
+    k = cfg.d_conv
+    return {
+        "norm_in": ParamSpec((L, d), (None, None), init="ones"),
+        "wz": ParamSpec((L, d, din), (None, "embed", "ssm_inner")),
+        "wx": ParamSpec((L, d, din), (None, "embed", "ssm_inner")),
+        "wB": ParamSpec((L, d, gn), (None, "embed", None)),
+        "wC": ParamSpec((L, d, gn), (None, "embed", None)),
+        "wdt": ParamSpec((L, d, h), (None, "embed", None)),
+        "conv_x_w": ParamSpec((L, k, din), (None, "conv", "ssm_inner"),
+                              scale=0.5),
+        "conv_x_b": ParamSpec((L, din), (None, "ssm_inner"), init="zeros"),
+        "conv_B_w": ParamSpec((L, k, gn), (None, "conv", None), scale=0.5),
+        "conv_B_b": ParamSpec((L, gn), (None, None), init="zeros"),
+        "conv_C_w": ParamSpec((L, k, gn), (None, "conv", None), scale=0.5),
+        "conv_C_b": ParamSpec((L, gn), (None, None), init="zeros"),
+        "A_log": ParamSpec((L, h), (None, None), init="zeros"),
+        "D": ParamSpec((L, h), (None, None), init="ones"),
+        "dt_bias": ParamSpec((L, h), (None, None), init="zeros"),
+        "norm_g": ParamSpec((L, din), (None, "ssm_inner"), init="ones"),
+        "wo": ParamSpec((L, din, d), (None, "ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over seq.  x [B,S,C], w [K,C], b [C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _conv_step(state: Array, new: Array, w: Array, b: Array
+               ) -> tuple[Array, Array]:
+    """Single-token conv.  state [B,K-1,C], new [B,C] -> (out [B,C], state')."""
+    k = w.shape[0]
+    window = jnp.concatenate([state, new[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def _project(p: dict[str, Array], cfg: ModelConfig, x: Array
+             ) -> tuple[Array, Array, Array, Array, Array]:
+    """x [B,S,d] -> (z, xs, B_, C_, dt) pre-conv, pre-activation."""
+    z = dense(x, p["wz"])
+    xs = dense(x, p["wx"])
+    b_ = dense(x, p["wB"])
+    c_ = dense(x, p["wC"])
+    dt = dense(x, p["wdt"]).astype(jnp.float32)
+    return z, xs, b_, c_, dt
+
+
+def ssd_chunked(
+    xh: Array,     # [B, S, H, P] conv'd+SiLU'd inputs, head-split
+    dt: Array,     # [B, S, H] post-softplus
+    a_log: Array,  # [H]
+    b_: Array,     # [B, S, G, N]
+    c_: Array,     # [B, S, G, N]
+    d_skip: Array, # [H]
+    chunk: int,
+) -> Array:
+    """Chunked state-space-duality scan.  Returns y [B, S, H, P]."""
+    bsz, s, h, pdim = xh.shape
+    g = b_.shape[2]
+    rep = h // g
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    assert s % chunk == 0
+
+    a = -jnp.exp(a_log.astype(jnp.float32))              # [H] negative
+    da = dt * a[None, None, :]                           # [B,S,H]
+
+    def rs(t, last):  # reshape to chunks
+        return t.reshape((bsz, n_chunks, chunk) + last)
+
+    xc = activation(rs(xh.astype(jnp.float32), (h, pdim)),
+                    "batch", None, "seq", "ssm_heads", None)
+    dtc = rs(dt, (h,))
+    dac = rs(da, (h,))
+    bc = jnp.repeat(rs(b_.astype(jnp.float32), (g, cdim := b_.shape[-1])),
+                    rep, axis=3)                          # [B,c,Q,H,N]
+    cc = jnp.repeat(rs(c_.astype(jnp.float32), (g, cdim)), rep, axis=3)
+
+    csum = jnp.cumsum(dac, axis=2)                        # [B,c,Q,H]
+    total = csum[:, :, -1, :]                             # [B,c,H]
+
+    # intra-chunk quadratic term
+    seg = csum[:, :, :, None, :] - csum[:, :, None, :, :]  # [B,c,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", cc, bc)          # [B,c,Qi,Qj,H]
+    att = cb * decay * dtc[:, :, None, :, :]               # weight by dt_j
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xc)
+
+    # chunk boundary states
+    decay_to_end = jnp.exp(total[:, :, None, :] - csum)    # [B,c,Q,H]
+    xb = jnp.einsum("bckhn,bckh,bckhp->bchpn", bc,
+                    dtc * decay_to_end, xc)                # [B,c,H,P,N]
+
+    def scan_fn(state, inp):
+        tot_c, xb_c = inp                                   # [B,H], [B,H,P,N]
+        out = state
+        state = activation(
+            state * jnp.exp(tot_c)[:, :, None, None] + xb_c,
+            "batch", "ssm_heads", None, None)
+        return state, out
+
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        activation(jnp.zeros((bsz, h, pdim, b_.shape[-1]), jnp.float32),
+                   "batch", "ssm_heads", None, None),
+        (total.transpose(1, 0, 2), xb.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # [B,c,H,P,N]
+
+    y_inter = jnp.einsum(
+        "bcqhn,bcqh,bchpn->bcqhp", cc, jnp.exp(csum), prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)
+    return y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+
+
+def mamba2_forward(p: dict[str, Array], cfg: ModelConfig, x: Array) -> Array:
+    """Full-sequence Mamba2 block.  x [B,S,d] -> [B,S,d]."""
+    bsz, s, d = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+    z, xs, b_, c_, dt = _project(p, cfg, x)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x_w"], p["conv_x_b"]))
+    b_ = jax.nn.silu(_causal_conv(b_, p["conv_B_w"], p["conv_B_b"]))
+    c_ = jax.nn.silu(_causal_conv(c_, p["conv_C_w"], p["conv_C_b"]))
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None].astype(jnp.float32))
+
+    xh = activation(xs.reshape(bsz, s, h, pdim),
+                    "batch", "seq", "ssm_heads", None)
+    bg = b_.reshape(bsz, s, cfg.ssm_ngroups, n)
+    cg = c_.reshape(bsz, s, cfg.ssm_ngroups, n)
+    y = ssd_chunked(xh, dt, p["A_log"], bg, cg, p["D"], cfg.ssd_chunk)
+    y = y.reshape(bsz, s, h * pdim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return dense(y, p["wo"])
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype: Any
+                      ) -> dict[str, Array]:
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+    gn = cfg.ssm_ngroups * cfg.d_state
+    k = cfg.d_conv
+    return {
+        "ssm": jnp.zeros((batch, h, pdim, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, gn), dtype),
+    }
+
+
+def mamba2_decode(p: dict[str, Array], cfg: ModelConfig, x: Array,
+                  state: dict[str, Array]
+                  ) -> tuple[Array, dict[str, Array]]:
+    """Single-token recurrent step.  x [B,1,d]."""
+    bsz = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+    z, xs, b_, c_, dt = _project(p, cfg, x)
+    xs1, conv_x = _conv_step(state["conv_x"], xs[:, 0], p["conv_x_w"],
+                             p["conv_x_b"])
+    b1, conv_b = _conv_step(state["conv_B"], b_[:, 0], p["conv_B_w"],
+                            p["conv_B_b"])
+    c1, conv_c = _conv_step(state["conv_C"], c_[:, 0], p["conv_C_w"],
+                            p["conv_C_b"])
+    xs1 = jax.nn.silu(xs1).astype(jnp.float32)
+    b1 = jax.nn.silu(b1).astype(jnp.float32)
+    c1 = jax.nn.silu(c1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None].astype(jnp.float32))
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))          # [H]
+    xh = xs1.reshape(bsz, h, pdim)
+    rep = h // cfg.ssm_ngroups
+    bh = jnp.repeat(b1.reshape(bsz, cfg.ssm_ngroups, n), rep, axis=1)
+    ch = jnp.repeat(c1.reshape(bsz, cfg.ssm_ngroups, n), rep, axis=1)
+
+    decay = jnp.exp(dt1 * a[None])                        # [B,H]
+    ssm = (state["ssm"] * decay[:, :, None, None]
+           + jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh, bh))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, ch)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, h * pdim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return dense(y, p["wo"]), {
+        "ssm": ssm, "conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c,
+    }

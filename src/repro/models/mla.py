@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2 [arXiv:2405.04434]; MiniCPM3).
+
+Prefill: expand the latent KV into per-head K/V and run chunked-flash MHA.
+Decode: *absorbed* attention — the production trick: fold W_uk into the query
+and W_uv into the output so attention runs directly in the kv_lora latent
+space.  The KV cache stores only [c_kv (kv_lora) ; k_rope (qk_rope_dim)] per
+token — the MLA memory win (e.g. 576 vs 2x16x192 floats/token for DS-V2-Lite).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import chunked_attention
+from repro.models.common import ParamSpec, dense, rms_norm
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import activation
+
+Array = jax.Array
+
+
+def mla_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s: dict[str, ParamSpec] = {}
+    if cfg.q_lora:
+        s["wq_a"] = ParamSpec((L, d, cfg.q_lora), (None, "embed", "lora"))
+        s["q_norm"] = ParamSpec((L, cfg.q_lora), (None, None), init="ones")
+        s["wq_b"] = ParamSpec((L, cfg.q_lora, h, dn + dr),
+                              (None, "lora", "heads", "qk"))
+    else:
+        s["wq"] = ParamSpec((L, d, h, dn + dr), (None, "embed", "heads", "qk"))
+    s["wkv_a"] = ParamSpec((L, d, cfg.kv_lora + dr), (None, "embed", "lora"))
+    s["kv_norm"] = ParamSpec((L, cfg.kv_lora), (None, None), init="ones")
+    s["wkv_b"] = ParamSpec((L, cfg.kv_lora, h, dn + dv),
+                           (None, "lora", "heads", "qk"))
+    s["wo"] = ParamSpec((L, h, dv, d), (None, "heads", "qk", "embed"))
+    return s
+
+
+def _queries(p: dict[str, Array], cfg: ModelConfig, x: Array,
+             positions: Array) -> tuple[Array, Array]:
+    """-> (q_nope [B,S,H,dn], q_rope [B,S,H,dr])."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora:
+        ql = rms_norm(dense(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = dense(ql, p["wq_b"])
+    else:
+        q = dense(x, p["wq"])
+    q = activation(q, "batch", "seq", "heads", None)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _latent_kv(p: dict[str, Array], cfg: ModelConfig, x: Array,
+               positions: Array) -> tuple[Array, Array]:
+    """-> (c_kv [B,S,lora] normalized, k_rope [B,S,dr] rotated)."""
+    lora = cfg.kv_lora
+    ckv = dense(x, p["wkv_a"])
+    c_kv, k_rope = ckv[..., :lora], ckv[..., lora:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_prefill(p: dict[str, Array], cfg: ModelConfig, x: Array,
+                positions: Array, kv_chunk: int = 1024) -> Array:
+    """Full-sequence MLA via latent expansion + chunked flash."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qn, qr = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latent_kv(p, cfg, x, positions)
+
+    kv = activation(dense(c_kv, p["wkv_b"]),
+                    "batch", "seq", "heads", None)  # [B,S,H,dn+dv]
+    kn, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    scale = (dn + dr) ** -0.5
+    # chunked_attention supports distinct QK and V head dims natively — no
+    # V padding (EXPERIMENTS.md §Perf It.5: padding cost 1.5x on PV traffic)
+    out = chunked_attention(q, k, v, causal=True, kv_chunk=kv_chunk,
+                            scale=scale)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"]).astype(x.dtype)
+
+
+def mla_decode(p: dict[str, Array], cfg: ModelConfig, x: Array,
+               cache: dict[str, Array], positions: Array,
+               cache_len: Array | None = None) -> tuple[Array, dict[str, Array]]:
+    """Absorbed single-token decode against the latent cache.
+
+    cache: {"c_kv": [B,T,lora], "k_rope": [B,T,dr]};  x: [B,1,d].
+    """
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qn, qr = _queries(p, cfg, x, positions)         # [B,1,H,dn],[B,1,H,dr]
+    c_new, r_new = _latent_kv(p, cfg, x, positions)
+
+    # insert at cache_len (dry-run: static full cache, write at T-1)
+    t = cache["c_kv"].shape[1]
+    idx = (cache_len if cache_len is not None
+           else jnp.full((x.shape[0],), t - 1, jnp.int32))
+    bidx = jnp.arange(x.shape[0])
+    c_kv = cache["c_kv"].at[bidx, idx].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, idx].set(r_new[:, 0].astype(cache["k_rope"].dtype))
+
+    w_uk = p["wkv_b"][..., :dn]                     # [lora, H, dn]
+    w_uv = p["wkv_b"][..., dn:]                     # [lora, H, dv]
+    q_lat = jnp.einsum("bshn,lhn->bshl", qn, w_uk)  # [B,1,H,lora]
+
+    scale = (dn + dr) ** -0.5
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshr,btr->bhst", qr, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale                                        # [B,H,1,T]
+    if cache_len is not None:
+        live = jnp.arange(t)[None] <= idx[:, None]
+        logits = jnp.where(live[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", probs,
+                         c_kv.astype(jnp.float32))   # [B,1,H,lora]
+    out = jnp.einsum("bshl,lhv->bshv", ctx_lat.astype(x.dtype), w_uv)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"]).astype(x.dtype)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts FFN with expert parallelism (Qwen1.5-MoE, DeepSeek-V2).
+
+Capacity-based scatter dispatch (NOT the GShard one-hot dispatch einsum: that
+is O(S^2 * k * cf * d) per token group and dominates compiled FLOPs — see
+EXPERIMENTS.md §Perf for the measurement).
+
+EP layout: experts are sharded over the 'model' mesh axis; activations are
+batch-sharded over ('pod','data') and *replicated* across 'model' (the same
+layout every TP layer already uses, so dispatch needs NO extra all-gather).
+Each model shard routes its token block against the experts it owns, padded
+to per-expert capacity, runs the expert FFN as one batched matmul, and a
+single psum over 'model' assembles token outputs — the identical collective
+pattern to a row-parallel dense FFN.
+
+Implemented as a shard-local function wrapped in jax.shard_map (the mesh-less
+call runs the same function with one shard — single source of truth for
+tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, dense, swiglu
+from repro.parallel.sharding import RULES, ShardingCtx
+
+Array = jax.Array
+
+#: experts are padded so every supported model-axis size divides the count
+EXPERT_PAD_TO = 16
+
+
+def padded_experts(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.n_experts / EXPERT_PAD_TO) * EXPERT_PAD_TO
+
+
+def moe_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    e = padded_experts(cfg)
+    f = cfg.moe_d_ff
+    s = {
+        "router": ParamSpec((L, d, cfg.n_experts), (None, "embed", None),
+                            scale=0.1),
+        "w_gate": ParamSpec((L, e, d, f), (None, "experts", "embed", "moe_ff")),
+        "w_up": ParamSpec((L, e, d, f), (None, "experts", "embed", "moe_ff")),
+        "w_down": ParamSpec((L, e, f, d), (None, "experts", "moe_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.shared_d_ff
+        s["ws_gate"] = ParamSpec((L, d, fs), (None, "embed", "ff"))
+        s["ws_up"] = ParamSpec((L, d, fs), (None, "embed", "ff"))
+        s["ws_down"] = ParamSpec((L, fs, d), (None, "ff", "embed"))
+    return s
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    e = padded_experts(cfg)
+    c = math.ceil(tokens * cfg.top_k * cfg.capacity_factor / e)
+    return max(8, math.ceil(c / 8) * 8)
+
+
+def _moe_local(
+    x: Array,            # [Tl, d]  this shard's tokens
+    router: Array,       # [d, E_real]  replicated
+    w_gate: Array,       # [El, d, f]   this shard's experts
+    w_up: Array,
+    w_down: Array,       # [El, f, d]
+    *,
+    cfg: ModelConfig,
+    e0: Array | int,     # first owned expert id
+    n_shards: int,
+) -> tuple[Array, Array]:
+    """Shard-local capacity routing + expert FFN.  Returns (y, aux_loss)."""
+    tl, d = x.shape
+    el = w_gate.shape[0]
+    e_pad = el * n_shards
+    cap = _capacity(tl, cfg)
+
+    logits = dense(x, router).astype(jnp.float32)           # [Tl, E_real]
+    if e_pad > cfg.n_experts:                                # mask pad experts
+        logits = jnp.pad(logits, ((0, 0), (0, e_pad - cfg.n_experts)),
+                         constant_values=-1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)             # [Tl, k]
+    if cfg.router_scale:
+        gates = gates / jnp.maximum(
+            gates.sum(axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss (over real experts).
+    density = jnp.mean(
+        (ids[..., None] == jnp.arange(e_pad)[None, None]).any(axis=1)
+        .astype(jnp.float32), axis=0)                        # [E]
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * mean_prob) * cfg.n_experts
+
+    # dispatch: tokens -> [El, cap, d] buffers for owned experts
+    buf = jnp.zeros((el * cap, d), x.dtype)
+    keeps, slots = [], []
+    counts = jnp.zeros((el,), jnp.int32)
+    for slot in range(cfg.top_k):
+        eid = ids[:, slot]
+        lid = eid - e0                                        # local expert id
+        own = (lid >= 0) & (lid < el)
+        lid = jnp.clip(lid, 0, el - 1)
+        oh = jax.nn.one_hot(lid, el, dtype=jnp.int32) * own[:, None]
+        pos = counts[None, :] + jnp.cumsum(oh, axis=0) - oh   # pre-increment
+        pos = jnp.sum(pos * oh, axis=1)                       # [Tl]
+        counts = counts + oh.sum(axis=0)
+        keep = own & (pos < cap)
+        slot_idx = jnp.where(keep, lid * cap + pos, el * cap)  # OOB drop
+        buf = buf.at[slot_idx].add(
+            jnp.where(keep[:, None], x, 0), mode="drop",
+            indices_are_sorted=False, unique_indices=False)
+        keeps.append(keep)
+        slots.append(slot_idx)
+
+    eb = buf.reshape(el, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", eb, w_gate)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", eb, w_up)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), w_down)
+    out = out.reshape(el * cap, d)
+
+    y = jnp.zeros_like(x)
+    for slot in range(cfg.top_k):
+        keep, slot_idx = keeps[slot], slots[slot]
+        g = (gates[:, slot] * keep).astype(x.dtype)
+        y = y + g[:, None] * out.at[jnp.clip(slot_idx, 0, el * cap - 1)].get(
+            mode="clip")
+    return y, aux
+
+
+def moe_ffn(ctx: ShardingCtx, cfg: ModelConfig, p: dict[str, Array],
+            x: Array) -> tuple[Array, Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux scalar)."""
+    b, s, d = x.shape
+    e_pad = padded_experts(cfg)
+
+    mesh = ctx.mesh
+    use_shmap = (
+        mesh is not None and not mesh.empty and "model" in mesh.shape
+        and mesh.shape["model"] > 1 and e_pad % mesh.shape["model"] == 0
+    )
+    if use_shmap:
+        n_shards = mesh.shape["model"]
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+        def shard_fn(xs, router, wg, wu, wd):
+            bl, sl, _ = xs.shape              # local block
+            xf = xs.reshape(bl * sl, d)       # flatten inside the shard
+            el = wg.shape[0]
+            e0 = jax.lax.axis_index("model") * el
+            y, aux = _moe_local(xf, router, wg, wu, wd, cfg=cfg, e0=e0,
+                                n_shards=n_shards)
+            y = jax.lax.psum(y, "model")
+            aux = jax.lax.psum(aux, "model") / n_shards
+            if batch_axes:
+                aux = jax.lax.pmean(aux, batch_axes)
+            return y.reshape(bl, sl, d), aux
+
+        y, aux = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(
+                P(batch_axes if batch_axes else None, None, None),
+                P(None, None),
+                P("model", None, None),
+                P("model", None, None),
+                P("model", None, None),
+            ),
+            out_specs=(P(batch_axes if batch_axes else None, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    else:
+        yflat, aux = _moe_local(
+            x.reshape(b * s, d), p["router"], p["w_gate"], p["w_up"],
+            p["w_down"], cfg=cfg, e0=0, n_shards=1)
+        y = yflat.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        h = swiglu(dense(x, p["ws_gate"]), dense(x, p["ws_up"]))
+        y = y + dense(h, p["ws_down"])
+    return y, aux

@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard, partial (StableLM) and M-RoPE
+(Qwen2-VL: separate temporal/height/width sections of the head dim)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(dim: int, theta: float) -> Array:
+    """[dim/2] inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               fraction: float = 1.0) -> Array:
+    """Rotate the first ``fraction`` of the head dim.
+
+    x: [B, S, H, D]; positions: [B, S] int32.
+    """
+    b, s, h, d = x.shape
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(rot, theta)                       # [rot/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv   # [B, S, rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """Multimodal RoPE (Qwen2-VL).
+
+    positions: [3, B, S] — temporal/height/width position ids.  The rotary
+    half-dim is partitioned into ``sections`` (t, h, w); each section's
+    angles use the corresponding position stream.
+    """
+    b, s, h, d = x.shape
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                         # [half]
+    # select per-frequency position stream by section
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half)  # [half]
+    pos = positions.astype(jnp.float32)                # [3, B, S]
+    pos_sel = jnp.take(pos, sec_ids, axis=0)           # [half, B, S]
+    ang = jnp.einsum("fbs,f->bsf", pos_sel, inv)       # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

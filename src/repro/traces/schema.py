@@ -1,0 +1,101 @@
+"""Workload-trace schema.
+
+Mirrors the OpenDC workload input format (fragments of jobs with CPU demand)
+at the granularity the paper reads out (5-minute sampling).  A trace is a
+struct-of-arrays over jobs — dense tensors, directly consumable by the
+vectorized simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: industry-standard sampling granularity used throughout the paper (§3.3).
+SAMPLE_SECONDS = 300.0  # 5 minutes
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A job trace, struct-of-arrays, SURF-22 shaped.
+
+    Attributes:
+      submit_bin: ``[J] int32`` — submission time, in 5-min bins from t0.
+      duration_bins: ``[J] int32`` — runtime in bins (ceil).
+      cores: ``[J] int32`` — cores requested (single-host jobs, <= cores/host).
+      util_levels: ``[J, U] float32`` — piecewise utilization profile of the
+        job over its lifetime, expressed as U equal-length phases of per-core
+        utilization in [0, 1] (OpenDC "fragments").
+      valid: ``[J] bool`` — padding mask (traces are padded to fixed J).
+    """
+
+    submit_bin: Array
+    duration_bins: Array
+    cores: Array
+    util_levels: Array
+    valid: Array
+
+    @property
+    def num_jobs(self) -> int:
+        return int(self.submit_bin.shape[0])
+
+    @property
+    def num_phases(self) -> int:
+        return int(self.util_levels.shape[1])
+
+    def cpu_hours(self) -> Array:
+        """Total CPU-hours per job (core-hours, the SURF-22 reporting unit)."""
+        hours = self.duration_bins.astype(jnp.float32) * (SAMPLE_SECONDS / 3600.0)
+        return jnp.where(self.valid, hours * self.cores.astype(jnp.float32), 0.0)
+
+
+jax.tree_util.register_pytree_node(
+    Workload,
+    lambda w: ((w.submit_bin, w.duration_bins, w.cores, w.util_levels, w.valid), None),
+    lambda _, c: Workload(*c),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DatacenterConfig:
+    """Static topology of the twinned datacenter (paper §3.2: SURF-SARA)."""
+
+    num_hosts: int = 277
+    cores_per_host: int = 16
+    ghz: float = 2.1
+    mem_gb: float = 128.0
+    #: double-precision FLOPs per core per cycle (FMA width) — used for the
+    #: TFLOPs performance metric in E1's extension (Fig. 5B).
+    flops_per_cycle: float = 16.0
+
+    @property
+    def peak_tflops(self) -> float:
+        """Peak datacenter TFLOP/s at 100 % utilization."""
+        return (
+            self.num_hosts * self.cores_per_host * self.ghz * 1e9 * self.flops_per_cycle
+        ) / 1e12
+
+
+def pad_workload(w: Workload, to_jobs: int) -> Workload:
+    """Pad a workload to a fixed job count (static shapes for jit)."""
+    j = w.num_jobs
+    if j >= to_jobs:
+        return w
+    pad = to_jobs - j
+
+    def _pad(x, fill=0):
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return Workload(
+        submit_bin=_pad(w.submit_bin, np.iinfo(np.int32).max // 4),
+        duration_bins=_pad(w.duration_bins, 1),
+        cores=_pad(w.cores, 1),
+        util_levels=_pad(w.util_levels, 0.0),
+        valid=_pad(w.valid, False),
+    )

@@ -1,0 +1,83 @@
+"""Self-Calibrator: grid search recovers hidden parameters; backends agree."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import (
+    CalibrationSpec,
+    SelfCalibrator,
+    calibrate_window,
+    candidate_grid,
+    evaluate_candidates,
+)
+from repro.core.power import PowerParams, opendc_power
+
+RNG = np.random.default_rng(0)
+T, H = 192, 64
+U = jnp.asarray(RNG.uniform(0.05, 0.95, (T, H)).astype(np.float32))
+BASE = PowerParams(70.0, 350.0, 2.0)
+
+
+def _truth(r, p_idle=70.0, p_max=350.0, noise=0.0):
+    p = np.asarray(opendc_power(U, PowerParams(p_idle, p_max, r))).sum(1)
+    if noise:
+        p = p + RNG.normal(0, noise * p.mean(), T)
+    return jnp.asarray(p.astype(np.float32))
+
+
+def test_grid_recovers_r():
+    real = _truth(r=3.1)
+    spec = CalibrationSpec(r_lo=1.0, r_hi=6.0, r_points=256)
+    res = calibrate_window(U, real, spec, BASE)
+    assert res.params.r == pytest.approx(3.1, abs=0.03)
+    assert res.mape < 0.5
+
+
+def test_grid_beats_base_under_noise():
+    real = _truth(r=2.8, noise=0.02)
+    spec = CalibrationSpec()
+    res = calibrate_window(U, real, spec, BASE)
+    base_mape = float(evaluate_candidates(
+        U, real, PowerParams(
+            p_idle=jnp.array([70.0]), p_max=jnp.array([350.0]),
+            r=jnp.array([2.0])))[0])
+    assert res.mape <= base_mape
+
+
+def test_joint_mode_recovers_scale():
+    real = _truth(r=2.4, p_idle=77.0, p_max=385.0)
+    spec = CalibrationSpec(mode="joint", r_points=24, scale_points=9)
+    res = calibrate_window(U, real, spec, BASE)
+    r_only = calibrate_window(U, real, CalibrationSpec(), BASE)
+    assert res.mape <= r_only.mape        # extra dims can't be worse
+    assert res.params.p_idle == pytest.approx(77.0, rel=0.12)
+
+
+def test_refinement_improves_or_equal():
+    real = _truth(r=2.347)
+    coarse = calibrate_window(U, real, CalibrationSpec(r_points=12), BASE)
+    refined = calibrate_window(
+        U, real, CalibrationSpec(r_points=12, refine_iters=2), BASE)
+    assert refined.mape <= coarse.mape + 1e-6
+    assert refined.evaluated > coarse.evaluated
+
+
+def test_backends_agree():
+    real = _truth(r=2.9)
+    cand = candidate_grid(CalibrationSpec(r_points=64), BASE)
+    m_x = np.asarray(evaluate_candidates(U, real, cand, backend="xla"))
+    m_p = np.asarray(evaluate_candidates(U, real, cand,
+                                         backend="pallas_interpret"))
+    np.testing.assert_allclose(m_x, m_p, atol=1e-3)
+
+
+def test_self_calibrator_pipelining():
+    cal = SelfCalibrator(CalibrationSpec(), BASE, history_windows=2)
+    # before any telemetry: base params
+    assert cal.params_for_next().r == 2.0
+    real = _truth(r=3.3)
+    cal.observe(U, real)
+    nxt = cal.params_for_next()
+    assert nxt.r == pytest.approx(3.3, abs=0.1)
+    assert len(cal.history) == 1

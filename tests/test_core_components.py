@@ -1,0 +1,155 @@
+"""Telemetry store, SLO/bias monitors, HITL gate, meta-model combiner."""
+
+import numpy as np
+import pytest
+
+from repro.core.feedback import HITLGate, Proposal, ProposalKind, propose_from_state
+from repro.core.metamodel import combine, run_multi_model
+from repro.core.power import PowerParams
+from repro.core.slo import NFR1, BiasTracker, SLOMonitor
+from repro.core.telemetry import TelemetryStore, TelemetryWindow, clip_to_window
+
+import jax.numpy as jnp
+
+
+def _window(idx, bins=12, hosts=4):
+    rng = np.random.default_rng(idx)
+    return TelemetryWindow(
+        window=idx, t0_bin=idx * bins,
+        u_th=rng.uniform(0, 1, (bins, hosts)).astype(np.float32),
+        power_w=rng.uniform(1e3, 2e3, bins),
+    )
+
+
+def test_store_ingest_get_history():
+    st = TelemetryStore(bins_per_window=12)
+    for i in range(5):
+        st.ingest(_window(i))
+    assert st.latest() == 4
+    hist = st.history(4, 3)
+    assert [h.window for h in hist] == [2, 3, 4]
+    with pytest.raises(ValueError):
+        st.ingest(_window(2))              # duplicate window
+
+
+def test_store_rejects_unclipped():
+    st = TelemetryStore(bins_per_window=12)
+    with pytest.raises(ValueError):
+        st.ingest(_window(0, bins=7))
+
+
+def test_clip_to_window_pads_and_clips():
+    u = np.arange(40, dtype=np.float32).reshape(20, 2)
+    p = np.arange(20, dtype=np.float64)
+    tw = clip_to_window(1, 8, 0, u, p)     # bins 8..16 of a 20-bin record
+    assert tw.bins == 8
+    assert tw.power_w[0] == 8.0
+    short = clip_to_window(2, 8, 0, u, p)  # bins 16..24: only 4 available
+    assert short.bins == 8                 # forward-filled
+    assert short.power_w[-1] == p[-1]
+
+
+def test_store_persistence_roundtrip(tmp_path):
+    st = TelemetryStore(bins_per_window=12)
+    for i in range(3):
+        st.ingest(_window(i))
+    path = str(tmp_path / "telemetry.zmp")
+    st.flush(path)
+    back = TelemetryStore.load(path)
+    assert sorted(back.windows()) == [0, 1, 2]
+    np.testing.assert_allclose(back.get(1).u_th, st.get(1).u_th, rtol=1e-6)
+
+
+def test_slo_monitor_compliance():
+    mon = SLOMonitor([NFR1])
+    mon.observe("mape", [5.0] * 9 + [15.0])     # 90% under threshold
+    rep = mon.report()[0]
+    assert rep.compliance == pytest.approx(0.9)
+    assert rep.met                               # >= 0.90
+
+
+def test_bias_tracker():
+    bt = BiasTracker()
+    bt.observe(np.array([10.0, 10.0, 10.0]), np.array([9.0, 11.0, 8.0]))
+    assert bt.under == 2 and bt.over == 1
+    assert bt.under_fraction == pytest.approx(2 / 3)
+
+
+def test_hitl_gate_minor_auto_major_pending():
+    gate = HITLGate()
+    minor = gate.submit(Proposal(ProposalKind.RECALIBRATE, 0, "recal"))
+    major = gate.submit(Proposal(ProposalKind.POWER_CAP, 0, "cap"))
+    assert minor.approved is True and major.approved is None
+    out = gate.drain()
+    assert minor in out and major not in out
+    assert gate.pending() == [major]
+    gate.approve(0)
+    assert gate.drain() == [major]
+
+
+def test_hitl_policy_callable():
+    gate = HITLGate(policy=lambda p: p.kind != ProposalKind.SCALE_UP)
+    gate.submit(Proposal(ProposalKind.SCALE_UP, 0, "up"))
+    gate.submit(Proposal(ProposalKind.SCALE_DOWN_IDLE, 0, "down"))
+    out = gate.drain()
+    assert [p.kind for p in out] == [ProposalKind.SCALE_DOWN_IDLE]
+
+
+def test_propose_rules():
+    props = propose_from_state(3, mape=12.0, mean_util=0.2, queue_len=0,
+                               power_w=90e3, power_cap_w=80e3)
+    kinds = {p.kind for p in props}
+    assert ProposalKind.RECALIBRATE in kinds         # NFR1 breach
+    assert ProposalKind.SCALE_DOWN_IDLE in kinds     # <30% util (paper §3.3)
+    assert ProposalKind.POWER_CAP in kinds
+
+
+def test_metamodel_combiners():
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.uniform(0, 1, (48, 8)).astype(np.float32))
+    per = run_multi_model(u, PowerParams())
+    assert set(per) == {"opendc", "linear", "sqrt", "cubic"}
+    mean_out = combine(per, "mean")
+    med_out = combine(per, "median")
+    assert mean_out.combined.shape == (48,)
+    ref = per["opendc"] * 1.02                        # pretend reality
+    w_out = combine(per, "inv_mape", reference=ref)
+    # best-tracking model gets the biggest weight
+    assert max(w_out.weights, key=w_out.weights.get) == "opendc"
+    assert abs(sum(w_out.weights.values()) - 1) < 1e-6
+    assert np.isfinite(med_out.combined).all()
+
+
+def test_orchestrator_acceleration_modes():
+    """Acceleration factor (paper §2.3): live mode (factor=1) paces windows
+    against wall time; max mode (None) runs as fast as compute allows."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core import Orchestrator, OrchestratorConfig
+    from repro.traces.schema import DatacenterConfig, Workload
+
+    dc = DatacenterConfig(num_hosts=4)
+    w = Workload(
+        jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32) * 4,
+        jnp.ones((2,), jnp.int32) * 8,
+        jnp.ones((2, 2), jnp.float32) * 0.5, jnp.ones((2,), bool))
+
+    fast = Orchestrator(w, dc, t_bins=24,
+                        cfg=OrchestratorConfig(bins_per_window=12,
+                                               acceleration=None))
+    fast.run(1)                      # warm up jit before timing
+    t0 = time.time()
+    fast.run_window(1)
+    fast_t = time.time() - t0
+    assert fast_t < 0.9              # max-acceleration window is sub-second
+
+    live = Orchestrator(w, dc, t_bins=24,
+                        cfg=OrchestratorConfig(bins_per_window=12,
+                                               acceleration=1.0))
+    t0 = time.time()
+    live.run(1)
+    live_t = time.time() - t0
+    # live mode must pace against wall time (sleep capped at 1 s in-library)
+    assert live_t >= 0.9

@@ -1,0 +1,221 @@
+"""Model-layer correctness: chunked attention vs naive softmax; decode paths
+consistent with full-sequence forward (GQA cache, MLA absorbed, Mamba2 SSD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ref import flash_attention_ref
+from repro.models import mamba2 as m2
+from repro.models import mla
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.common import init_params
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,chunk", [
+    (2, 4, 2, 96, 32, 32), (1, 8, 8, 64, 16, 64), (2, 6, 1, 128, 64, 32),
+])
+def test_chunked_attention_matches_naive(b, hq, hkv, s, d, chunk):
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, hq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    got = chunked_attention(q, k, v, causal=True, kv_chunk=chunk)
+    want = flash_attention_ref(                      # [B,H,S,D] layout
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_last_position():
+    b, hq, hkv, s, d = 2, 4, 2, 48, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, hq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    full = chunked_attention(q, k, v, causal=True, kv_chunk=16)
+    dec = decode_attention(q[:, -1:], k, v)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=64, vocab=64,
+        n_heads=4, n_kv_heads=4, head_dim=24, attn_kind="mla",
+        q_lora=32, kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+    ).validate()
+
+
+def test_mla_absorbed_decode_matches_prefill():
+    """Absorbed latent decode must equal the expanded prefill path at the
+    last position, given identical cache contents."""
+    cfg = _mla_cfg()
+    specs = mla.mla_specs(cfg, 1)
+    p = init_params(specs, jax.random.PRNGKey(0), jnp.float32)
+    p = jax.tree.map(lambda t: t[0], p)             # drop layer dim
+    b, s = 2, 24
+    x = jnp.asarray(RNG.normal(0, 0.3, (b, s, cfg.d_model)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    want = mla.mla_prefill(p, cfg, x, pos, kv_chunk=8)[:, -1]
+
+    # build the latent cache from the full prefix, decode the last token
+    c_kv, k_rope = mla._latent_kv(p, cfg, x[:, :-1], pos[:, :-1])
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, 1), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, 1), (0, 0))),
+    }
+    got, _ = mla.mla_decode(p, cfg, x[:, -1:], cache, pos[:, -1:],
+                            cache_len=jnp.full((b,), s - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def _ssm_cfg():
+    return ModelConfig(
+        name="t", family="ssm", attn_kind="none", num_layers=1, d_model=32,
+        vocab=64, d_state=16, expand=2, ssm_headdim=16, ssd_chunk=8,
+    ).validate()
+
+
+def test_mamba2_decode_matches_forward():
+    """Stepping the recurrence token-by-token must reproduce the chunked
+    full-sequence forward."""
+    cfg = _ssm_cfg()
+    specs = m2.mamba2_specs(cfg, 1)
+    p = init_params(specs, jax.random.PRNGKey(1), jnp.float32)
+    p = jax.tree.map(lambda t: t[0], p)
+    b, s = 2, 16
+    x = jnp.asarray(RNG.normal(0, 0.5, (b, s, cfg.d_model)).astype(np.float32))
+    full = m2.mamba2_forward(p, cfg, x)
+
+    state = m2.mamba2_init_state(cfg, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, state = m2.mamba2_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(y[:, 0])
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size."""
+    b, s, h, pd, n, g = 1, 32, 2, 8, 8, 1
+    xh = jnp.asarray(RNG.normal(0, 1, (b, s, h, pd)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, s, h)).astype(np.float32))
+    al = jnp.asarray(RNG.normal(0, 0.3, (h,)).astype(np.float32))
+    bb = jnp.asarray(RNG.normal(0, 1, (b, s, g, n)).astype(np.float32))
+    cc = jnp.asarray(RNG.normal(0, 1, (b, s, g, n)).astype(np.float32))
+    dd = jnp.asarray(RNG.normal(0, 1, (h,)).astype(np.float32))
+    y8 = m2.ssd_chunked(xh, dt, al, bb, cc, dd, 8)
+    y16 = m2.ssd_chunked(xh, dt, al, bb, cc, dd, 16)
+    y32 = m2.ssd_chunked(xh, dt, al, bb, cc, dd, 32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_step_matches_forward_dense():
+    """Greedy decode against a cache built token-by-token must reproduce the
+    full-sequence forward logits at every position (embed -> blocks ->
+    unembed, the whole serve path)."""
+    from repro.configs.base import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=3, d_model=48,
+                      vocab=96, n_heads=4, n_kv_heads=2, head_dim=12,
+                      d_ff=96, remat="none").validate()
+    p = init_params(lm.model_specs(cfg), jax.random.PRNGKey(5), jnp.float32)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, s), 0, 96)
+    full_logits = lm.forward(cfg, p, {"tokens": toks})      # [B,S,V]
+
+    state = jax.tree.map(
+        lambda t: jnp.zeros_like(t),
+        init_params(lm.decode_state_specs(cfg, b, s), jax.random.PRNGKey(7),
+                    jnp.float32))
+    outs = []
+    for i in range(s):
+        batch = {"token": toks[:, i:i + 1],
+                 "cache_len": jnp.full((b,), i, jnp.int32)}
+        logits, state = lm.decode_step(cfg, p, state, batch)
+        outs.append(logits)
+    stepped = jnp.stack(outs, axis=1)                        # [B,S,V]
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_step_matches_forward_mla():
+    from repro.configs.base import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=48,
+                      vocab=64, n_heads=4, n_kv_heads=4, head_dim=24,
+                      attn_kind="mla", q_lora=24, kv_lora=24, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16, d_ff=96,
+                      remat="none").validate()
+    p = init_params(lm.model_specs(cfg), jax.random.PRNGKey(8), jnp.float32)
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, 64)
+    full_logits = lm.forward(cfg, p, {"tokens": toks})
+
+    state = jax.tree.map(
+        lambda t: jnp.zeros_like(t),
+        init_params(lm.decode_state_specs(cfg, b, s), jax.random.PRNGKey(1),
+                    jnp.float32))
+    outs = []
+    for i in range(s):
+        batch = {"token": toks[:, i:i + 1],
+                 "cache_len": jnp.full((b,), i, jnp.int32)}
+        logits, state = lm.decode_step(cfg, p, state, batch)
+        outs.append(logits)
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full_logits),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_encdec_decode_matches_teacher_forced():
+    """Enc-dec serve path: stepping the decoder against self+cross caches
+    must reproduce the teacher-forced decoder hidden states' logits."""
+    from repro.configs.base import ModelConfig
+    from repro.models import encdec as ed
+    from repro.models.common import dense
+
+    cfg = ModelConfig(name="t", family="encdec", num_layers=0, d_model=48,
+                      vocab=80, n_heads=4, n_kv_heads=2, head_dim=12,
+                      d_ff=96, enc_layers=2, dec_layers=2, num_frames=8,
+                      remat="none").validate()
+    p = init_params(ed.encdec_specs(cfg), jax.random.PRNGKey(3), jnp.float32)
+    b, s, f = 2, 10, 8
+    frames = jnp.asarray(RNG.normal(0, 0.3, (b, f, 48)).astype(np.float32))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, 80)
+
+    enc_out = ed.encode(cfg, p, frames)
+    x = ed.decode_train(cfg, p, toks, enc_out)
+    want = dense(x, p["unembed"])                      # [B,S,V]
+
+    # build decode state: zero self cache + precomputed cross K/V
+    state = jax.tree.map(
+        lambda t: jnp.zeros_like(t),
+        init_params(ed.encdec_state_specs(cfg, b, s), jax.random.PRNGKey(5),
+                    jnp.float32))
+    cross_k = jnp.stack([dense(enc_out, p["decoder"]["x_wk"][i])
+                         for i in range(cfg.dec_layers)])
+    cross_v = jnp.stack([dense(enc_out, p["decoder"]["x_wv"][i])
+                         for i in range(cfg.dec_layers)])
+    state["cross"] = {"k": cross_k, "v": cross_v}
+
+    outs = []
+    for i in range(s):
+        batch = {"token": toks[:, i:i + 1],
+                 "cache_len": jnp.full((b,), i, jnp.int32)}
+        logits, state = ed.encdec_decode_step(cfg, p, state, batch)
+        outs.append(logits)
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,127 @@
+"""Unit tests: power models + the vectorized DES."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.desim import simulate, simulate_utilization
+from repro.core.power import (
+    PowerParams,
+    datacenter_power,
+    linear_power,
+    mape,
+    opendc_power,
+)
+from repro.traces.schema import DatacenterConfig, Workload, pad_workload
+from repro.traces.surf import SurfTraceSpec, make_surf22_like
+
+
+def test_opendc_power_boundaries():
+    p = PowerParams(p_idle=70.0, p_max=350.0, r=2.0)
+    u = jnp.array([0.0, 1.0])
+    out = np.asarray(opendc_power(u, p))
+    assert out[0] == pytest.approx(70.0)
+    assert out[1] == pytest.approx(350.0)    # 2u - u^r = 1 at u=1, any r
+
+
+def test_linear_is_r1_special_case():
+    p1 = PowerParams(70.0, 350.0, 1.0)
+    u = jnp.linspace(0, 1, 33)
+    np.testing.assert_allclose(
+        np.asarray(opendc_power(u, p1)), np.asarray(linear_power(u, p1)),
+        rtol=1e-6)
+
+
+def test_power_monotone_for_r_le_2():
+    # dP/du = span*(2 - r*u^(r-1)) >= 0 on [0,1] iff r <= 2; the OpenDC
+    # form genuinely peaks above p_max for r > 2 (known model quirk).
+    for r in (1.0, 1.5, 2.0):
+        p = PowerParams(70.0, 350.0, r)
+        u = jnp.linspace(0, 1, 101)
+        out = np.asarray(opendc_power(u, p))
+        assert (np.diff(out) >= -1e-4).all(), f"non-monotone at r={r}"
+
+
+def test_power_loose_bound_any_r():
+    # shape = 2u - u^r <= 2u <= 2  ->  P <= p_idle + 2*span always
+    for r in (1.0, 2.0, 3.0, 4.5, 6.0):
+        p = PowerParams(70.0, 350.0, r)
+        u = jnp.linspace(0, 1, 101)
+        out = np.asarray(opendc_power(u, p))
+        assert (out >= 70.0 - 1e-3).all()
+        assert (out <= 70.0 + 2 * 280.0 + 1e-3).all()
+
+
+def test_mape_zero_iff_equal():
+    a = jnp.asarray(np.random.default_rng(0).uniform(10, 20, 64))
+    assert float(mape(a, a)) == pytest.approx(0.0, abs=1e-5)
+    assert float(mape(a, a * 1.1)) == pytest.approx(10.0, rel=1e-3)
+
+
+def _small_workload():
+    sub = jnp.array([0, 0, 1, 3], jnp.int32)
+    dur = jnp.array([2, 3, 1, 2], jnp.int32)
+    cor = jnp.array([4, 8, 16, 2], jnp.int32)
+    util = jnp.ones((4, 2), jnp.float32) * 0.5
+    return Workload(sub, dur, cor, util, jnp.ones((4,), bool))
+
+
+def test_des_places_and_releases():
+    w = _small_workload()
+    out = simulate_utilization(w, num_hosts=2, cores_per_host=16, t_bins=8)
+    assert (np.asarray(out.job_start) >= 0).all()     # everything placed
+    u = np.asarray(out.u_th)
+    assert (u >= 0).all() and (u <= 1.0 + 1e-6).all()
+    assert u[6:].sum() == pytest.approx(0.0)          # all jobs done by t=6
+
+
+def test_des_capacity_never_exceeded():
+    # 3 jobs x 16 cores on one 16-core host: strictly serialized
+    w = Workload(
+        jnp.zeros((3,), jnp.int32), jnp.ones((3,), jnp.int32) * 2,
+        jnp.ones((3,), jnp.int32) * 16,
+        jnp.ones((3, 2), jnp.float32), jnp.ones((3,), bool))
+    out = simulate_utilization(w, num_hosts=1, cores_per_host=16, t_bins=10)
+    starts = sorted(np.asarray(out.job_start).tolist())
+    assert starts == [0, 2, 4]
+
+
+def test_des_fcfs_head_of_line():
+    # big job blocks; a later small job must NOT jump the queue
+    w = Workload(
+        jnp.array([0, 0, 0], jnp.int32),
+        jnp.array([4, 4, 1], jnp.int32),
+        jnp.array([16, 16, 1], jnp.int32),
+        jnp.ones((3, 2), jnp.float32),
+        jnp.ones((3,), bool))
+    out = simulate_utilization(w, num_hosts=1, cores_per_host=16, t_bins=16)
+    s = np.asarray(out.job_start)
+    assert s[0] == 0 and s[1] == 4
+    assert s[2] >= s[1]                                # strict FCFS
+
+
+def test_des_deterministic():
+    dc = DatacenterConfig(num_hosts=32)
+    w = make_surf22_like(SurfTraceSpec(days=1.0, seed=3), dc)
+    a = simulate_utilization(w, num_hosts=32, cores_per_host=16, t_bins=288)
+    b = simulate_utilization(w, num_hosts=32, cores_per_host=16, t_bins=288)
+    np.testing.assert_array_equal(np.asarray(a.u_th), np.asarray(b.u_th))
+
+
+def test_simulate_full_metrics():
+    dc = DatacenterConfig(num_hosts=16)
+    w = make_surf22_like(SurfTraceSpec(days=0.5, seed=4), dc)
+    sim, pred = simulate(w, dc, t_bins=144)
+    p = np.asarray(pred.power_w)
+    assert p.shape == (144,)
+    assert (p >= 16 * 70.0 - 1e-3).all()               # idle floor
+    assert np.asarray(pred.efficiency).min() >= 0
+    assert np.isfinite(np.asarray(pred.tflops)).all()
+
+
+def test_pad_workload_preserves_mass():
+    w = _small_workload()
+    wp = pad_workload(w, 16)
+    assert wp.num_jobs == 16
+    assert float(wp.cpu_hours().sum()) == pytest.approx(
+        float(w.cpu_hours().sum()))
