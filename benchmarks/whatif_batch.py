@@ -1,0 +1,93 @@
+"""What-if sweep: batched scenario engine vs the sequential per-topology loop.
+
+The old operator loop re-traced and re-compiled ``simulate_utilization`` once
+per candidate topology (S compiles for S candidates).  The batched engine
+(``repro.core.scenarios``) pads the host axis to a static ``max_hosts``,
+vmaps the masked DES over the stacked scenario pytree, and compiles **once**
+for the whole sweep.  This benchmark times both paths at S=16 candidate host
+counts on the same trace and reports the wall-clock ratio (target: >= 5x).
+
+    PYTHONPATH=src python benchmarks/whatif_batch.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.desim import simulate
+from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+
+def run(days: float = 2.0, num_scenarios: int = 16) -> dict:
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+
+    # S distinct host counts: every one is a fresh static shape for the
+    # sequential path, i.e. a fresh trace + compile.
+    host_counts = [64 + 24 * i for i in range(num_scenarios)]
+    scenarios = [Scenario(name=f"h{h}", num_hosts=h) for h in host_counts]
+
+    # -- sequential loop (the old examples/whatif_scaling.py shape):
+    # one simulate() per candidate = fresh trace + compile + run + metrics.
+    jax.clear_caches()
+    t0 = time.time()
+    seq_outs = []
+    for h in host_counts:
+        sim, pred = simulate(
+            w, DatacenterConfig(num_hosts=h, cores_per_host=dc.cores_per_host),
+            t_bins)
+        pred.power_w.block_until_ready()
+        seq_outs.append(sim.u_th.block_until_ready())
+    sequential_s = time.time() - t0
+
+    # -- batched engine: one jitted program for all S ------------------------
+    # build_scenario_set (stacking S workload copies) is part of every real
+    # sweep's cost, so it sits inside the timed region on both passes.
+    jax.clear_caches()
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, scenarios)
+    sim_b, _ = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins)
+    sim_b.u_th.block_until_ready()
+    batched_cold_s = time.time() - t0            # includes the one compile
+
+    t0 = time.time()
+    ss2 = build_scenario_set(w, dc, scenarios)
+    sim_b2, _ = run_scenarios(ss2, max_hosts=ss2.max_hosts, t_bins=t_bins)
+    sim_b2.u_th.block_until_ready()
+    batched_warm_s = time.time() - t0            # steady-state sweep cost
+
+    return {
+        "num_scenarios": num_scenarios,
+        "days": days,
+        "t_bins": t_bins,
+        "max_hosts": ss.max_hosts,
+        "sequential_s": sequential_s,
+        "batched_cold_s": batched_cold_s,
+        "batched_warm_s": batched_warm_s,
+        "speedup_cold": sequential_s / batched_cold_s,
+        "speedup_warm": sequential_s / batched_warm_s,
+    }
+
+
+def main() -> None:
+    r = run()
+    print(f"what-if sweep, S={r['num_scenarios']} topologies, "
+          f"{r['days']:.0f} days ({r['t_bins']} bins), "
+          f"max_hosts={r['max_hosts']}")
+    print(f"  sequential loop (S compiles): {r['sequential_s']:8.2f} s")
+    print(f"  batched engine, cold (1 compile): {r['batched_cold_s']:6.2f} s "
+          f"-> {r['speedup_cold']:.1f}x")
+    print(f"  batched engine, warm:         {r['batched_warm_s']:8.2f} s "
+          f"-> {r['speedup_warm']:.1f}x")
+    target = 5.0
+    ok = r["speedup_cold"] >= target
+    print(f"  target >= {target:.0f}x cold: {'PASS' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

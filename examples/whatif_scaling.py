@@ -5,13 +5,17 @@ planning is a config edit: re-simulate the same workload against candidate
 topologies and compare queueing, utilization, energy and cost-of-carbon
 proxies — the operator-facing workflow of Fig. 1, entirely offline.
 
+All candidates run through the **batched scenario engine**
+(``repro.core.scenarios``): the host axis is padded to the largest
+candidate, every scenario is shape-identical, and the whole sweep is one
+jitted ``vmap`` — one compilation instead of one per topology (see
+``benchmarks/whatif_batch.py`` for the speedup measurement).
+
     PYTHONPATH=src python examples/whatif_scaling.py
 """
 
-import numpy as np
-
-from repro.core.desim import simulate
-from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig
+from repro.core.scenarios import Scenario, evaluate_scenarios
+from repro.traces.schema import DatacenterConfig
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
 
 
@@ -21,19 +25,19 @@ def main() -> None:
     base = DatacenterConfig()
     workload = make_surf22_like(SurfTraceSpec(days=days), base)
 
+    candidates = [Scenario(name=f"h{h}", num_hosts=h)
+                  for h in (64, 128, 200, 277, 400)]
+    _, _, _, summaries = evaluate_scenarios(
+        workload, base, candidates, t_bins=t_bins)
+
     print(f"{'hosts':>6s} {'mean util':>10s} {'p99 queue':>10s} "
           f"{'unplaced':>9s} {'energy kWh':>11s} {'kWh/CPUh':>9s}")
-    for hosts in (64, 128, 200, 277, 400):
-        dc = DatacenterConfig(num_hosts=hosts)
-        sim, pred = simulate(workload, dc, t_bins)
-        u = np.asarray(sim.u_th)
-        queue = np.asarray(sim.queue_len)
-        energy = float(np.asarray(pred.energy_kwh).sum())
-        cpu_h = float(np.asarray(workload.cpu_hours()).sum())
-        unplaced = int((np.asarray(sim.job_start) < 0).sum())
-        print(f"{hosts:6d} {u.mean():10.1%} "
-              f"{np.percentile(queue, 99):10.0f} {unplaced:9d} "
-              f"{energy:11.1f} {energy/max(cpu_h,1):9.3f}")
+    for s in summaries:
+        # kwh_per_cpu_hour is NaN for an empty workload — surfaced, not
+        # hidden behind a clamped denominator.
+        print(f"{s.num_hosts:6d} {s.mean_util:10.1%} "
+              f"{s.p99_queue:10.0f} {s.unplaced_jobs:9d} "
+              f"{s.energy_kwh:11.1f} {s.kwh_per_cpu_hour:9.3f}")
 
     print("\nReading: fewer hosts -> higher utilization and queueing but "
           "less idle energy;\nthe twin quantifies the SLO/sustainability "

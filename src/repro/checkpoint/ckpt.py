@@ -1,10 +1,16 @@
-"""Checkpointing: msgpack + zstd columnar blobs, atomic publish, restore.
+"""Checkpointing: msgpack + compressed columnar blobs, atomic publish, restore.
 
 Saves the *whole job state*: model params, optimizer moments, data cursor,
 rng, and the digital twin's state (calibrated power parameters + window
 index) — after a restart the twin resumes calibrated, it does not relearn
 from scratch.  Writes are atomic (tmp + rename) and keep a bounded history
 so a crash mid-write can never destroy the latest good checkpoint.
+
+Optional-dependency policy: compression goes through :mod:`repro.core.codec`
+(zstd when ``zstandard`` is installed, stdlib zlib otherwise) — importing
+this module must never fail on a missing compressor.  Every checkpoint file
+starts with a one-byte codec id (``0x01`` zstd, ``0x02`` zlib) so a restore
+in one environment opens checkpoints written in the other.
 """
 
 from __future__ import annotations
@@ -19,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+from repro.core import codec
 
 _CKPT_RE = re.compile(r"ckpt_(\d+)\.mpz$")
 
@@ -50,8 +57,8 @@ def _unpack_tree(obj: Any) -> Any:
 
 def save(path_dir: str, step: int, state: Any, keep: int = 3) -> str:
     os.makedirs(path_dir, exist_ok=True)
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(_pack_tree(state), use_bin_type=True))
+    blob = codec.compress(
+        msgpack.packb(_pack_tree(state), use_bin_type=True), level=3)
     final = os.path.join(path_dir, f"ckpt_{step:08d}.mpz")
     fd, tmp = tempfile.mkstemp(dir=path_dir, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
@@ -76,8 +83,7 @@ def restore(path_dir: str, step: int | None = None) -> tuple[int, Any]:
     path = os.path.join(path_dir, f"ckpt_{step:08d}.mpz")
     with open(path, "rb") as f:
         obj = msgpack.unpackb(
-            zstandard.ZstdDecompressor().decompress(f.read()),
-            raw=False, strict_map_key=False)
+            codec.decompress(f.read()), raw=False, strict_map_key=False)
     return step, _unpack_tree(obj)
 
 

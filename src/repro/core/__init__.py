@@ -19,8 +19,28 @@ from repro.core.desim import (
     simulate,
     simulate_utilization,
 )
-from repro.core.feedback import HITLGate, Proposal, ProposalKind
-from repro.core.orchestrator import Orchestrator, OrchestratorConfig, WindowRecord
+from repro.core.feedback import (
+    HITLGate,
+    Proposal,
+    ProposalKind,
+    propose_from_scenario,
+    propose_from_state,
+)
+from repro.core.orchestrator import (
+    Orchestrator,
+    OrchestratorConfig,
+    WhatIfResult,
+    WindowRecord,
+)
+from repro.core.scenarios import (
+    Scenario,
+    ScenarioSet,
+    ScenarioSummary,
+    build_scenario_set,
+    evaluate_scenarios,
+    run_scenarios,
+    summarize_scenarios,
+)
 from repro.core.power import (
     POWER_MODELS,
     PowerParams,
@@ -40,7 +60,11 @@ __all__ = [
     "Prediction", "SimOutput", "predict_metrics", "simulate",
     "simulate_utilization",
     "HITLGate", "Proposal", "ProposalKind",
-    "Orchestrator", "OrchestratorConfig", "WindowRecord",
+    "propose_from_scenario", "propose_from_state",
+    "Orchestrator", "OrchestratorConfig", "WhatIfResult", "WindowRecord",
+    "Scenario", "ScenarioSet", "ScenarioSummary",
+    "build_scenario_set", "evaluate_scenarios", "run_scenarios",
+    "summarize_scenarios",
     "POWER_MODELS", "PowerParams", "datacenter_power", "energy_kwh",
     "linear_power", "mape", "opendc_power",
     "NFR1", "SLO", "BiasTracker", "SLOMonitor",

@@ -1,0 +1,73 @@
+"""Compression codec for persisted blobs (telemetry flushes, checkpoints).
+
+Optional-dependency policy: ``zstandard`` is the *preferred* codec but must
+never be required — offline deployments (and CI) run without it.  Every blob
+written through this module is tagged with a **one-byte codec id** so any
+reader can open any file regardless of which codecs its environment has:
+
+  * ``0x01`` — zstd-compressed payload (requires ``zstandard`` to read);
+  * ``0x02`` — zlib-compressed payload (stdlib, always readable).
+
+Writers pick zstd when the package is importable and fall back to zlib
+otherwise.  Legacy blobs from before the codec byte existed are raw zstd
+frames (magic ``28 B5 2F FD``); :func:`decompress` detects and handles them
+for backward compatibility.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+try:  # optional dependency — never a hard import
+    import zstandard  # type: ignore
+
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - environment dependent
+    zstandard = None  # type: ignore
+    HAVE_ZSTD = False
+
+#: one-byte codec ids prepended to every blob
+CODEC_ZSTD = b"\x01"
+CODEC_ZLIB = b"\x02"
+
+#: magic prefix of a raw (un-tagged, pre-codec-byte) zstd frame
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def default_codec() -> bytes:
+    """The codec id a writer should use in this environment."""
+    return CODEC_ZSTD if HAVE_ZSTD else CODEC_ZLIB
+
+
+def compress(data: bytes, level: int = 3, codec: bytes | None = None) -> bytes:
+    """Compress ``data`` and prepend the codec id byte.
+
+    ``codec`` forces a specific codec (tests exercise the zlib path even when
+    zstandard is installed); by default the best available codec is used.
+    """
+    codec = default_codec() if codec is None else codec
+    if codec == CODEC_ZSTD:
+        if not HAVE_ZSTD:
+            raise RuntimeError("zstd codec requested but zstandard is not installed")
+        return CODEC_ZSTD + zstandard.ZstdCompressor(level=level).compress(data)
+    if codec == CODEC_ZLIB:
+        return CODEC_ZLIB + zlib.compress(data, level=min(level * 2, 9))
+    raise ValueError(f"unknown codec id {codec!r}")
+
+
+def decompress(blob: bytes) -> bytes:
+    """Decompress a tagged blob (or a legacy raw zstd frame)."""
+    if not blob:
+        raise ValueError("empty blob")
+    tag, payload = blob[:1], blob[1:]
+    if tag == CODEC_ZSTD or blob[:4] == _ZSTD_MAGIC:
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "blob was written with the zstd codec but zstandard is not "
+                "installed; install it or re-write the file with zlib"
+            )
+        data = blob if blob[:4] == _ZSTD_MAGIC else payload
+        return zstandard.ZstdDecompressor().decompress(data)
+    if tag == CODEC_ZLIB:
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown codec id {tag!r}")

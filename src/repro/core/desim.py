@@ -31,6 +31,16 @@ from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
 
 Array = jax.Array
 
+#: time-axis block size of the post-scan read-out — bounds the dense
+#: [jobs, bins] intermediates at O(jobs * block) per scenario (one day of
+#: 5-minute bins per block).
+_READOUT_BLOCK = 288
+
+#: below this many [jobs, bins] elements per scenario the read-out runs in a
+#: single pass (no lax.map): the intermediates are small and the blocked
+#: scan only adds compile time.
+_READOUT_CHUNK_THRESHOLD = 4_000_000
+
 
 @dataclasses.dataclass(frozen=True)
 class SimOutput:
@@ -58,6 +68,185 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def simulate_utilization_masked(
+    w: Workload,
+    host_mask: Array,
+    cores_per_host: Array,
+    *,
+    max_hosts: int,
+    t_bins: int,
+    max_starts_per_bin: int = 64,
+    force_chunked_readout: bool = False,
+) -> SimOutput:
+    """Masked-host-axis DES core (trace-level; callers jit/vmap it).
+
+    The host axis is padded to a static ``max_hosts``; ``host_mask [max_hosts]``
+    marks the active hosts and ``cores_per_host`` is a *traced* int32 scalar.
+    Inactive hosts start with 0 free cores and are excluded from placement, so
+    they never run jobs and report 0 utilization.  Because every argument that
+    varies between what-if candidates (mask, cores, workload) is a tensor,
+    the whole simulation is ``jax.vmap``-able over a scenario axis — the
+    batched engine in :mod:`repro.core.scenarios` is exactly that vmap.
+
+    Placement (the event-driven part) is a bounded first-fit loop inside the
+    scan body; utilization accumulation is a segment-sum scatter over host
+    assignments.  Utilization is *independent of power-model parameters* —
+    the structural fact the Self-Calibrator exploits (see calibrate.py).
+    """
+    j = w.num_jobs
+    host_mask = jnp.asarray(host_mask, jnp.bool_)
+    cores_per_host = jnp.asarray(cores_per_host, jnp.int32)
+
+    submit = w.submit_bin
+    dur = jnp.maximum(w.duration_bins, 1)
+    cores = w.cores
+    valid = w.valid
+
+    # The scan carries *placement state only*: which job starts where/when,
+    # free cores, and a [t_bins+1, max_hosts] core-release table written at
+    # placement time (row t_bins absorbs clipped past-horizon releases).
+    # Everything read out per bin (utilization field, queue depth, running
+    # count) is reconstructed vectorized AFTER the scan from job_start —
+    # per-bin O(jobs) passes inside the scan would dominate the runtime and,
+    # under the scenario vmap, multiply by S with no amortization.
+    init = dict(
+        free=jnp.where(host_mask, cores_per_host, 0).astype(jnp.int32),
+        job_host=jnp.full((j,), -1, jnp.int32),
+        job_start=jnp.full((j,), -1, jnp.int32),
+        next_job=jnp.asarray(0, jnp.int32),
+        release=jnp.zeros((t_bins + 1, max_hosts), jnp.int32),
+    )
+
+    def head_ready(next_job, blocked, t):
+        """Is the FCFS head job submittable at bin t (and are we unblocked)?"""
+        jid = jnp.minimum(next_job, j - 1)
+        return ((next_job < j) & (submit[jid] <= t) & valid[jid]
+                & jnp.logical_not(blocked))
+
+    # Placement runs in a while_loop with a deliberately *small* carry:
+    # under vmap, the batched while_loop body re-runs for every lane until
+    # all lanes are done and select-freezes every carry leaf per iteration,
+    # so carrying the [jobs]-sized state here would cost O(S * jobs) per
+    # attempt.  Instead each attempt records (job, host) into a
+    # [max_starts_per_bin] buffer; the buffers are scattered into the scan
+    # carry once per bin.
+    def place_one(carry):
+        free, next_job, blocked, t, attempts, buf_jid, buf_host = carry
+        jid = jnp.minimum(next_job, j - 1)
+        # re-checked inside the body: finished vmap lanes degrade to no-ops.
+        eligible = head_ready(next_job, blocked, t)
+        need = cores[jid]
+        fits = (free >= need) & host_mask
+        any_fit = jnp.any(fits)
+        # worst-fit among fitting hosts (most free cores) — spreads load like
+        # OpenDC's default mem/core-aware filter+weigher pipeline.
+        host = jnp.argmax(jnp.where(fits, free, -1))
+        do_place = eligible & any_fit
+        free = free.at[host].add(jnp.where(do_place, -need, 0))
+        buf_jid = buf_jid.at[attempts].set(jnp.where(do_place, jid, j))
+        buf_host = buf_host.at[attempts].set(host)
+        next_job = next_job + do_place.astype(jnp.int32)
+        # strict FCFS: if the head job could not be placed, stop this bin.
+        blocked = blocked | (eligible & jnp.logical_not(any_fit))
+        return free, next_job, blocked, t, attempts + 1, buf_jid, buf_host
+
+    def keep_placing(carry):
+        free, next_job, blocked, t, attempts, buf_jid, buf_host = carry
+        return head_ready(next_job, blocked, t) & (attempts < max_starts_per_bin)
+
+    def step(state, t):
+        # 1) completions: cores banked in the release table at placement time.
+        free = state["free"] + state["release"][t]
+
+        # 2) FCFS placement, bounded attempts with early exit: most bins
+        # place far fewer than max_starts_per_bin jobs, and the while_loop
+        # stops as soon as the head job is unsubmittable or blocked instead
+        # of burning the remaining attempts on no-op iterations.
+        buf_jid = jnp.full((max_starts_per_bin,), j, jnp.int32)
+        buf_host = jnp.zeros((max_starts_per_bin,), jnp.int32)
+        free, next_job, _, _, _, buf_jid, buf_host = jax.lax.while_loop(
+            keep_placing, place_one,
+            (free, state["next_job"], jnp.asarray(False), t,
+             jnp.asarray(0, jnp.int32), buf_jid, buf_host),
+        )
+
+        # 3) apply this bin's placements (unused buffer slots hold the
+        # out-of-bounds sentinel job id j and are dropped by the scatter).
+        jj = jnp.minimum(buf_jid, j - 1)
+        placed = buf_jid < j
+        job_host = state["job_host"].at[buf_jid].set(buf_host, mode="drop")
+        job_start = state["job_start"].at[buf_jid].set(t, mode="drop")
+        end_bin = jnp.minimum(t + dur[jj], t_bins)
+        release = state["release"].at[end_bin, buf_host].add(
+            jnp.where(placed, cores[jj], 0))
+
+        new_state = dict(free=free, job_host=job_host, job_start=job_start,
+                         next_job=next_job, release=release)
+        return new_state, None
+
+    state, _ = jax.lax.scan(
+        step, init, jnp.arange(t_bins, dtype=jnp.int32)
+    )
+    job_start, job_host = state["job_start"], state["job_host"]
+
+    # -- vectorized post-scan read-out ---------------------------------------
+    # Reconstructs exactly what the old per-bin accumulation produced:
+    # integer counts are exact, and the float utilization scatter-adds in the
+    # same job order as the per-bin segment-sum did.  Bins are processed in
+    # blocks of _READOUT_BLOCK so the dense [jobs, bins] intermediates stay
+    # bounded at O(jobs * block) per scenario (under the scenario vmap the
+    # full-horizon version would materialize [S, jobs, bins] arrays).
+    u_phases = w.num_phases
+    started = job_start >= 0                           # [J]
+    st = job_start[:, None]                            # [J, 1]
+    du = dur[:, None]
+    seg = jnp.where(started, job_host, max_hosts)      # sentinel bucket
+
+    def readout_block(tt):
+        # tt [B] with -1 padding past the horizon (matches nothing below)
+        running = started[:, None] & (tt >= st) & (tt < st + du)   # [J, B]
+        phase = jnp.clip((tt - st) * u_phases // jnp.maximum(du, 1),
+                         0, u_phases - 1)
+        u_job = jnp.take_along_axis(w.util_levels, phase, axis=1)  # [J, B]
+        busy = jnp.where(
+            running, u_job * cores[:, None].astype(u_job.dtype), 0.0)
+        host_busy = jax.ops.segment_sum(
+            busy, seg, num_segments=max_hosts + 1)[:max_hosts]     # [H, B]
+        u_b = host_busy.T / jnp.maximum(cores_per_host, 1).astype(
+            host_busy.dtype)
+        started_by_t = started[:, None] & (tt >= st)               # [J, B]
+        queued = jnp.sum(
+            (submit[:, None] <= tt) & valid[:, None]
+            & jnp.logical_not(started_by_t), axis=0).astype(jnp.int32)
+        running_ct = jnp.sum(running, axis=0).astype(jnp.int32)
+        return u_b, queued, running_ct
+
+    # force_chunked_readout: a vmapping caller multiplies every intermediate
+    # by its batch size, which this function cannot see — the batch engine
+    # applies its own S-aware bound (see scenarios.run_scenarios).
+    if not force_chunked_readout and j * t_bins <= _READOUT_CHUNK_THRESHOLD:
+        u_th, queued, running_ct = readout_block(
+            jnp.arange(t_bins, dtype=jnp.int32))
+    else:
+        block = min(t_bins, _READOUT_BLOCK)
+        n_blocks = -(-t_bins // block)
+        tt_pad = jnp.full((n_blocks * block,), -1, jnp.int32)
+        tt_pad = tt_pad.at[:t_bins].set(jnp.arange(t_bins, dtype=jnp.int32))
+        u_b, q_b, r_b = jax.lax.map(
+            readout_block, tt_pad.reshape(n_blocks, block))
+        u_th = u_b.reshape(n_blocks * block, max_hosts)[:t_bins]
+        queued = q_b.reshape(-1)[:t_bins]
+        running_ct = r_b.reshape(-1)[:t_bins]
+
+    return SimOutput(
+        u_th=u_th,
+        queue_len=queued,
+        running=running_ct,
+        job_start=job_start,
+        job_host=job_host,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("num_hosts", "cores_per_host",
                                              "t_bins", "max_starts_per_bin"))
 def simulate_utilization(
@@ -70,100 +259,17 @@ def simulate_utilization(
 ) -> SimOutput:
     """Run the vectorized DES and return the utilization field.
 
-    Placement (the event-driven part) is a bounded first-fit loop inside the
-    scan body; utilization accumulation is a segment-sum scatter over host
-    assignments.  Utilization is *independent of power-model parameters* —
-    the structural fact the Self-Calibrator exploits (see calibrate.py).
+    Single-topology entry point: the masked core with every host active.
+    See :func:`simulate_utilization_masked` for the vmap-able core and
+    :mod:`repro.core.scenarios` for the batched what-if engine built on it.
     """
-    j = w.num_jobs
-    u_phases = w.num_phases
-
-    init = dict(
-        free=jnp.full((num_hosts,), cores_per_host, jnp.int32),
-        job_host=jnp.full((j,), -1, jnp.int32),
-        job_start=jnp.full((j,), -1, jnp.int32),
-        next_job=jnp.asarray(0, jnp.int32),
-    )
-
-    submit = w.submit_bin
-    dur = jnp.maximum(w.duration_bins, 1)
-    cores = w.cores
-    valid = w.valid
-
-    def place_one(_, carry):
-        free, job_host, job_start, next_job, blocked, t = carry
-        jid = jnp.minimum(next_job, j - 1)
-        eligible = (
-            (next_job < j)
-            & (submit[jid] <= t)
-            & valid[jid]
-            & jnp.logical_not(blocked)
-        )
-        need = cores[jid]
-        fits = free >= need
-        any_fit = jnp.any(fits)
-        # worst-fit among fitting hosts (most free cores) — spreads load like
-        # OpenDC's default mem/core-aware filter+weigher pipeline.
-        host = jnp.argmax(jnp.where(fits, free, -1))
-        do_place = eligible & any_fit
-        free = jnp.where(
-            do_place, free.at[host].add(-need), free
-        )
-        job_host = jnp.where(do_place, job_host.at[jid].set(host), job_host)
-        job_start = jnp.where(do_place, job_start.at[jid].set(t), job_start)
-        next_job = next_job + do_place.astype(jnp.int32)
-        # strict FCFS: if the head job could not be placed, stop this bin.
-        blocked = blocked | (eligible & jnp.logical_not(any_fit))
-        return free, job_host, job_start, next_job, blocked, t
-
-    def step(state, t):
-        free, job_host, job_start, next_job = (
-            state["free"], state["job_host"], state["job_start"], state["next_job"],
-        )
-        # 1) completions: release cores for jobs ending at bin t.
-        started = job_start >= 0
-        ends = started & (job_start + dur == t)
-        seg = jnp.where(ends, job_host, num_hosts)  # sentinel bucket
-        released = jax.ops.segment_sum(
-            jnp.where(ends, cores, 0), seg, num_segments=num_hosts + 1
-        )[:num_hosts]
-        free = free + released.astype(jnp.int32)
-
-        # 2) FCFS placement, bounded attempts.
-        free, job_host, job_start, next_job, _, _ = jax.lax.fori_loop(
-            0, max_starts_per_bin, place_one,
-            (free, job_host, job_start, next_job, jnp.asarray(False), t),
-        )
-
-        # 3) utilization accumulation over running jobs.
-        started = job_start >= 0
-        running = started & (t >= job_start) & (t < job_start + dur)
-        phase = jnp.clip(
-            ((t - job_start) * u_phases) // jnp.maximum(dur, 1), 0, u_phases - 1
-        )
-        u_job = jnp.take_along_axis(
-            w.util_levels, phase[:, None], axis=1
-        )[:, 0]
-        busy = jnp.where(running, u_job * cores.astype(u_job.dtype), 0.0)
-        seg = jnp.where(running, job_host, num_hosts)
-        host_busy = jax.ops.segment_sum(busy, seg, num_segments=num_hosts + 1)[:num_hosts]
-        u_h = host_busy / float(cores_per_host)
-
-        queued = jnp.sum((submit <= t) & valid & jnp.logical_not(started))
-        out_t = (u_h, queued.astype(jnp.int32), jnp.sum(running).astype(jnp.int32))
-        new_state = dict(free=free, job_host=job_host, job_start=job_start,
-                         next_job=next_job)
-        return new_state, out_t
-
-    state, (u_th, queue_len, running) = jax.lax.scan(
-        step, init, jnp.arange(t_bins, dtype=jnp.int32)
-    )
-    return SimOutput(
-        u_th=u_th,
-        queue_len=queue_len,
-        running=running,
-        job_start=state["job_start"],
-        job_host=state["job_host"],
+    return simulate_utilization_masked(
+        w,
+        jnp.ones((num_hosts,), jnp.bool_),
+        cores_per_host,
+        max_hosts=num_hosts,
+        t_bins=t_bins,
+        max_starts_per_bin=max_starts_per_bin,
     )
 
 

@@ -10,8 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 import time
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.scenarios import ScenarioSummary
 
 
 class ProposalKind(enum.Enum):
@@ -109,4 +113,61 @@ def propose_from_state(window: int, *, mape: float | None,
             f"predicted draw {power_w/1e3:.1f} kW exceeds cap "
             f"{power_cap_w/1e3:.1f} kW",
             impact={"power_w": power_w}))
+    return out
+
+
+def propose_from_scenario(
+    window: int,
+    summary: "ScenarioSummary",
+    baseline: "ScenarioSummary",
+    *,
+    queue_tolerance: float = 1.5,
+    min_energy_saving_frac: float = 0.02,
+) -> list[Proposal]:
+    """Map a batched what-if candidate's summary to operator proposals.
+
+    The scenario engine (``repro.core.scenarios``) evaluates S candidates
+    against the calibrated twin; each candidate that *dominates* the baseline
+    on a sustainability metric without breaking SLOs becomes a proposal for
+    the HITL gate — the twin recommends, the human decides (paper stage 3).
+    """
+    out: list[Proposal] = []
+    slo_ok = (
+        summary.unplaced_jobs <= baseline.unplaced_jobs
+        and summary.p99_queue <= max(baseline.p99_queue * queue_tolerance,
+                                     baseline.p99_queue + 5.0)
+    )
+    saving = baseline.energy_kwh - summary.energy_kwh
+    if (slo_ok and summary.num_hosts < baseline.num_hosts
+            and saving > min_energy_saving_frac * max(baseline.energy_kwh, 1e-9)):
+        out.append(Proposal(
+            ProposalKind.SCALE_DOWN_IDLE, window,
+            f"what-if '{summary.name}': {summary.num_hosts} hosts "
+            f"(vs {baseline.num_hosts}) saves {saving:.1f} kWh "
+            f"({saving / max(baseline.energy_kwh, 1e-9):.1%}) with "
+            f"p99 queue {summary.p99_queue:.0f} and "
+            f"{summary.unplaced_jobs} unplaced jobs",
+            impact={"scenario": summary.name, "num_hosts": summary.num_hosts,
+                    "energy_saving_kwh": saving,
+                    "p99_queue": summary.p99_queue}))
+    if (summary.num_hosts > baseline.num_hosts
+            and baseline.unplaced_jobs > 0
+            and summary.unplaced_jobs < baseline.unplaced_jobs):
+        out.append(Proposal(
+            ProposalKind.SCALE_UP, window,
+            f"what-if '{summary.name}': {summary.num_hosts} hosts places "
+            f"{baseline.unplaced_jobs - summary.unplaced_jobs} more jobs "
+            f"(baseline leaves {baseline.unplaced_jobs} unplaced)",
+            impact={"scenario": summary.name, "num_hosts": summary.num_hosts,
+                    "unplaced_jobs": summary.unplaced_jobs}))
+    cap = summary.power_cap_w
+    if cap is not None and math.isfinite(cap) and summary.cap_exceeded_bins > 0:
+        out.append(Proposal(
+            ProposalKind.POWER_CAP, window,
+            f"what-if '{summary.name}': predicted draw exceeds cap "
+            f"{cap/1e3:.1f} kW in {summary.cap_exceeded_bins} bins "
+            f"(peak {summary.peak_power_w/1e3:.1f} kW)",
+            impact={"scenario": summary.name,
+                    "cap_exceeded_bins": summary.cap_exceeded_bins,
+                    "peak_power_w": summary.peak_power_w}))
     return out

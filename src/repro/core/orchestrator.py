@@ -26,8 +26,9 @@ import numpy as np
 
 from repro.core.calibrate import CalibrationSpec, SelfCalibrator
 from repro.core.desim import Prediction, SimOutput, predict_metrics, simulate_utilization
-from repro.core.feedback import HITLGate, propose_from_state
+from repro.core.feedback import HITLGate, Proposal, propose_from_scenario, propose_from_state
 from repro.core.power import PowerParams, mape
+from repro.core.scenarios import Scenario, ScenarioSummary, evaluate_scenarios
 from repro.core.slo import NFR1, BiasTracker, SLOMonitor
 from repro.core.telemetry import TelemetryStore, TelemetryWindow
 from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
@@ -58,6 +59,21 @@ class WindowRecord:
     prediction: Prediction
     mape: float | None = None        # filled when telemetry lands
     proposals: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WhatIfResult:
+    """Outcome of one batched what-if sweep.
+
+    ``summaries[0]`` is the baseline (current topology) when the sweep was
+    run with ``include_baseline=True``; ``proposals`` are already submitted
+    to the orchestrator's HITL gate.
+    """
+
+    summaries: list[ScenarioSummary]
+    proposals: list[Proposal]
+    sim: SimOutput              # batched, leaves [S, ...]
+    prediction: Prediction      # batched, leaves [S, ...]
 
 
 class Orchestrator:
@@ -156,15 +172,12 @@ class Orchestrator:
             self.bias.observe(tw.power_w, np.asarray(pred.power_w))
 
             # C_k: calibrate on observed history -> parameters for S_{k+1}.
+            # The calibrator assembles its own bounded history internally;
+            # only the newest window is fed in.
             if self.cfg.calibrate:
                 t0 = time.time()
-                hist = self.store.history(window, self.cfg.history_windows)
-                u = np.concatenate([h.u_th for h in hist], axis=0)
-                p = np.concatenate([h.power_w for h in hist], axis=0)
-                # the calibrator keeps its own history; feed only the newest
                 self.calibrator.observe(tw.u_th, tw.power_w)
                 rec.calib_seconds = time.time() - t0
-                del u, p  # (history is assembled inside the calibrator)
 
             # SLO-aware proposals through the HITL gate.
             props = propose_from_state(
@@ -188,6 +201,43 @@ class Orchestrator:
             if wall > spent:
                 time.sleep(min(wall - spent, 1.0))  # capped for tests
         return rec
+
+    # -- batched what-if analysis (paper Fig. 1, operator loop) --------------
+    def evaluate_whatif(
+        self,
+        scenarios: "list[Scenario] | tuple[Scenario, ...]",
+        *,
+        include_baseline: bool = True,
+        max_hosts: int | None = None,
+    ) -> "WhatIfResult":
+        """Evaluate S candidate configurations in one jitted program.
+
+        Uses the *calibrated* power parameters (the twin's current best model
+        of reality) so what-if outcomes reflect the live datacenter, not the
+        spec sheet.  Candidates are compared against a baseline scenario (the
+        current topology, prepended unless ``include_baseline=False`` and the
+        first scenario is already the baseline); each candidate that improves
+        a sustainability metric without breaking SLOs — or that violates its
+        power cap — becomes a proposal routed through the HITL gate.
+        """
+        params = (self.calibrator.params_for_next()
+                  if self.cfg.calibrate else self.base_params)
+        scs = list(scenarios)
+        if include_baseline:
+            scs = [Scenario(name="baseline")] + scs
+        _, sim, pred, summaries = evaluate_scenarios(
+            self.workload, self.dc, scs,
+            t_bins=self.t_bins, base_params=params, max_hosts=max_hosts,
+            model=self.cfg.power_model,
+        )
+        window = len(self.records)
+        baseline = summaries[0]
+        proposals: list[Proposal] = []
+        for s in summaries[1:]:
+            for p in propose_from_scenario(window, s, baseline):
+                proposals.append(self.gate.submit(p))
+        return WhatIfResult(summaries=summaries, proposals=proposals,
+                            sim=sim, prediction=pred)
 
     def run(self, num_windows: int | None = None) -> list[WindowRecord]:
         n = num_windows if num_windows is not None else self.num_windows

@@ -1,0 +1,360 @@
+"""Batched what-if scenario engine (paper Fig. 1, operator loop).
+
+What-if analysis re-simulates the same trace against S candidate
+configurations — topologies (host count, cores per host), power-model
+parameters, power caps, workload perturbations — and compares SLO and
+sustainability outcomes before any hardware moves.  The naive loop pays S
+trace + compile + run cycles; since the masked DES core
+(:func:`repro.core.desim.simulate_utilization_masked`) is shape-identical
+across candidates once the host axis is padded to a static ``max_hosts``,
+the whole sweep is **one jitted program**: ``jax.vmap`` over a stacked
+scenario pytree, one compilation for any S.
+
+Pipeline::
+
+    [Scenario, ...]  --build_scenario_set-->  ScenarioSet (leaves [S, ...])
+    ScenarioSet      --run_scenarios------->  SimOutput + Prediction ([S, ...])
+    ScenarioSet      --evaluate_scenarios-->  [ScenarioSummary] (host-side)
+
+``Orchestrator.evaluate_whatif`` wires the summaries into SLO-aware
+proposals through the HITL gate (``feedback.propose_from_scenario``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.desim import (
+    Prediction,
+    SimOutput,
+    simulate_utilization_masked,
+)
+from repro.core.power import PowerParams, datacenter_power, energy_kwh
+from repro.traces.schema import (
+    SAMPLE_SECONDS,
+    DatacenterConfig,
+    Workload,
+    host_mask,
+)
+
+Array = jax.Array
+
+#: above this many total [S, jobs, bins] elements the batched read-out is
+#: chunked over time (see desim._READOUT_BLOCK) — ~128 MB per dense float32
+#: intermediate at the threshold, a few of which are live simultaneously.
+_BATCH_READOUT_THRESHOLD = 32_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One what-if candidate.  ``None`` fields inherit the base config.
+
+    Workload perturbations are multiplicative knobs on the shared base trace:
+    ``arrival_scale`` compresses submission times (×k arrival rate),
+    ``duration_scale`` stretches runtimes, ``util_scale`` scales the
+    per-phase utilization profiles (clipped to [0, 1]).
+    """
+
+    name: str = ""
+    num_hosts: int | None = None
+    cores_per_host: int | None = None
+    p_idle: float | None = None
+    p_max: float | None = None
+    r: float | None = None
+    power_cap_w: float | None = None
+    arrival_scale: float = 1.0
+    duration_scale: float = 1.0
+    util_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSet:
+    """Device-ready stacked scenario batch (every array leaf leads with S).
+
+    ``max_hosts`` is the static padded host axis; per-scenario activity is
+    ``host_mask_s``.  ``names`` is aux data (static across jit).
+    """
+
+    workload: Workload        # leaves [S, J, ...]
+    host_mask_s: Array        # [S, max_hosts] bool
+    num_hosts: Array          # [S] int32
+    cores_per_host: Array     # [S] int32
+    params: PowerParams       # leaves [S] float32
+    power_cap_w: Array        # [S] float32 (+inf = uncapped)
+    peak_tflops: Array        # [S] float32
+    names: tuple[str, ...]
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.names)
+
+    @property
+    def max_hosts(self) -> int:
+        return int(self.host_mask_s.shape[-1])
+
+
+jax.tree_util.register_pytree_node(
+    ScenarioSet,
+    lambda s: ((s.workload, s.host_mask_s, s.num_hosts, s.cores_per_host,
+                s.params, s.power_cap_w, s.peak_tflops), s.names),
+    lambda names, c: ScenarioSet(*c, names=names),
+)
+
+
+def _perturb(submit: np.ndarray, dur: np.ndarray, util: np.ndarray,
+             sc: Scenario) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Apply a scenario's workload knobs (host-side numpy: build-time path)."""
+    if sc.arrival_scale != 1.0:
+        # ×k arrival rate = submissions land k× denser on the bin axis
+        submit = np.floor(
+            submit.astype(np.float32) / sc.arrival_scale).astype(np.int32)
+    if sc.duration_scale != 1.0:
+        dur = np.maximum(
+            np.ceil(dur.astype(np.float32) * sc.duration_scale), 1.0
+        ).astype(np.int32)
+    if sc.util_scale != 1.0:
+        util = np.clip(util * sc.util_scale, 0.0, 1.0).astype(np.float32)
+    return submit, dur, util
+
+
+def _scalar(x) -> float:
+    """Collapse a scalar-or-per-host power parameter to one scalar."""
+    return float(np.mean(np.asarray(x)))
+
+
+def build_scenario_set(
+    workload: Workload,
+    dc: DatacenterConfig,
+    scenarios: "list[Scenario] | tuple[Scenario, ...]",
+    base_params: PowerParams = PowerParams(),
+    max_hosts: int | None = None,
+) -> ScenarioSet:
+    """Stack S candidate configurations against one base trace/topology.
+
+    ``max_hosts`` defaults to the largest candidate host count; pass it
+    explicitly to pin a compilation cache key across sweeps of different
+    candidate mixes.
+    """
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    hosts = [sc.num_hosts if sc.num_hosts is not None else dc.num_hosts
+             for sc in scenarios]
+    mh = max(hosts) if max_hosts is None else int(max_hosts)
+    if max(hosts) > mh:
+        raise ValueError(f"scenario wants {max(hosts)} hosts > max_hosts={mh}")
+
+    cores = [sc.cores_per_host if sc.cores_per_host is not None
+             else dc.cores_per_host for sc in scenarios]
+    names = tuple(sc.name or f"s{i}" for i, sc in enumerate(scenarios))
+
+    # Every scenario perturbs the same base trace, so the stacked workload is
+    # assembled host-side in numpy (one device transfer per field) — this
+    # runs on every sweep and must not cost a per-scenario dispatch cascade.
+    s_count, n_jobs = len(scenarios), workload.num_jobs
+    base_sub = np.asarray(workload.submit_bin)
+    base_dur = np.asarray(workload.duration_bins)
+    base_util = np.asarray(workload.util_levels)
+    perturbed = [_perturb(base_sub, base_dur, base_util, sc)
+                 for sc in scenarios]
+    wl = Workload(
+        submit_bin=jnp.asarray(np.stack([p[0] for p in perturbed])),
+        duration_bins=jnp.asarray(np.stack([p[1] for p in perturbed])),
+        cores=jnp.asarray(np.broadcast_to(
+            np.asarray(workload.cores), (s_count, n_jobs))),
+        util_levels=jnp.asarray(np.stack([p[2] for p in perturbed])),
+        valid=jnp.asarray(np.broadcast_to(
+            np.asarray(workload.valid), (s_count, n_jobs))),
+    )
+
+    def pick(field: str):
+        base = _scalar(getattr(base_params, field))
+        return jnp.asarray(
+            [getattr(sc, field) if getattr(sc, field) is not None else base
+             for sc in scenarios], jnp.float32)
+
+    hosts_a = jnp.asarray(hosts, jnp.int32)
+    cores_a = jnp.asarray(cores, jnp.int32)
+    peak = jnp.asarray(
+        [dataclasses.replace(dc, num_hosts=h, cores_per_host=c).peak_tflops
+         for h, c in zip(hosts, cores)], jnp.float32)
+    cap = jnp.asarray(
+        [sc.power_cap_w if sc.power_cap_w is not None else math.inf
+         for sc in scenarios], jnp.float32)
+    return ScenarioSet(
+        workload=wl,
+        host_mask_s=host_mask(hosts_a, mh),
+        num_hosts=hosts_a,
+        cores_per_host=cores_a,
+        params=PowerParams(p_idle=pick("p_idle"), p_max=pick("p_max"),
+                           r=pick("r")),
+        power_cap_w=cap,
+        peak_tflops=peak,
+        names=names,
+    )
+
+
+def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
+                    peak_tflops: Array, model: str) -> Prediction:
+    """Mask-aware :func:`repro.core.desim.predict_metrics` for one scenario.
+
+    Padded (inactive) hosts must not dilute mean utilization or draw idle
+    power, so both aggregations respect the active-host mask.
+    """
+    maskf = mask.astype(u_th.dtype)
+    power = datacenter_power(u_th, params, model=model, online_mask=maskf)
+    e = energy_kwh(power, SAMPLE_SECONDS)
+    util = jnp.sum(u_th * maskf, axis=-1) / jnp.maximum(jnp.sum(maskf), 1.0)
+    tflops = util * peak_tflops
+    eff = tflops / jnp.maximum(e, 1e-9)
+    return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
+                      utilization=util, efficiency=eff)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
+                                             "max_starts_per_bin", "model"))
+def _run_scenarios_jit(
+    ss: ScenarioSet,
+    *,
+    max_hosts: int,
+    t_bins: int,
+    max_starts_per_bin: int,
+    model: str,
+) -> tuple[SimOutput, Prediction]:
+    # the DES core's own readout bound is per-scenario; under the scenario
+    # vmap every intermediate gains the S axis, so the bound must include S
+    # (workload leaves are [S, J]: take J from the trailing axis).
+    n_jobs = int(ss.workload.submit_bin.shape[-1])
+    chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
+
+    def one(w, mask, cores, params, peak):
+        sim = simulate_utilization_masked(
+            w, mask, cores,
+            max_hosts=max_hosts, t_bins=t_bins,
+            max_starts_per_bin=max_starts_per_bin,
+            force_chunked_readout=chunk,
+        )
+        pred = _predict_masked(sim.u_th, params, mask, peak, model)
+        return sim, pred
+
+    return jax.vmap(one)(ss.workload, ss.host_mask_s, ss.cores_per_host,
+                         ss.params, ss.peak_tflops)
+
+
+def run_scenarios(
+    ss: ScenarioSet,
+    *,
+    max_hosts: int,
+    t_bins: int,
+    max_starts_per_bin: int = 64,
+    model: str = "opendc",
+) -> tuple[SimOutput, Prediction]:
+    """Simulate + predict all S scenarios in one jitted program.
+
+    Returns a batched :class:`SimOutput` and :class:`Prediction` whose leaves
+    lead with the scenario axis.  One compilation covers any scenario batch
+    with the same ``(S, max_hosts, t_bins, J)`` shape — the sequential
+    what-if loop's per-candidate retrace/recompile is gone.  Scenario
+    *names* are pytree aux data (part of the jit cache key), so they are
+    anonymized before entering jit — differently-named sweeps of the same
+    shape share one compilation.
+    """
+    anon = dataclasses.replace(ss, names=("",) * ss.num_scenarios)
+    return _run_scenarios_jit(
+        anon, max_hosts=max_hosts, t_bins=t_bins,
+        max_starts_per_bin=max_starts_per_bin, model=model,
+    )
+
+
+# surfaced for the single-compilation regression test; `_cache_size` is
+# private jax API, so its absence must degrade to None, not an import error
+run_scenarios._cache_size = getattr(_run_scenarios_jit, "_cache_size", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSummary:
+    """Host-side per-scenario read-out an operator (or the HITL gate) compares.
+
+    ``kwh_per_cpu_hour`` is NaN when the scenario's workload has zero CPU-hours
+    — an empty trace is surfaced, never hidden behind a clamped denominator.
+    """
+
+    name: str
+    num_hosts: int
+    cores_per_host: int
+    mean_util: float
+    p99_queue: float
+    max_queue: int
+    unplaced_jobs: int
+    total_jobs: int
+    energy_kwh: float
+    mean_power_w: float
+    peak_power_w: float
+    cpu_hours: float
+    kwh_per_cpu_hour: float
+    power_cap_w: float | None
+    cap_exceeded_bins: int
+
+
+def summarize_scenarios(
+    ss: ScenarioSet, sim: SimOutput, pred: Prediction
+) -> list[ScenarioSummary]:
+    """Collapse batched outputs into one comparable record per scenario."""
+    util = np.asarray(pred.utilization)        # [S, T] (mask-aware)
+    queue = np.asarray(sim.queue_len)          # [S, T]
+    start = np.asarray(sim.job_start)          # [S, J]
+    valid = np.asarray(ss.workload.valid)      # [S, J]
+    power = np.asarray(pred.power_w)           # [S, T]
+    energy = np.asarray(pred.energy_kwh)       # [S, T]
+    cap = np.asarray(ss.power_cap_w)           # [S]
+    cpu_h = np.asarray(
+        jax.vmap(lambda w: jnp.sum(w.cpu_hours()))(ss.workload))
+
+    out = []
+    for s, name in enumerate(ss.names):
+        ch = float(cpu_h[s])
+        ekwh = float(energy[s].sum())
+        out.append(ScenarioSummary(
+            name=name,
+            num_hosts=int(ss.num_hosts[s]),
+            cores_per_host=int(ss.cores_per_host[s]),
+            mean_util=float(util[s].mean()),
+            p99_queue=float(np.percentile(queue[s], 99)),
+            max_queue=int(queue[s].max()),
+            unplaced_jobs=int(((start[s] < 0) & valid[s]).sum()),
+            total_jobs=int(valid[s].sum()),
+            energy_kwh=ekwh,
+            mean_power_w=float(power[s].mean()),
+            peak_power_w=float(power[s].max()),
+            cpu_hours=ch,
+            kwh_per_cpu_hour=(ekwh / ch) if ch > 0 else float("nan"),
+            power_cap_w=None if np.isinf(cap[s]) else float(cap[s]),
+            cap_exceeded_bins=int((power[s] > cap[s]).sum()),
+        ))
+    return out
+
+
+def evaluate_scenarios(
+    workload: Workload,
+    dc: DatacenterConfig,
+    scenarios: "list[Scenario] | tuple[Scenario, ...]",
+    *,
+    t_bins: int,
+    base_params: PowerParams = PowerParams(),
+    max_hosts: int | None = None,
+    model: str = "opendc",
+    max_starts_per_bin: int = 64,
+) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
+    """End-to-end what-if sweep: build, batch-simulate, summarize."""
+    ss = build_scenario_set(workload, dc, scenarios, base_params,
+                            max_hosts=max_hosts)
+    sim, pred = run_scenarios(
+        ss, max_hosts=ss.max_hosts, t_bins=t_bins,
+        max_starts_per_bin=max_starts_per_bin, model=model,
+    )
+    return ss, sim, pred, summarize_scenarios(ss, sim, pred)

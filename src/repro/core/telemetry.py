@@ -6,10 +6,16 @@ Parquet-on-shared-FS data platform.  In this single-program JAX runtime the
 
   * telemetry arrives **asynchronously** and is **windowed** — records are
     clipped to the window of operation before the simulator sees them;
-  * the store is **columnar** and persistent (zstd-compressed msgpack
-    columns — same role Parquet played in the prototype);
+  * the store is **columnar** and persistent (compressed msgpack columns —
+    same role Parquet played in the prototype);
   * consumers (simulator, calibrator, UI) read *consistent snapshots* keyed
     by window index, never a half-written window.
+
+Optional-dependency policy: compression goes through :mod:`repro.core.codec`,
+which prefers ``zstandard`` but falls back to stdlib ``zlib`` when it is not
+installed — importing this module must never fail on a missing compressor.
+Every flushed file starts with a one-byte codec id (``0x01`` zstd, ``0x02``
+zlib) so either reader opens either file.
 """
 
 from __future__ import annotations
@@ -22,8 +28,8 @@ from typing import Iterable
 
 import msgpack
 import numpy as np
-import zstandard
 
+from repro.core import codec
 from repro.traces.schema import SAMPLE_SECONDS
 
 
@@ -73,8 +79,9 @@ class TelemetryStore:
     """Columnar, windowed, thread-safe telemetry store.
 
     Append-only per window; readers get immutable snapshots.  ``flush`` and
-    ``load`` persist columns as zstd(msgpack) — inspectable runtime state,
-    like the prototype's shared-directory workspace (§3.1).
+    ``load`` persist columns as codec-tagged compressed msgpack (zstd when
+    available, zlib otherwise) — inspectable runtime state, like the
+    prototype's shared-directory workspace (§3.1).
     """
 
     def __init__(self, bins_per_window: int,
@@ -132,9 +139,7 @@ class TelemetryStore:
                         for k, v in tw.extras.items()
                     },
                 }
-        blob = zstandard.ZstdCompressor(level=6).compress(
-            msgpack.packb(cols, use_bin_type=True)
-        )
+        blob = codec.compress(msgpack.packb(cols, use_bin_type=True), level=6)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         with os.fdopen(fd, "wb") as f:
             f.write(blob)
@@ -144,8 +149,7 @@ class TelemetryStore:
     def load(cls, path: str) -> "TelemetryStore":
         with open(path, "rb") as f:
             cols = msgpack.unpackb(
-                zstandard.ZstdDecompressor().decompress(f.read()), raw=False,
-                strict_map_key=False,
+                codec.decompress(f.read()), raw=False, strict_map_key=False,
             )
         store = cls(cols["bins_per_window"], cols["sample_seconds"])
         for w, rec in cols["windows"].items():

@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.sharding import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (one v5e-class pod) or 2x16x16 (two pods, 512 chips)."""
@@ -19,17 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
         )
-    return jax.make_mesh(
-        shape, axes,
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
-    )
+    return make_mesh_compat(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh():
     """Single-device 'mesh' for smoke tests (1x1 data/model)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        devices=jax.devices()[:1],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -16,6 +16,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.parallel.sharding import make_mesh_compat
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
@@ -62,8 +64,4 @@ def plan_mesh(
 def build_mesh(plan: MeshPlan, devices=None) -> Mesh:
     devices = devices if devices is not None else jax.devices()
     n = int(np.prod(plan.shape))
-    return jax.make_mesh(
-        plan.shape, plan.axes,
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.shape),
-    )
+    return make_mesh_compat(plan.shape, plan.axes, devices=devices[:n])

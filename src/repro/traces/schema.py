@@ -81,6 +81,31 @@ class DatacenterConfig:
         ) / 1e12
 
 
+def stack_workloads(ws: "list[Workload] | tuple[Workload, ...]") -> Workload:
+    """Stack S workloads into one batched Workload with leaves ``[S, J, ...]``.
+
+    Workloads with differing job counts are first padded (see
+    :func:`pad_workload`) to the common maximum so every scenario is
+    shape-identical — the precondition for vmapping the DES over the
+    scenario axis (``repro.core.scenarios``).
+    """
+    if not ws:
+        raise ValueError("need at least one workload to stack")
+    to_jobs = max(w.num_jobs for w in ws)
+    padded = [pad_workload(w, to_jobs) for w in ws]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *padded)
+
+
+def host_mask(num_hosts: "int | np.ndarray | Array", max_hosts: int) -> Array:
+    """Active-host mask(s) ``[..., max_hosts]`` for a padded host axis.
+
+    ``num_hosts`` may be a scalar (one mask) or an ``[S]`` vector (a mask per
+    scenario).
+    """
+    n = jnp.asarray(num_hosts, jnp.int32)
+    return jnp.arange(max_hosts, dtype=jnp.int32) < n[..., None]
+
+
 def pad_workload(w: Workload, to_jobs: int) -> Workload:
     """Pad a workload to a fixed job count (static shapes for jit)."""
     j = w.num_jobs

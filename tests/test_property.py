@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is optional (same policy as ``zstandard``, see
+``repro/core/codec.py``): environments without it skip this module instead
+of failing collection.
+"""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import ckpt

@@ -81,15 +81,16 @@ def test_sharding_rules():
     import jax
     from jax.sharding import PartitionSpec as P
 
-    from repro.parallel.sharding import logical_to_spec
+    from repro.parallel.sharding import (
+        abstract_mesh_compat, logical_to_spec, make_mesh_compat,
+    )
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     # trivial mesh: everything replicated
     assert logical_to_spec(("batch", "embed"), (8, 16), mesh, "train") == P()
 
     # fake bigger mesh via abstract mesh
-    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh_compat((4, 2), ("data", "model"))
     spec = logical_to_spec(("batch", "ff"), (8, 16), mesh, "train")
     assert spec == P(("data",), "model") or spec == P("data", "model")
     # non-divisible dims drop their sharding
@@ -134,12 +135,14 @@ def test_moe_capacity_and_gates():
 HLO_SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # the stripped subprocess env must not let jax probe absent accelerators
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.analysis.hlo import analyze_compiled_text
+    from repro.parallel.sharding import make_mesh_compat
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     L, B, D, F = 6, 8, 64, 128
 
     def step(ws, x):

@@ -1,0 +1,183 @@
+"""Batched what-if scenario engine: equivalence, masking, proposals."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.desim import simulate_utilization
+from repro.core.feedback import ProposalKind, propose_from_scenario
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.power import PowerParams
+from repro.core.scenarios import (
+    Scenario,
+    build_scenario_set,
+    evaluate_scenarios,
+    run_scenarios,
+)
+from repro.traces.schema import DatacenterConfig, Workload, stack_workloads
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+T_BINS = int(0.5 * BINS_PER_DAY)
+DC = DatacenterConfig(num_hosts=64, cores_per_host=16)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_surf22_like(SurfTraceSpec(days=0.5, seed=11), DC)
+
+
+@pytest.fixture(scope="module")
+def reference(workload):
+    return simulate_utilization(
+        workload, num_hosts=DC.num_hosts, cores_per_host=DC.cores_per_host,
+        t_bins=T_BINS)
+
+
+def test_s1_matches_simulate_utilization_bitwise(workload, reference):
+    """The batched engine at S=1 equals the single-topology path exactly."""
+    _, sim, _, _ = evaluate_scenarios(
+        workload, DC, [Scenario(name="base")], t_bins=T_BINS)
+    np.testing.assert_array_equal(np.asarray(sim.u_th[0]),
+                                  np.asarray(reference.u_th))
+    np.testing.assert_array_equal(np.asarray(sim.queue_len[0]),
+                                  np.asarray(reference.queue_len))
+    np.testing.assert_array_equal(np.asarray(sim.running[0]),
+                                  np.asarray(reference.running))
+    np.testing.assert_array_equal(np.asarray(sim.job_start[0]),
+                                  np.asarray(reference.job_start))
+    np.testing.assert_array_equal(np.asarray(sim.job_host[0]),
+                                  np.asarray(reference.job_host))
+
+
+def test_padded_scenario_matches_unpadded(workload, reference):
+    """A 64-host scenario inside a max_hosts=400 batch == an unpadded 64-host
+    run on the active prefix, with zero utilization on the padded tail."""
+    _, sim, _, _ = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="h64", num_hosts=64), Scenario(name="h400", num_hosts=400)],
+        t_bins=T_BINS, max_hosts=400)
+    u = np.asarray(sim.u_th[0])
+    np.testing.assert_array_equal(u[:, :64], np.asarray(reference.u_th))
+    assert (u[:, 64:] == 0.0).all()
+    np.testing.assert_array_equal(np.asarray(sim.job_start[0]),
+                                  np.asarray(reference.job_start))
+    np.testing.assert_array_equal(np.asarray(sim.queue_len[0]),
+                                  np.asarray(reference.queue_len))
+    # padded hosts never receive jobs
+    jh = np.asarray(sim.job_host[0])
+    assert jh.max() < 64
+
+
+def test_masked_metrics_ignore_padded_hosts(workload):
+    """Mean utilization and power are computed over active hosts only —
+    padding must not dilute performance metrics or add phantom idle draw."""
+    _, sim, pred, summaries = evaluate_scenarios(
+        workload, DC, [Scenario(name="h64", num_hosts=64)],
+        t_bins=T_BINS, max_hosts=400)
+    u = np.asarray(sim.u_th[0])
+    np.testing.assert_allclose(
+        np.asarray(pred.utilization[0]), u[:, :64].mean(axis=-1), rtol=1e-5)
+    # 64 active hosts' idle floor, not 400
+    p_idle = float(np.asarray(PowerParams().p_idle))
+    assert np.asarray(pred.power_w[0]).min() >= 64 * p_idle - 1e-3
+    assert np.asarray(pred.power_w[0]).max() < 400 * p_idle * 5
+
+
+def test_summaries_report_unplaced_and_nan_on_empty(workload):
+    # a 1-host scenario cannot place everything in half a day
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="tiny", num_hosts=1), Scenario(name="base")],
+        t_bins=T_BINS)
+    tiny, base = summaries
+    assert tiny.total_jobs == base.total_jobs == workload.num_jobs
+    assert tiny.unplaced_jobs > base.unplaced_jobs
+    assert tiny.kwh_per_cpu_hour > 0
+
+    # empty workload -> NaN energy intensity, surfaced (not clamped)
+    empty = Workload(
+        submit_bin=jnp.zeros((2,), jnp.int32),
+        duration_bins=jnp.ones((2,), jnp.int32),
+        cores=jnp.ones((2,), jnp.int32),
+        util_levels=jnp.ones((2, 2), jnp.float32),
+        valid=jnp.zeros((2,), bool),
+    )
+    _, _, _, (s,) = evaluate_scenarios(
+        empty, DC, [Scenario(name="empty")], t_bins=8)
+    assert s.total_jobs == 0 and s.cpu_hours == 0.0
+    assert math.isnan(s.kwh_per_cpu_hour)
+
+
+def test_workload_perturbations_change_outcomes(workload):
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="base"),
+         Scenario(name="hot", util_scale=2.0),
+         Scenario(name="rush", arrival_scale=4.0)],
+        t_bins=T_BINS)
+    base, hot, rush = summaries
+    assert hot.energy_kwh > base.energy_kwh       # hotter jobs draw more
+    assert rush.max_queue >= base.max_queue       # compressed arrivals queue
+
+
+def test_stack_workloads_pads_to_common_max():
+    a = Workload(jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32),
+                 jnp.ones((2,), jnp.int32), jnp.ones((2, 2), jnp.float32),
+                 jnp.ones((2,), bool))
+    b = Workload(jnp.zeros((5,), jnp.int32), jnp.ones((5,), jnp.int32),
+                 jnp.ones((5,), jnp.int32), jnp.ones((5, 2), jnp.float32),
+                 jnp.ones((5,), bool))
+    s = stack_workloads([a, b])
+    assert s.submit_bin.shape == (2, 5)
+    assert not bool(s.valid[0, 2:].any())         # a's padding is invalid
+    assert bool(s.valid[1].all())
+
+
+def test_single_compilation_across_scenario_mixes(workload):
+    """Different candidate mixes with identical (S, max_hosts, J) shapes hit
+    the same compiled program — the engine's whole point."""
+    if run_scenarios._cache_size is None:
+        pytest.skip("jax private _cache_size API unavailable")
+    # distinct names on purpose: names are jit-cache-key aux data and must be
+    # anonymized by run_scenarios, or every renamed sweep recompiles
+    ss1 = build_scenario_set(
+        workload, DC,
+        [Scenario(name="alpha", num_hosts=16),
+         Scenario(name="beta", num_hosts=48)], max_hosts=64)
+    ss2 = build_scenario_set(
+        workload, DC,
+        [Scenario(name="gamma", num_hosts=24),
+         Scenario(name="delta", num_hosts=64)], max_hosts=64)
+    run_scenarios(ss1, max_hosts=64, t_bins=T_BINS)[0].u_th.block_until_ready()
+    after_first = run_scenarios._cache_size()
+    run_scenarios(ss2, max_hosts=64, t_bins=T_BINS)[0].u_th.block_until_ready()
+    assert run_scenarios._cache_size() == after_first
+
+
+def test_propose_from_scenario_rules(workload):
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="base"),
+         Scenario(name="half", num_hosts=32),
+         Scenario(name="capped", power_cap_w=100.0)],  # absurdly low cap
+        t_bins=T_BINS)
+    base, half, capped = summaries
+    kinds = {p.kind for p in propose_from_scenario(0, half, base)}
+    if half.unplaced_jobs <= base.unplaced_jobs:
+        assert ProposalKind.SCALE_DOWN_IDLE in kinds
+    cap_props = propose_from_scenario(0, capped, base)
+    assert any(p.kind == ProposalKind.POWER_CAP for p in cap_props)
+
+
+def test_orchestrator_evaluate_whatif_routes_gate(workload):
+    orch = Orchestrator(workload, DC, T_BINS,
+                        OrchestratorConfig(bins_per_window=36, calibrate=False))
+    res = orch.evaluate_whatif([Scenario(name="h32", num_hosts=32),
+                                Scenario(name="cap", power_cap_w=100.0)])
+    assert res.summaries[0].name == "baseline"
+    assert len(res.summaries) == 3
+    assert any(p.kind == ProposalKind.POWER_CAP for p in res.proposals)
+    # proposals were submitted to the HITL gate, pending human decision
+    assert len(orch.gate.pending()) >= len(res.proposals)
