@@ -7,6 +7,12 @@ vmaps the masked DES over the stacked scenario pytree, and compiles **once**
 for the whole sweep.  This benchmark times both paths at S=16 candidate host
 counts on the same trace and reports the wall-clock ratio (target: >= 5x).
 
+A second case sweeps the *scheduler* axis: a (4 placement policies x 4
+topologies) grid runs as one jitted program — the policy is a traced
+scenario knob, so compile count stays 1 for the whole grid — and the
+worst-fit/no-backfill lane is checked bit-for-bit against a direct
+``simulate_utilization_masked`` call (the pre-policy-kernel scheduler).
+
     PYTHONPATH=src python benchmarks/whatif_batch.py
 """
 
@@ -15,10 +21,12 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.core.desim import simulate
+from repro.core.desim import PLACEMENT_POLICIES, simulate, simulate_utilization_masked
 from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
-from repro.traces.schema import DatacenterConfig
+from repro.traces.schema import DatacenterConfig, host_mask
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
 
 
@@ -74,6 +82,61 @@ def run(days: float = 2.0, num_scenarios: int = 16) -> dict:
     }
 
 
+def run_policy_grid(days: float = 1.0) -> dict:
+    """(4 policies x 4 topologies) scheduler sweep as ONE jitted program.
+
+    Verifies the two properties the policy-axis refactor promises:
+      * single compile for the whole grid (checked via the jit cache size
+        when jax exposes it);
+      * the worst-fit/no-backfill lane is bit-for-bit the plain masked DES.
+    """
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    host_counts = [64, 128, 200, 277]
+    policies = sorted(PLACEMENT_POLICIES)
+    grid = [Scenario(name=f"{p}-h{h}", policy=p, num_hosts=h,
+                     backfill_depth=0 if p == "worst_fit" else 8)
+            for p in policies for h in host_counts]
+
+    jax.clear_caches()
+    cache = run_scenarios._cache_size
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, grid)
+    sim, _ = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins)
+    sim.u_th.block_until_ready()
+    grid_s = time.time() - t0
+    compiles = cache() if cache is not None else None
+
+    # exactness: the worst-fit/no-backfill lanes must reproduce the direct
+    # masked-DES output (the pre-policy-kernel scheduler) exactly.
+    exact = True
+    for i, sc in enumerate(grid):
+        if sc.policy != "worst_fit":
+            continue
+        ref = simulate_utilization_masked(
+            jax.tree.map(lambda x: x[i], ss.workload),
+            host_mask(sc.num_hosts, ss.max_hosts),
+            jnp.asarray(dc.cores_per_host, jnp.int32),
+            max_hosts=ss.max_hosts, t_bins=t_bins)
+        exact &= bool(
+            (np.asarray(sim.u_th[i]) == np.asarray(ref.u_th)).all()
+            and (np.asarray(sim.job_start[i])
+                 == np.asarray(ref.job_start)).all()
+            and (np.asarray(sim.job_host[i])
+                 == np.asarray(ref.job_host)).all())
+
+    return {
+        "grid": len(grid),
+        "policies": len(policies),
+        "topologies": len(host_counts),
+        "t_bins": t_bins,
+        "grid_s": grid_s,
+        "compiles": compiles,
+        "worst_fit_exact": exact,
+    }
+
+
 def main() -> None:
     r = run()
     print(f"what-if sweep, S={r['num_scenarios']} topologies, "
@@ -87,6 +150,15 @@ def main() -> None:
     target = 5.0
     ok = r["speedup_cold"] >= target
     print(f"  target >= {target:.0f}x cold: {'PASS' if ok else 'FAIL'}")
+
+    g = run_policy_grid()
+    print(f"\npolicy grid: {g['policies']} policies x {g['topologies']} "
+          f"topologies = S={g['grid']}, {g['t_bins']} bins: {g['grid_s']:.2f} s")
+    if g["compiles"] is not None:
+        print(f"  compiled programs: {g['compiles']} "
+              f"({'PASS' if g['compiles'] == 1 else 'FAIL'}: single compile)")
+    print(f"  worst-fit lanes == plain masked DES: "
+          f"{'PASS' if g['worst_fit_exact'] else 'FAIL'}")
 
 
 if __name__ == "__main__":

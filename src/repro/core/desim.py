@@ -10,9 +10,19 @@ time-marching simulation** whose state is tensors over ``[hosts]`` and
 
 Event-driven semantics preserved at bin granularity:
   * job completion releases cores at the bin where ``start + duration`` falls;
-  * FCFS placement with a bounded ``fori_loop`` of first-fit attempts per bin
-    (strict head-of-line blocking, like OpenDC's default scheduler);
+  * FCFS placement with a bounded while-loop of placement attempts per bin
+    (head-of-line blocking, like OpenDC's default scheduler), optionally
+    relaxed by a bounded backfill window (see below);
   * per-job piecewise utilization profiles (OpenDC "fragments").
+
+The *placement policy* — which host a job lands on, and whether queued
+successors may jump a blocked head — is a **traced scenario knob**, not a
+code path: host selection goes through a branchless ``policy_id``-indexed
+score kernel (first-fit / best-fit / worst-fit / random-fit) and a traced
+``backfill_depth`` bounds how many blocked-queue successors may start ahead
+of the head.  Because both knobs are int32 scalars, the whole simulation
+stays ``jax.vmap``-able over a scenario axis and one jitted program sweeps
+schedulers *and* topologies together (see :mod:`repro.core.scenarios`).
 
 Everything is one jitted program — NFR2's "7 days in under an hour" becomes
 "7 days in well under a second" on a single CPU core (see benchmarks).
@@ -40,6 +50,94 @@ _READOUT_BLOCK = 288
 #: single pass (no lax.map): the intermediates are small and the blocked
 #: scan only adds compile time.
 _READOUT_CHUNK_THRESHOLD = 4_000_000
+
+# -- placement policies -------------------------------------------------------
+# Policy ids are *traced* int32 scalars: a scenario batch carries one per lane
+# and the score kernel indexes a stacked [4, hosts] score table, so sweeping
+# schedulers never retraces or recompiles.
+
+FIRST_FIT = 0   #: lowest-indexed host that fits (packs the host prefix)
+BEST_FIT = 1    #: fitting host with the fewest free cores (tightest pack)
+WORST_FIT = 2   #: fitting host with the most free cores (spreads load;
+                #: OpenDC's default mem/core-aware weigher — the seed behavior)
+RANDOM_FIT = 3  #: deterministic pseudo-random fitting host (hash of
+                #: (bin, placement#, host) — reproducible, seed-free)
+
+#: name -> traced policy id, the scenario-facing vocabulary
+PLACEMENT_POLICIES = {
+    "first_fit": FIRST_FIT,
+    "best_fit": BEST_FIT,
+    "worst_fit": WORST_FIT,
+    "random_fit": RANDOM_FIT,
+}
+
+#: id -> name (summaries / examples print this)
+POLICY_NAMES = {v: k for k, v in PLACEMENT_POLICIES.items()}
+
+#: bias making best-fit scores positive: scores must stay above the -1
+#: "does not fit" sentinel, and free-core counts are far below 2**24.
+_BEST_FIT_BIAS = 1 << 24
+
+
+def resolve_policy(policy: "str | int | None") -> int:
+    """Map a policy name (or id) to its int id; ``None`` -> worst-fit.
+
+    >>> resolve_policy("first_fit")
+    0
+    >>> resolve_policy(None) == PLACEMENT_POLICIES["worst_fit"]
+    True
+    """
+    if policy is None:
+        return WORST_FIT
+    if isinstance(policy, str):
+        try:
+            return PLACEMENT_POLICIES[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown placement policy {policy!r}; "
+                f"one of {sorted(PLACEMENT_POLICIES)}") from None
+    p = int(policy)
+    if p not in POLICY_NAMES:
+        raise ValueError(f"policy id {p} not in {sorted(POLICY_NAMES)}")
+    return p
+
+
+def _hash_scores(host_idx: Array, t: Array, salt: Array) -> Array:
+    """Deterministic per-host pseudo-random scores for RANDOM_FIT.
+
+    A seed-free integer mix of (bin, placement-count-within-bin, host index):
+    reproducible across runs and replicable in plain numpy (the test
+    reference), with no PRNG key threaded through the scan carry.
+    """
+    x = (host_idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+         ^ t.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+         ^ salt.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D))
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return (x & jnp.uint32(0x7FFFFF)).astype(jnp.int32)
+
+
+def _policy_host(free: Array, fits: Array, policy_id: Array,
+                 t: Array, salt: Array, max_hosts: int) -> Array:
+    """Branchless host selection: argmax of a policy-indexed score.
+
+    Builds the [4, max_hosts] score table (all int32, all >= 0 so the -1
+    "does not fit" sentinel always loses), gathers the row for the *traced*
+    ``policy_id``, and takes the argmax over fitting hosts.  Ties break to
+    the lowest host index (argmax returns the first maximum), which makes
+    WORST_FIT bit-identical to the pre-policy-kernel scheduler
+    ``argmax(where(fits, free, -1))``.
+    """
+    idx = jnp.arange(max_hosts, dtype=jnp.int32)
+    scores = jnp.stack([
+        max_hosts - idx,                                    # FIRST_FIT
+        _BEST_FIT_BIAS - jnp.minimum(free, _BEST_FIT_BIAS - 1),  # BEST_FIT
+        free,                                               # WORST_FIT
+        _hash_scores(idx, t, salt),                         # RANDOM_FIT
+    ])
+    score = scores[jnp.clip(policy_id, 0, len(PLACEMENT_POLICIES) - 1)]
+    return jnp.argmax(jnp.where(fits, score, -1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +174,9 @@ def simulate_utilization_masked(
     max_hosts: int,
     t_bins: int,
     max_starts_per_bin: int = 64,
+    policy_id: "Array | int | None" = None,
+    backfill_depth: "Array | int | None" = None,
+    max_backfill: int = 0,
     force_chunked_readout: bool = False,
 ) -> SimOutput:
     """Masked-host-axis DES core (trace-level; callers jit/vmap it).
@@ -84,18 +185,46 @@ def simulate_utilization_masked(
     marks the active hosts and ``cores_per_host`` is a *traced* int32 scalar.
     Inactive hosts start with 0 free cores and are excluded from placement, so
     they never run jobs and report 0 utilization.  Because every argument that
-    varies between what-if candidates (mask, cores, workload) is a tensor,
-    the whole simulation is ``jax.vmap``-able over a scenario axis — the
-    batched engine in :mod:`repro.core.scenarios` is exactly that vmap.
+    varies between what-if candidates (mask, cores, workload, **policy**) is a
+    tensor, the whole simulation is ``jax.vmap``-able over a scenario axis —
+    the batched engine in :mod:`repro.core.scenarios` is exactly that vmap.
 
-    Placement (the event-driven part) is a bounded first-fit loop inside the
-    scan body; utilization accumulation is a segment-sum scatter over host
-    assignments.  Utilization is *independent of power-model parameters* —
-    the structural fact the Self-Calibrator exploits (see calibrate.py).
+    Scheduling knobs (both *traced* int32 scalars, hence scenario axes):
+
+    ``policy_id``
+        Which host a placeable job lands on — one of
+        :data:`PLACEMENT_POLICIES` (``None`` -> :data:`WORST_FIT`, the
+        seed scheduler).  Selection is a branchless score-table gather
+        (:func:`_policy_host`), so all four policies share one program.
+    ``backfill_depth``
+        When the FCFS head job is submitted but no host fits it, up to
+        ``backfill_depth`` of its queued successors (submitted, valid, not
+        already started) may start ahead of it, scanned in queue order.
+        0 (the default) is strict head-of-line blocking.  Backfill never
+        runs while the head is merely unsubmitted — jobs cannot start
+        before jobs that have not arrived yet.
+
+    ``max_backfill`` is the *static* window the traced depth is clipped to;
+    leaving it 0 compiles the backfill machinery out entirely, making the
+    default path structurally identical to the pre-policy-kernel scheduler.
+
+    Placement (the event-driven part) is a bounded policy-kernel loop inside
+    the scan body; utilization accumulation is a segment-sum scatter over
+    host assignments.  Utilization is *independent of power-model
+    parameters* — the structural fact the Self-Calibrator exploits (see
+    calibrate.py).
     """
+    if not 0 <= max_backfill <= 31:
+        # the skip bitmask is uint32 and bit max_backfill must be addressable
+        raise ValueError(f"max_backfill must be in [0, 31], got {max_backfill}")
     j = w.num_jobs
     host_mask = jnp.asarray(host_mask, jnp.bool_)
     cores_per_host = jnp.asarray(cores_per_host, jnp.int32)
+    policy_id = jnp.asarray(
+        WORST_FIT if policy_id is None else policy_id, jnp.int32)
+    backfill_depth = jnp.asarray(
+        0 if backfill_depth is None else backfill_depth, jnp.int32)
+    depth = jnp.minimum(backfill_depth, max_backfill)
 
     submit = w.submit_bin
     dur = jnp.maximum(w.duration_bins, 1)
@@ -103,8 +232,9 @@ def simulate_utilization_masked(
     valid = w.valid
 
     # The scan carries *placement state only*: which job starts where/when,
-    # free cores, and a [t_bins+1, max_hosts] core-release table written at
-    # placement time (row t_bins absorbs clipped past-horizon releases).
+    # free cores, a [t_bins+1, max_hosts] core-release table written at
+    # placement time (row t_bins absorbs clipped past-horizon releases), and
+    # a skip bitmask of backfilled jobs ahead of the FCFS pointer.
     # Everything read out per bin (utilization field, queue depth, running
     # count) is reconstructed vectorized AFTER the scan from job_start —
     # per-bin O(jobs) passes inside the scan would dominate the runtime and,
@@ -114,6 +244,10 @@ def simulate_utilization_masked(
         job_host=jnp.full((j,), -1, jnp.int32),
         job_start=jnp.full((j,), -1, jnp.int32),
         next_job=jnp.asarray(0, jnp.int32),
+        # bit d set <=> job next_job+d already started via backfill.  Bit 0 is
+        # never set at rest: every pointer advance immediately consumes the
+        # trailing run of set bits, so the head is always an unstarted job.
+        skip=jnp.asarray(0, jnp.uint32),
         release=jnp.zeros((t_bins + 1, max_hosts), jnp.int32),
     )
 
@@ -123,50 +257,97 @@ def simulate_utilization_masked(
         return ((next_job < j) & (submit[jid] <= t) & valid[jid]
                 & jnp.logical_not(blocked))
 
+    def consume_skips(next_job, skip):
+        """Advance the FCFS pointer past already-backfilled (started) jobs."""
+        # trailing-ones count: first zero bit index.  Backfill sets bits
+        # 1..max_backfill only, so a zero always exists in this window.
+        bits = ((skip >> jnp.arange(max_backfill + 2, dtype=jnp.uint32))
+                & jnp.uint32(1))
+        k = jnp.argmin(bits).astype(jnp.uint32)
+        return next_job + k.astype(jnp.int32), skip >> k
+
     # Placement runs in a while_loop with a deliberately *small* carry:
     # under vmap, the batched while_loop body re-runs for every lane until
     # all lanes are done and select-freezes every carry leaf per iteration,
     # so carrying the [jobs]-sized state here would cost O(S * jobs) per
     # attempt.  Instead each attempt records (job, host) into a
     # [max_starts_per_bin] buffer; the buffers are scattered into the scan
-    # carry once per bin.
+    # carry once per bin.  Every iteration either places exactly one job or
+    # sets `blocked` (ending the bin), so the loop is bounded by
+    # max_starts_per_bin placements.
     def place_one(carry):
-        free, next_job, blocked, t, attempts, buf_jid, buf_host = carry
-        jid = jnp.minimum(next_job, j - 1)
+        free, next_job, skip, blocked, t, n, buf_jid, buf_host = carry
+        jid_h = jnp.minimum(next_job, j - 1)
         # re-checked inside the body: finished vmap lanes degrade to no-ops.
         eligible = head_ready(next_job, blocked, t)
+        head_fits = jnp.any((free >= cores[jid_h]) & host_mask)
+        place_head = eligible & head_fits
+
+        if max_backfill > 0:
+            # head is submitted but capacity-blocked: scan the next
+            # `depth` queue positions in order for the first startable job.
+            d_off = jnp.arange(1, max_backfill + 1, dtype=jnp.int32)  # [K]
+            cand = next_job + d_off
+            jid_c = jnp.minimum(cand, j - 1)
+            already = ((skip >> d_off.astype(jnp.uint32)) & 1).astype(bool)
+            elig_c = ((cand < j) & (submit[jid_c] <= t) & valid[jid_c]
+                      & jnp.logical_not(already) & (d_off <= depth))
+            fits_c = ((free[None, :] >= cores[jid_c][:, None])
+                      & host_mask[None, :])                          # [K, H]
+            startable = elig_c & jnp.any(fits_c, axis=1)             # [K]
+            any_bf = jnp.any(startable)
+            d_sel = jnp.argmax(startable)        # first startable offset - 1
+            place_bf = eligible & jnp.logical_not(head_fits) & any_bf
+            jid = jnp.where(place_head, jid_h, jid_c[d_sel])
+        else:
+            place_bf = jnp.asarray(False)
+            jid = jid_h
+
         need = cores[jid]
         fits = (free >= need) & host_mask
-        any_fit = jnp.any(fits)
-        # worst-fit among fitting hosts (most free cores) — spreads load like
-        # OpenDC's default mem/core-aware filter+weigher pipeline.
-        host = jnp.argmax(jnp.where(fits, free, -1))
-        do_place = eligible & any_fit
+        host = _policy_host(free, fits, policy_id, t,
+                            jnp.asarray(n, jnp.int32), max_hosts)
+        do_place = place_head | place_bf
         free = free.at[host].add(jnp.where(do_place, -need, 0))
-        buf_jid = buf_jid.at[attempts].set(jnp.where(do_place, jid, j))
-        buf_host = buf_host.at[attempts].set(host)
-        next_job = next_job + do_place.astype(jnp.int32)
-        # strict FCFS: if the head job could not be placed, stop this bin.
-        blocked = blocked | (eligible & jnp.logical_not(any_fit))
-        return free, next_job, blocked, t, attempts + 1, buf_jid, buf_host
+        buf_jid = buf_jid.at[n].set(jnp.where(do_place, jid, j))
+        buf_host = buf_host.at[n].set(host)
+
+        if max_backfill > 0:
+            # head placed: advance past it and any backfilled successors.
+            nj_adv, skip_adv = consume_skips(next_job + 1, skip >> 1)
+            skip_bf = skip | jnp.where(
+                place_bf,
+                jnp.uint32(1) << (d_sel + 1).astype(jnp.uint32),
+                jnp.uint32(0))
+            next_job = jnp.where(place_head, nj_adv, next_job)
+            skip = jnp.where(place_head, skip_adv, skip_bf)
+            blocked = blocked | (eligible & jnp.logical_not(head_fits)
+                                 & jnp.logical_not(any_bf))
+        else:
+            next_job = next_job + place_head.astype(jnp.int32)
+            # strict FCFS: if the head job could not be placed, stop this bin.
+            blocked = blocked | (eligible & jnp.logical_not(head_fits))
+
+        return (free, next_job, skip, blocked, t,
+                n + do_place.astype(jnp.int32), buf_jid, buf_host)
 
     def keep_placing(carry):
-        free, next_job, blocked, t, attempts, buf_jid, buf_host = carry
-        return head_ready(next_job, blocked, t) & (attempts < max_starts_per_bin)
+        free, next_job, skip, blocked, t, n, buf_jid, buf_host = carry
+        return head_ready(next_job, blocked, t) & (n < max_starts_per_bin)
 
     def step(state, t):
         # 1) completions: cores banked in the release table at placement time.
         free = state["free"] + state["release"][t]
 
-        # 2) FCFS placement, bounded attempts with early exit: most bins
-        # place far fewer than max_starts_per_bin jobs, and the while_loop
-        # stops as soon as the head job is unsubmittable or blocked instead
+        # 2) placement, bounded attempts with early exit: most bins place far
+        # fewer than max_starts_per_bin jobs, and the while_loop stops as
+        # soon as the head job is unsubmittable or the bin is blocked instead
         # of burning the remaining attempts on no-op iterations.
         buf_jid = jnp.full((max_starts_per_bin,), j, jnp.int32)
         buf_host = jnp.zeros((max_starts_per_bin,), jnp.int32)
-        free, next_job, _, _, _, buf_jid, buf_host = jax.lax.while_loop(
+        free, next_job, skip, _, _, _, buf_jid, buf_host = jax.lax.while_loop(
             keep_placing, place_one,
-            (free, state["next_job"], jnp.asarray(False), t,
+            (free, state["next_job"], state["skip"], jnp.asarray(False), t,
              jnp.asarray(0, jnp.int32), buf_jid, buf_host),
         )
 
@@ -181,7 +362,7 @@ def simulate_utilization_masked(
             jnp.where(placed, cores[jj], 0))
 
         new_state = dict(free=free, job_host=job_host, job_start=job_start,
-                         next_job=next_job, release=release)
+                         next_job=next_job, skip=skip, release=release)
         return new_state, None
 
     state, _ = jax.lax.scan(
@@ -248,7 +429,8 @@ def simulate_utilization_masked(
 
 
 @functools.partial(jax.jit, static_argnames=("num_hosts", "cores_per_host",
-                                             "t_bins", "max_starts_per_bin"))
+                                             "t_bins", "max_starts_per_bin",
+                                             "policy", "backfill_depth"))
 def simulate_utilization(
     w: Workload,
     *,
@@ -256,12 +438,17 @@ def simulate_utilization(
     cores_per_host: int,
     t_bins: int,
     max_starts_per_bin: int = 64,
+    policy: "str | int | None" = None,
+    backfill_depth: int = 0,
 ) -> SimOutput:
     """Run the vectorized DES and return the utilization field.
 
     Single-topology entry point: the masked core with every host active.
+    ``policy``/``backfill_depth`` select the scheduler (static here — one
+    compile per policy; defaults reproduce the seed worst-fit FCFS exactly).
     See :func:`simulate_utilization_masked` for the vmap-able core and
-    :mod:`repro.core.scenarios` for the batched what-if engine built on it.
+    :mod:`repro.core.scenarios` for the batched what-if engine that sweeps
+    policies and topologies in one program.
     """
     return simulate_utilization_masked(
         w,
@@ -270,6 +457,9 @@ def simulate_utilization(
         max_hosts=num_hosts,
         t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin,
+        policy_id=resolve_policy(policy),
+        backfill_depth=backfill_depth,
+        max_backfill=int(backfill_depth),
     )
 
 

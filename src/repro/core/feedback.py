@@ -25,6 +25,7 @@ class ProposalKind(enum.Enum):
     SCALE_UP = "scale_up"                  # major
     RESTART_STRAGGLER = "restart_straggler"  # major
     REBALANCE = "rebalance"                # major
+    SCHEDULER_CHANGE = "scheduler_change"  # major: swap placement policy
 
 
 #: proposal kinds the orchestrator may apply without a human (minor changes)
@@ -123,6 +124,8 @@ def propose_from_scenario(
     *,
     queue_tolerance: float = 1.5,
     min_energy_saving_frac: float = 0.02,
+    min_wait_improvement_frac: float = 0.10,
+    max_energy_regression_frac: float = 0.02,
 ) -> list[Proposal]:
     """Map a batched what-if candidate's summary to operator proposals.
 
@@ -130,6 +133,13 @@ def propose_from_scenario(
     against the calibrated twin; each candidate that *dominates* the baseline
     on a sustainability metric without breaking SLOs becomes a proposal for
     the HITL gate — the twin recommends, the human decides (paper stage 3).
+
+    Scheduler changes: a candidate on the *same topology* whose placement
+    policy or backfill depth differs from the baseline's becomes a
+    SCHEDULER_CHANGE proposal when it places at least as many jobs, cuts
+    mean queue wait by ``min_wait_improvement_frac`` (or places strictly
+    more jobs), and costs at most ``max_energy_regression_frac`` extra
+    energy — software-only wins surface before any hardware moves.
     """
     out: list[Proposal] = []
     slo_ok = (
@@ -160,6 +170,37 @@ def propose_from_scenario(
             f"(baseline leaves {baseline.unplaced_jobs} unplaced)",
             impact={"scenario": summary.name, "num_hosts": summary.num_hosts,
                     "unplaced_jobs": summary.unplaced_jobs}))
+    same_topology = (summary.num_hosts == baseline.num_hosts
+                     and summary.cores_per_host == baseline.cores_per_host)
+    scheduler_differs = (summary.policy != baseline.policy
+                         or summary.backfill_depth != baseline.backfill_depth)
+    if same_topology and scheduler_differs:
+        places_more = summary.unplaced_jobs < baseline.unplaced_jobs
+        # NaN-safe: a NaN baseline wait (nothing started) never qualifies.
+        wait_cut = baseline.mean_wait_bins - summary.mean_wait_bins
+        wait_improves = (
+            wait_cut > min_wait_improvement_frac
+            * max(baseline.mean_wait_bins, 1.0))
+        energy_ok = (summary.energy_kwh <= baseline.energy_kwh
+                     * (1.0 + max_energy_regression_frac))
+        if (summary.unplaced_jobs <= baseline.unplaced_jobs and energy_ok
+                and (places_more or wait_improves)):
+            out.append(Proposal(
+                ProposalKind.SCHEDULER_CHANGE, window,
+                f"what-if '{summary.name}': switch scheduler to "
+                f"{summary.policy}/backfill={summary.backfill_depth} "
+                f"(from {baseline.policy}/backfill={baseline.backfill_depth}): "
+                f"mean wait {summary.mean_wait_bins:.1f} bins "
+                f"(vs {baseline.mean_wait_bins:.1f}), "
+                f"{summary.unplaced_jobs} unplaced "
+                f"(vs {baseline.unplaced_jobs}), "
+                f"energy {summary.energy_kwh:.1f} kWh "
+                f"(vs {baseline.energy_kwh:.1f})",
+                impact={"scenario": summary.name, "policy": summary.policy,
+                        "backfill_depth": summary.backfill_depth,
+                        "mean_wait_bins": summary.mean_wait_bins,
+                        "unplaced_jobs": summary.unplaced_jobs,
+                        "energy_kwh": summary.energy_kwh}))
     cap = summary.power_cap_w
     if cap is not None and math.isfinite(cap) and summary.cap_exceeded_bins > 0:
         out.append(Proposal(

@@ -215,10 +215,13 @@ class Orchestrator:
         Uses the *calibrated* power parameters (the twin's current best model
         of reality) so what-if outcomes reflect the live datacenter, not the
         spec sheet.  Candidates are compared against a baseline scenario (the
-        current topology, prepended unless ``include_baseline=False`` and the
-        first scenario is already the baseline); each candidate that improves
-        a sustainability metric without breaking SLOs — or that violates its
-        power cap — becomes a proposal routed through the HITL gate.
+        current topology and scheduler — worst-fit FCFS, no backfill —
+        prepended unless ``include_baseline=False`` and the first scenario is
+        already the baseline); each candidate that improves a sustainability
+        metric without breaking SLOs, cuts queue wait via a cheaper
+        *scheduler* (placement policy / backfill depth, a software-only
+        change), or violates its power cap becomes a proposal routed through
+        the HITL gate.
         """
         params = (self.calibrator.params_for_next()
                   if self.cfg.calibrate else self.base_params)

@@ -1,14 +1,16 @@
 """Batched what-if scenario engine (paper Fig. 1, operator loop).
 
 What-if analysis re-simulates the same trace against S candidate
-configurations — topologies (host count, cores per host), power-model
+configurations — topologies (host count, cores per host), **placement
+policies** (first/best/worst/random-fit, backfill depth), power-model
 parameters, power caps, workload perturbations — and compares SLO and
 sustainability outcomes before any hardware moves.  The naive loop pays S
 trace + compile + run cycles; since the masked DES core
 (:func:`repro.core.desim.simulate_utilization_masked`) is shape-identical
 across candidates once the host axis is padded to a static ``max_hosts``,
-the whole sweep is **one jitted program**: ``jax.vmap`` over a stacked
-scenario pytree, one compilation for any S.
+and the scheduler is a *traced* ``policy_id``/``backfill_depth`` pair, the
+whole sweep is **one jitted program**: ``jax.vmap`` over a stacked scenario
+pytree, one compilation for any S — including (policies x topologies) grids.
 
 Pipeline::
 
@@ -17,7 +19,8 @@ Pipeline::
     ScenarioSet      --evaluate_scenarios-->  [ScenarioSummary] (host-side)
 
 ``Orchestrator.evaluate_whatif`` wires the summaries into SLO-aware
-proposals through the HITL gate (``feedback.propose_from_scenario``).
+proposals through the HITL gate (``feedback.propose_from_scenario``),
+including scheduler-change recommendations.
 """
 
 from __future__ import annotations
@@ -31,8 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.desim import (
+    POLICY_NAMES,
     Prediction,
     SimOutput,
+    resolve_policy,
     simulate_utilization_masked,
 )
 from repro.core.power import PowerParams, datacenter_power, energy_kwh
@@ -55,15 +60,34 @@ _BATCH_READOUT_THRESHOLD = 32_000_000
 class Scenario:
     """One what-if candidate.  ``None`` fields inherit the base config.
 
-    Workload perturbations are multiplicative knobs on the shared base trace:
-    ``arrival_scale`` compresses submission times (×k arrival rate),
-    ``duration_scale`` stretches runtimes, ``util_scale`` scales the
-    per-phase utilization profiles (clipped to [0, 1]).
+    Axes:
+      * **Topology** — ``num_hosts`` / ``cores_per_host`` (defaults: the base
+        :class:`~repro.traces.schema.DatacenterConfig`).
+      * **Scheduler** — ``policy`` is a placement-policy name from
+        :data:`repro.core.desim.PLACEMENT_POLICIES` (``"first_fit"``,
+        ``"best_fit"``, ``"worst_fit"``, ``"random_fit"``; ``None`` means
+        worst-fit, the seed scheduler) and ``backfill_depth`` lets up to that
+        many queued successors start ahead of a capacity-blocked FCFS head
+        (0 = strict head-of-line blocking).  Both become *traced* scalars,
+        so a scheduler sweep shares one compilation with a topology sweep.
+      * **Power model** — ``p_idle`` / ``p_max`` / ``r`` override the
+        calibrated parameters; ``power_cap_w`` flags bins above the cap.
+      * **Workload** — multiplicative knobs on the shared base trace:
+        ``arrival_scale`` compresses submission times (×k arrival rate),
+        ``duration_scale`` stretches runtimes, ``util_scale`` scales the
+        per-phase utilization profiles (clipped to [0, 1]).
+
+    >>> Scenario(name="bf", policy="best_fit", backfill_depth=4).policy
+    'best_fit'
+    >>> Scenario().backfill_depth        # default: strict FCFS worst-fit
+    0
     """
 
     name: str = ""
     num_hosts: int | None = None
     cores_per_host: int | None = None
+    policy: str | int | None = None
+    backfill_depth: int = 0
     p_idle: float | None = None
     p_max: float | None = None
     r: float | None = None
@@ -77,18 +101,48 @@ class Scenario:
 class ScenarioSet:
     """Device-ready stacked scenario batch (every array leaf leads with S).
 
-    ``max_hosts`` is the static padded host axis; per-scenario activity is
-    ``host_mask_s``.  ``names`` is aux data (static across jit).
+    Built by :func:`build_scenario_set`; consumed by :func:`run_scenarios`.
+    Shapes (``S`` scenarios, ``J`` padded jobs, ``H = max_hosts`` padded
+    hosts):
+
+    ======================  ==========================  =====================
+    field                   shape / dtype               meaning
+    ======================  ==========================  =====================
+    ``workload``            leaves ``[S, J, ...]``      per-scenario perturbed
+                                                        copies of one base
+                                                        trace (padding jobs
+                                                        have ``valid=False``)
+    ``host_mask_s``         ``[S, H]`` bool             active-host mask;
+                                                        padded hosts never run
+                                                        jobs or draw power
+    ``num_hosts``           ``[S]`` int32               active host count
+    ``cores_per_host``      ``[S]`` int32               cores per active host
+    ``policy_id``           ``[S]`` int32               placement policy (see
+                                                        ``PLACEMENT_POLICIES``)
+    ``backfill_depth``      ``[S]`` int32               successors that may
+                                                        jump a blocked head
+    ``params``              leaves ``[S]`` float32      power-model params
+    ``power_cap_w``         ``[S]`` float32             +inf = uncapped
+    ``peak_tflops``         ``[S]`` float32             topology peak
+    ======================  ==========================  =====================
+
+    ``names`` (tuple of str) and ``max_backfill`` (static int: the compile-
+    time backfill window all traced depths are clipped to) are pytree *aux
+    data* — part of the jit cache key, not device arrays.  ``max_hosts`` is
+    implied by ``host_mask_s.shape[-1]``.
     """
 
     workload: Workload        # leaves [S, J, ...]
     host_mask_s: Array        # [S, max_hosts] bool
     num_hosts: Array          # [S] int32
     cores_per_host: Array     # [S] int32
+    policy_id: Array          # [S] int32
+    backfill_depth: Array     # [S] int32
     params: PowerParams       # leaves [S] float32
     power_cap_w: Array        # [S] float32 (+inf = uncapped)
     peak_tflops: Array        # [S] float32
     names: tuple[str, ...]
+    max_backfill: int = 0
 
     @property
     def num_scenarios(self) -> int:
@@ -102,8 +156,9 @@ class ScenarioSet:
 jax.tree_util.register_pytree_node(
     ScenarioSet,
     lambda s: ((s.workload, s.host_mask_s, s.num_hosts, s.cores_per_host,
-                s.params, s.power_cap_w, s.peak_tflops), s.names),
-    lambda names, c: ScenarioSet(*c, names=names),
+                s.policy_id, s.backfill_depth, s.params, s.power_cap_w,
+                s.peak_tflops), (s.names, s.max_backfill)),
+    lambda aux, c: ScenarioSet(*c, names=aux[0], max_backfill=aux[1]),
 )
 
 
@@ -137,9 +192,23 @@ def build_scenario_set(
 ) -> ScenarioSet:
     """Stack S candidate configurations against one base trace/topology.
 
-    ``max_hosts`` defaults to the largest candidate host count; pass it
-    explicitly to pin a compilation cache key across sweeps of different
-    candidate mixes.
+    Host-side (numpy) assembly: each :class:`Scenario`'s knobs are resolved
+    against the base ``dc``/``base_params``, workload perturbations are
+    applied to copies of the base trace, and everything is stacked into a
+    device-ready :class:`ScenarioSet` whose array leaves lead with the
+    scenario axis ``[S, ...]``.
+
+    Padding semantics: the host axis is padded to ``max_hosts`` (default:
+    the largest candidate host count — pass it explicitly to pin one
+    compilation cache key across sweeps of different candidate mixes) and
+    per-scenario activity is recorded in ``host_mask_s``; padded hosts never
+    receive jobs, contribute no utilization and draw no power.  Per-host
+    power parameters are collapsed to scalars on this path (see ROADMAP).
+    The static backfill window ``max_backfill`` is the max candidate depth,
+    so depth-0 sweeps compile the backfill machinery out entirely.
+
+    Raises ``ValueError`` on an empty scenario list or a candidate wanting
+    more hosts than ``max_hosts``.
     """
     if not scenarios:
         raise ValueError("need at least one scenario")
@@ -180,6 +249,12 @@ def build_scenario_set(
 
     hosts_a = jnp.asarray(hosts, jnp.int32)
     cores_a = jnp.asarray(cores, jnp.int32)
+    depths = [max(int(sc.backfill_depth), 0) for sc in scenarios]
+    if max(depths) > 31:
+        # the DES skip bitmask is uint32 — reject rather than silently
+        # mis-schedule (simulate_utilization_masked enforces the same bound)
+        raise ValueError(
+            f"backfill_depth {max(depths)} > 31 (uint32 skip-mask width)")
     peak = jnp.asarray(
         [dataclasses.replace(dc, num_hosts=h, cores_per_host=c).peak_tflops
          for h, c in zip(hosts, cores)], jnp.float32)
@@ -191,11 +266,15 @@ def build_scenario_set(
         host_mask_s=host_mask(hosts_a, mh),
         num_hosts=hosts_a,
         cores_per_host=cores_a,
+        policy_id=jnp.asarray([resolve_policy(sc.policy) for sc in scenarios],
+                              jnp.int32),
+        backfill_depth=jnp.asarray(depths, jnp.int32),
         params=PowerParams(p_idle=pick("p_idle"), p_max=pick("p_max"),
                            r=pick("r")),
         power_cap_w=cap,
         peak_tflops=peak,
         names=names,
+        max_backfill=max(depths),
     )
 
 
@@ -232,17 +311,20 @@ def _run_scenarios_jit(
     n_jobs = int(ss.workload.submit_bin.shape[-1])
     chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
 
-    def one(w, mask, cores, params, peak):
+    def one(w, mask, cores, policy_id, backfill_depth, params, peak):
         sim = simulate_utilization_masked(
             w, mask, cores,
             max_hosts=max_hosts, t_bins=t_bins,
             max_starts_per_bin=max_starts_per_bin,
+            policy_id=policy_id, backfill_depth=backfill_depth,
+            max_backfill=ss.max_backfill,   # static aux, uniform over S
             force_chunked_readout=chunk,
         )
         pred = _predict_masked(sim.u_th, params, mask, peak, model)
         return sim, pred
 
     return jax.vmap(one)(ss.workload, ss.host_mask_s, ss.cores_per_host,
+                         ss.policy_id, ss.backfill_depth,
                          ss.params, ss.peak_tflops)
 
 
@@ -256,13 +338,19 @@ def run_scenarios(
 ) -> tuple[SimOutput, Prediction]:
     """Simulate + predict all S scenarios in one jitted program.
 
-    Returns a batched :class:`SimOutput` and :class:`Prediction` whose leaves
-    lead with the scenario axis.  One compilation covers any scenario batch
-    with the same ``(S, max_hosts, t_bins, J)`` shape — the sequential
-    what-if loop's per-candidate retrace/recompile is gone.  Scenario
-    *names* are pytree aux data (part of the jit cache key), so they are
-    anonymized before entering jit — differently-named sweeps of the same
-    shape share one compilation.
+    Returns a batched :class:`SimOutput` and :class:`Prediction` whose array
+    leaves lead with the scenario axis: ``sim.u_th`` is
+    ``[S, t_bins, max_hosts]`` (padded hosts read 0), ``sim.job_start`` /
+    ``sim.job_host`` are ``[S, J]`` (-1 = never started), and every
+    :class:`~repro.core.desim.Prediction` leaf is ``[S, t_bins]``.
+
+    One compilation covers any scenario batch with the same
+    ``(S, max_hosts, t_bins, J, max_backfill)`` shape — the sequential
+    what-if loop's per-candidate retrace/recompile is gone, and because the
+    placement policy is a traced ``[S]`` axis, scheduler sweeps ride the
+    same program as topology sweeps.  Scenario *names* are pytree aux data
+    (part of the jit cache key), so they are anonymized before entering jit
+    — differently-named sweeps of the same shape share one compilation.
     """
     anon = dataclasses.replace(ss, names=("",) * ss.num_scenarios)
     return _run_scenarios_jit(
@@ -280,6 +368,15 @@ run_scenarios._cache_size = getattr(_run_scenarios_jit, "_cache_size", None)
 class ScenarioSummary:
     """Host-side per-scenario read-out an operator (or the HITL gate) compares.
 
+    Scheduler provenance and outcome travel together: ``policy`` /
+    ``backfill_depth`` identify the placement policy the scenario ran,
+    ``mean_wait_bins`` / ``p99_wait_bins`` are queue-wait statistics
+    (``job_start - submit`` in 5-minute bins, over jobs that started; NaN if
+    nothing started) and ``unplaced_jobs`` counts valid jobs that never
+    started inside the horizon — the fields
+    :func:`repro.core.feedback.propose_from_scenario` needs to recommend a
+    scheduler change on wait/placement grounds against an energy budget.
+
     ``kwh_per_cpu_hour`` is NaN when the scenario's workload has zero CPU-hours
     — an empty trace is surfaced, never hidden behind a clamped denominator.
     """
@@ -287,9 +384,13 @@ class ScenarioSummary:
     name: str
     num_hosts: int
     cores_per_host: int
+    policy: str
+    backfill_depth: int
     mean_util: float
     p99_queue: float
     max_queue: int
+    mean_wait_bins: float
+    p99_wait_bins: float
     unplaced_jobs: int
     total_jobs: int
     energy_kwh: float
@@ -308,10 +409,13 @@ def summarize_scenarios(
     util = np.asarray(pred.utilization)        # [S, T] (mask-aware)
     queue = np.asarray(sim.queue_len)          # [S, T]
     start = np.asarray(sim.job_start)          # [S, J]
+    submit = np.asarray(ss.workload.submit_bin)  # [S, J] (post-perturbation)
     valid = np.asarray(ss.workload.valid)      # [S, J]
     power = np.asarray(pred.power_w)           # [S, T]
     energy = np.asarray(pred.energy_kwh)       # [S, T]
     cap = np.asarray(ss.power_cap_w)           # [S]
+    policy = np.asarray(ss.policy_id)          # [S]
+    depth = np.asarray(ss.backfill_depth)      # [S]
     cpu_h = np.asarray(
         jax.vmap(lambda w: jnp.sum(w.cpu_hours()))(ss.workload))
 
@@ -319,10 +423,18 @@ def summarize_scenarios(
     for s, name in enumerate(ss.names):
         ch = float(cpu_h[s])
         ekwh = float(energy[s].sum())
+        placed = (start[s] >= 0) & valid[s]
+        waits = (start[s] - submit[s])[placed]
         out.append(ScenarioSummary(
             name=name,
             num_hosts=int(ss.num_hosts[s]),
             cores_per_host=int(ss.cores_per_host[s]),
+            policy=POLICY_NAMES[int(policy[s])],
+            backfill_depth=int(depth[s]),
+            mean_wait_bins=(float(waits.mean()) if waits.size
+                            else float("nan")),
+            p99_wait_bins=(float(np.percentile(waits, 99)) if waits.size
+                           else float("nan")),
             mean_util=float(util[s].mean()),
             p99_queue=float(np.percentile(queue[s], 99)),
             max_queue=int(queue[s].max()),
@@ -350,7 +462,17 @@ def evaluate_scenarios(
     model: str = "opendc",
     max_starts_per_bin: int = 64,
 ) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
-    """End-to-end what-if sweep: build, batch-simulate, summarize."""
+    """End-to-end what-if sweep: build, batch-simulate, summarize.
+
+    Convenience wrapper over :func:`build_scenario_set` ->
+    :func:`run_scenarios` -> :func:`summarize_scenarios`; returns all four
+    artifacts (the device-side batch plus host-side summaries) so callers
+    can both rank candidates and drill into per-bin fields.  ``scenarios``
+    may sweep any :class:`Scenario` axis — topology, placement policy,
+    backfill depth, power model, caps, workload scaling — and the whole
+    sweep still compiles once per ``(S, max_hosts, t_bins, J, max_backfill)``
+    shape.
+    """
     ss = build_scenario_set(workload, dc, scenarios, base_params,
                             max_hosts=max_hosts)
     sim, pred = run_scenarios(

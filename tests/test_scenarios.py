@@ -156,6 +156,40 @@ def test_single_compilation_across_scenario_mixes(workload):
     assert run_scenarios._cache_size() == after_first
 
 
+def test_policy_grid_single_compilation(workload):
+    """A (policies x topologies) grid shares one compiled program with any
+    other mix of the same (S, max_hosts, J, max_backfill) shape — the
+    scheduler axis is traced, never a retrace."""
+    if run_scenarios._cache_size is None:
+        pytest.skip("jax private _cache_size API unavailable")
+    grid1 = [Scenario(name=f"{p}-h{h}", policy=p, num_hosts=h,
+                      backfill_depth=2)
+             for p in ("first_fit", "worst_fit") for h in (32, 64)]
+    grid2 = [Scenario(name=f"{p}-h{h}", policy=p, num_hosts=h,
+                      backfill_depth=d)
+             for (p, d) in (("best_fit", 1), ("random_fit", 2))
+             for h in (16, 48)]
+    ss1 = build_scenario_set(workload, DC, grid1, max_hosts=64)
+    ss2 = build_scenario_set(workload, DC, grid2, max_hosts=64)
+    assert ss1.max_backfill == ss2.max_backfill == 2
+    run_scenarios(ss1, max_hosts=64, t_bins=T_BINS)[0].u_th.block_until_ready()
+    after_first = run_scenarios._cache_size()
+    run_scenarios(ss2, max_hosts=64, t_bins=T_BINS)[0].u_th.block_until_ready()
+    assert run_scenarios._cache_size() == after_first
+
+
+def test_summary_wait_fields(workload):
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="base"), Scenario(name="tiny", num_hosts=1)],
+        t_bins=T_BINS)
+    base, tiny = summaries
+    assert base.policy == "worst_fit" and base.backfill_depth == 0
+    assert np.isfinite(base.mean_wait_bins)
+    assert tiny.mean_wait_bins > base.mean_wait_bins   # starved topology waits
+    assert tiny.p99_wait_bins >= tiny.mean_wait_bins
+
+
 def test_propose_from_scenario_rules(workload):
     _, _, _, summaries = evaluate_scenarios(
         workload, DC,

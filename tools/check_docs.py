@@ -1,0 +1,84 @@
+"""Docs checks: markdown link integrity + docstring doctests.
+
+Offline by design (CI runs without network): external http(s) links are
+recorded but not fetched; relative links must resolve to files inside the
+repo.  Doctests run over the public-API modules that carry examples.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: markdown files whose links must resolve
+MARKDOWN = ["README.md", "ROADMAP.md", *sorted(
+    str(p.relative_to(REPO)) for p in (REPO / "docs").glob("*.md"))]
+
+#: modules whose docstring examples must execute
+DOCTEST_MODULES = [
+    "repro.core.desim",
+    "repro.core.scenarios",
+    "repro.core.codec",
+    "repro.traces.schema",
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in MARKDOWN:
+        md = REPO / rel
+        if not md.exists():
+            errors.append(f"{rel}: file missing")
+            continue
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def run_doctests() -> tuple[list[str], int]:
+    errors, attempted = [], 0
+    for name in DOCTEST_MODULES:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as e:  # import failure is a docs failure too
+            errors.append(f"{name}: import failed: {e}")
+            continue
+        result = doctest.testmod(mod, verbose=False)
+        attempted += result.attempted
+        if result.failed:
+            errors.append(f"{name}: {result.failed} doctest failure(s)")
+    return errors, attempted
+
+
+def main() -> int:
+    errors = check_links()
+    doc_errors, attempted = run_doctests()
+    errors += doc_errors
+    if attempted == 0:
+        errors.append("no doctests ran — public-API examples went missing")
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    print(f"checked {len(MARKDOWN)} markdown files, "
+          f"ran {attempted} doctests: "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
