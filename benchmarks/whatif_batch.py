@@ -13,6 +13,12 @@ scenario knob, so compile count stays 1 for the whole grid — and the
 worst-fit/no-backfill lane is checked bit-for-bit against a direct
 ``simulate_utilization_masked`` call (the pre-policy-kernel scheduler).
 
+A third case sweeps the *carbon* axes: a (carbon-aware power caps x
+deferrable-job time shifts x topologies) grid against a diurnal
+grid-carbon-intensity trace — single-compile is **asserted** (cap
+parameters are traced ``[S]`` scalars, shifts are same-shape workload
+data), including across re-parameterized grids of the same shape.
+
     PYTHONPATH=src python benchmarks/whatif_batch.py
 """
 
@@ -26,6 +32,7 @@ import numpy as np
 
 from repro.core.desim import PLACEMENT_POLICIES, simulate, simulate_utilization_masked
 from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
+from repro.traces.carbon import make_diurnal_carbon
 from repro.traces.schema import DatacenterConfig, host_mask
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
 
@@ -137,6 +144,62 @@ def run_policy_grid(days: float = 1.0) -> dict:
     }
 
 
+def run_carbon_grid(days: float = 1.0) -> dict:
+    """(carbon-cap x time-shift x topology) grid as ONE jitted program.
+
+    The carbon axes are traced ``[S]`` scalars (cap base/slope) or
+    same-shape workload data (time shifts), so the sweep must share one
+    compilation — asserted via the jit cache when jax exposes it, exactly
+    like the policy grid.  A second differently-valued grid of the same
+    shape must not add a compile either.
+    """
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    intensity = make_diurnal_carbon(t_bins)
+
+    def grid(cap_scale: float) -> list[Scenario]:
+        return [
+            Scenario(name=f"c{cap}-s{sh}-h{h}",
+                     carbon_cap_base_w=cap * cap_scale,
+                     carbon_cap_slope=-60.0,
+                     shift_bins=sh, num_hosts=h)
+            for cap in (40_000.0, 60_000.0)
+            for sh in (0, 36)
+            for h in (128, 277)]
+
+    jax.clear_caches()
+    cache = run_scenarios._cache_size
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, grid(1.0), max_hosts=277)
+    sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins,
+                              carbon_intensity=intensity)
+    pred.gco2.block_until_ready()
+    grid_s = time.time() - t0
+    compiles = cache() if cache is not None else None
+
+    ss2 = build_scenario_set(w, dc, grid(1.25), max_hosts=277)
+    _, pred2 = run_scenarios(ss2, max_hosts=ss2.max_hosts, t_bins=t_bins,
+                             carbon_intensity=intensity)
+    pred2.gco2.block_until_ready()
+    compiles_after = cache() if cache is not None else None
+    if compiles is not None:
+        # the acceptance gate: a (caps x shifts x topologies) sweep is ONE
+        # compiled program, and re-parameterizing it does not retrace.
+        assert compiles == 1, f"carbon grid compiled {compiles}x, want 1"
+        assert compiles_after == compiles, "re-parameterized grid retraced"
+
+    gco2 = np.asarray(pred.gco2).sum(axis=1)
+    return {
+        "grid": len(ss.names),
+        "t_bins": t_bins,
+        "grid_s": grid_s,
+        "compiles": compiles,
+        "gco2_min_kg": float(gco2.min() / 1e3),
+        "gco2_max_kg": float(gco2.max() / 1e3),
+    }
+
+
 def main() -> None:
     r = run()
     print(f"what-if sweep, S={r['num_scenarios']} topologies, "
@@ -159,6 +222,15 @@ def main() -> None:
               f"({'PASS' if g['compiles'] == 1 else 'FAIL'}: single compile)")
     print(f"  worst-fit lanes == plain masked DES: "
           f"{'PASS' if g['worst_fit_exact'] else 'FAIL'}")
+
+    c = run_carbon_grid()
+    print(f"\ncarbon grid: (2 caps x 2 shifts x 2 topologies) = "
+          f"S={c['grid']}, {c['t_bins']} bins: {c['grid_s']:.2f} s")
+    if c["compiles"] is not None:
+        print(f"  compiled programs: {c['compiles']} (PASS: single compile, "
+              "asserted incl. re-parameterization)")
+    print(f"  per-scenario gCO2 spread: {c['gco2_min_kg']:.1f} - "
+          f"{c['gco2_max_kg']:.1f} kgCO2")
 
 
 if __name__ == "__main__":

@@ -1,23 +1,29 @@
-"""What-if analysis: sweep schedulers AND topologies in the twin, compare SLOs.
+"""What-if analysis: sweep schedulers, topologies AND carbon knobs in the twin.
 
 The twin's DES is trace- and configuration-driven (FR2), so capacity
 planning is a config edit: re-simulate the same workload against candidate
-topologies and compare queueing, utilization, energy and cost-of-carbon
-proxies — the operator-facing workflow of Fig. 1, entirely offline.
+configurations and compare queueing, utilization, energy and **cost of
+carbon** — the operator-facing workflow of Fig. 1, entirely offline.
 
-Since the placement policy is a *traced* scenario knob (PR 2), the sweep has
-two axes: host count x placement policy (first-fit / best-fit / worst-fit /
-random-fit; every policy except the worst-fit baseline also runs with
-depth-bounded backfill — no reservations, so a blocked head has no
-guaranteed start time).  All
-candidates run through the **batched scenario engine**
-(``repro.core.scenarios``): the host axis is padded to the largest
-candidate, every scenario is shape-identical, and the whole
-(policies x topologies) grid is one jitted ``vmap`` — one compilation
-instead of one per candidate (see ``benchmarks/whatif_batch.py`` for the
-speedup and single-compile measurements).  Per topology, the example prints
-which scheduler won on mean queue wait without placing fewer jobs — the
-software-only knob an operator can turn before buying hardware.
+Three axes ride one compiled program here:
+
+  * host count x placement policy (first-fit / best-fit / worst-fit /
+    random-fit; every policy except the worst-fit baseline also runs with
+    depth-bounded backfill);
+  * carbon-aware power caps — the per-bin cap ``base + slope * intensity_t``
+    tightens when the grid runs dirty and is *enforced* in the read-out
+    (delivered power is clipped, performance throttled);
+  * deferrable-job time-shifting (``shift_bins``) — batch work slides into
+    cleaner-grid bins.
+
+All candidates run through the **batched scenario engine**
+(``repro.core.scenarios``) against a synthetic diurnal grid
+carbon-intensity trace (``repro.traces.carbon``): the host axis is padded
+to the largest candidate, every scenario is shape-identical, and the whole
+grid is one jitted ``vmap`` — one compilation instead of one per candidate
+(see ``benchmarks/whatif_batch.py``).  Per topology, the example prints
+which scheduler won on mean queue wait, and which carbon knob bought the
+largest gCO2 cut and at what performance price.
 
     PYTHONPATH=src python examples/whatif_scaling.py
 """
@@ -26,6 +32,7 @@ import math
 
 from repro.core.desim import PLACEMENT_POLICIES
 from repro.core.scenarios import Scenario, evaluate_scenarios
+from repro.traces.carbon import make_diurnal_carbon
 from repro.traces.schema import DatacenterConfig
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
 
@@ -35,6 +42,7 @@ def main() -> None:
     t_bins = int(days * BINS_PER_DAY)
     base = DatacenterConfig()
     workload = make_surf22_like(SurfTraceSpec(days=days), base)
+    intensity = make_diurnal_carbon(t_bins)       # [T] gCO2/kWh, diurnal
 
     topologies = (64, 128, 200, 277)
     policies = sorted(PLACEMENT_POLICIES)
@@ -42,23 +50,35 @@ def main() -> None:
         Scenario(name=f"{p}-h{h}", policy=p, num_hosts=h,
                  backfill_depth=0 if p == "worst_fit" else 8)
         for h in topologies for p in policies]
+    # carbon knobs on the full topology: tighter caps when the grid is
+    # dirty, and batch work shifted 3/6 hours toward the midday solar dip
+    candidates += [
+        Scenario(name="carbon-cap", carbon_cap_base_w=48_000.0,
+                 carbon_cap_slope=-60.0),
+        Scenario(name="shift-3h", shift_bins=36),
+        Scenario(name="shift-6h", shift_bins=72),
+    ]
     _, _, _, summaries = evaluate_scenarios(
-        workload, base, candidates, t_bins=t_bins)
+        workload, base, candidates, t_bins=t_bins,
+        carbon_intensity=intensity)
 
-    print(f"{'hosts':>6s} {'policy':>11s} {'mean util':>10s} "
+    print(f"{'scenario':>14s} {'hosts':>6s} {'policy':>11s} {'mean util':>10s} "
           f"{'wait bins':>10s} {'unplaced':>9s} {'energy kWh':>11s} "
-          f"{'kWh/CPUh':>9s}")
+          f"{'kgCO2':>8s} {'g/kWh':>6s}")
     for s in summaries:
         # kwh_per_cpu_hour is NaN for an empty workload — surfaced, not
-        # hidden behind a clamped denominator.
-        print(f"{s.num_hosts:6d} {s.policy:>11s} {s.mean_util:10.1%} "
-              f"{s.mean_wait_bins:10.2f} {s.unplaced_jobs:9d} "
-              f"{s.energy_kwh:11.1f} {s.kwh_per_cpu_hour:9.3f}")
+        # hidden behind a clamped denominator; gCO2 would be NaN without an
+        # intensity trace.
+        print(f"{s.name:>14s} {s.num_hosts:6d} {s.policy:>11s} "
+              f"{s.mean_util:10.1%} {s.mean_wait_bins:10.2f} "
+              f"{s.unplaced_jobs:9d} {s.energy_kwh:11.1f} "
+              f"{s.gco2/1e3:8.1f} {s.carbon_intensity_avg:6.0f}")
 
     print("\npolicy winner per topology (lowest mean wait, no extra "
           "unplaced jobs vs the topology's best placement count):")
     for h in topologies:
-        group = [s for s in summaries if s.num_hosts == h]
+        group = [s for s in summaries if s.num_hosts == h
+                 and s.shift_bins == 0 and s.carbon_cap_base_w is None]
         fewest_unplaced = min(s.unplaced_jobs for s in group)
         viable = [s for s in group if s.unplaced_jobs == fewest_unplaced]
         win = min(viable, key=lambda s: (
@@ -66,12 +86,30 @@ def main() -> None:
             s.energy_kwh))
         print(f"  h{h:<4d} -> {win.policy} (backfill={win.backfill_depth}): "
               f"wait {win.mean_wait_bins:.2f} bins, "
-              f"{win.unplaced_jobs} unplaced, {win.energy_kwh:.1f} kWh")
+              f"{win.unplaced_jobs} unplaced, {win.energy_kwh:.1f} kWh, "
+              f"{win.gco2/1e3:.1f} kgCO2")
+
+    baseline = next(s for s in summaries
+                    if s.name == f"worst_fit-h{base.num_hosts}")
+    carbon = [s for s in summaries
+              if s.shift_bins != 0 or s.carbon_cap_base_w is not None]
+    print("\ncost of carbon (vs worst_fit-h277 baseline "
+          f"{baseline.gco2/1e3:.1f} kgCO2):")
+    for s in carbon:
+        dg = baseline.gco2 - s.gco2
+        dwait = s.mean_wait_bins - baseline.mean_wait_bins
+        # a shift that pushes tail jobs past the horizon is not a free
+        # carbon win — the unplaced delta prices the lost work honestly
+        print(f"  {s.name:>12s}: {s.gco2/1e3:8.1f} kgCO2 "
+              f"({dg/max(baseline.gco2, 1e-9):+.1%}), "
+              f"wait {s.mean_wait_bins:.2f} bins ({dwait:+.2f}), "
+              f"{s.unplaced_jobs - baseline.unplaced_jobs:+d} unplaced, "
+              f"{s.cap_exceeded_bins} cap-limited bins")
 
     print("\nReading: fewer hosts -> higher utilization and queueing but "
-          "less idle energy;\npacking policies (first/best-fit) + backfill "
-          "trade spread for wait time — the twin\nquantifies the "
-          "SLO/sustainability trade-off before any hardware moves "
+          "less idle energy;\npacking policies + backfill trade spread for "
+          "wait time; carbon caps and time\nshifts buy gCO2 with wait-time "
+          "currency — the twin prices the trade before\nany hardware moves "
           "(HITL decides).")
 
 

@@ -44,14 +44,21 @@ from repro.core.scenarios import (
 from repro.core.power import (
     POWER_MODELS,
     PowerParams,
+    carbon_gco2,
     datacenter_power,
     energy_kwh,
     linear_power,
     mape,
     opendc_power,
+    validate_power_params,
 )
 from repro.core.slo import NFR1, SLO, BiasTracker, SLOMonitor
-from repro.core.telemetry import TelemetryStore, TelemetryWindow, clip_to_window
+from repro.core.telemetry import (
+    CARBON_INTENSITY_KEY,
+    TelemetryStore,
+    TelemetryWindow,
+    clip_to_window,
+)
 from repro.core.twin import DigitalTwin, TraceGroundTruth, TwinRunResult, run_surf_experiment
 
 __all__ = [
@@ -65,9 +72,11 @@ __all__ = [
     "Scenario", "ScenarioSet", "ScenarioSummary",
     "build_scenario_set", "evaluate_scenarios", "run_scenarios",
     "summarize_scenarios",
-    "POWER_MODELS", "PowerParams", "datacenter_power", "energy_kwh",
-    "linear_power", "mape", "opendc_power",
+    "POWER_MODELS", "PowerParams", "carbon_gco2", "datacenter_power",
+    "energy_kwh", "linear_power", "mape", "opendc_power",
+    "validate_power_params",
     "NFR1", "SLO", "BiasTracker", "SLOMonitor",
-    "TelemetryStore", "TelemetryWindow", "clip_to_window",
+    "CARBON_INTENSITY_KEY", "TelemetryStore", "TelemetryWindow",
+    "clip_to_window",
     "DigitalTwin", "TraceGroundTruth", "TwinRunResult", "run_surf_experiment",
 ]

@@ -56,7 +56,15 @@ class CalibrationSpec:
 
 
 def candidate_grid(spec: CalibrationSpec, base: PowerParams) -> PowerParams:
-    """Build the candidate parameter grid as a batched PowerParams [C]."""
+    """Build the candidate parameter grid as a batched PowerParams [C].
+
+    Joint mode clamps each candidate's ``p_max`` to its ``p_idle``: when the
+    base span is narrow (``p_max/p_idle < scale_hi/scale_lo``) the scale
+    meshgrid would otherwise produce inverted-curve candidates that the
+    ``PowerParams`` boundary rightly rejects.  Clamped candidates are
+    degenerate (zero span) and simply score badly — the grid shape stays
+    static.
+    """
     r = np.linspace(spec.r_lo, spec.r_hi, spec.r_points, dtype=np.float32)
     if spec.mode == "r_only":
         c = r.shape[0]
@@ -67,9 +75,11 @@ def candidate_grid(spec: CalibrationSpec, base: PowerParams) -> PowerParams:
         )
     s = np.linspace(spec.scale_lo, spec.scale_hi, spec.scale_points, dtype=np.float32)
     rr, si, sm = np.meshgrid(r, s, s, indexing="ij")
+    p_idle = si.ravel() * float(np.asarray(base.p_idle).mean())
+    p_max = sm.ravel() * float(np.asarray(base.p_max).mean())
     return PowerParams(
-        p_idle=jnp.asarray(si.ravel() * float(np.asarray(base.p_idle).mean())),
-        p_max=jnp.asarray(sm.ravel() * float(np.asarray(base.p_max).mean())),
+        p_idle=jnp.asarray(p_idle),
+        p_max=jnp.asarray(np.maximum(p_max, p_idle)),
         r=jnp.asarray(rr.ravel()),
     )
 
@@ -104,11 +114,19 @@ def calibrate_window(
     base: PowerParams,
     backend: Backend = "xla",
 ) -> CalibrationResult:
-    """One calibration cycle (one C-event in Fig. 3)."""
+    """One calibration cycle (one C-event in Fig. 3).
+
+    An all-zero-power window (every host offline) has no defined MAPE: the
+    kernel returns NaN for every candidate and this function keeps the
+    incumbent ``base`` parameters rather than crowning an arbitrary grid
+    point a "perfect" fit.
+    """
     cand = candidate_grid(spec, base)
     mapes = evaluate_candidates(u_th, real_power, cand, backend=backend)
     mapes_np = np.asarray(mapes)
     total = int(mapes_np.shape[0])
+    if not np.isfinite(mapes_np).any():
+        return CalibrationResult(base, float("nan"), total, mapes_np)
     best = int(np.argmin(mapes_np))
     best_params = PowerParams(
         p_idle=float(np.asarray(cand.p_idle)[best]),

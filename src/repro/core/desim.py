@@ -36,7 +36,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.power import PowerParams, datacenter_power, energy_kwh
+from repro.core.power import (
+    PowerParams,
+    carbon_gco2,
+    datacenter_power,
+    energy_kwh,
+)
 from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
 
 Array = jax.Array
@@ -465,18 +470,27 @@ def simulate_utilization(
 
 @dataclasses.dataclass(frozen=True)
 class Prediction:
-    """Multi-metric prediction for a window (NFR3: >=2 perf + >=2 sust.)."""
+    """Multi-metric prediction for a window (NFR3: >=2 perf + >=2 sust.).
 
-    power_w: Array        # [T] total power draw (sustainability #1)
+    The two optional leaves are ``None`` on the default path (no carbon
+    trace, no enforced cap) so legacy predictions are structurally
+    unchanged; the scenario engine fills them when the corresponding
+    scenario axes are in play.
+    """
+
+    power_w: Array        # [T] delivered power draw (sustainability #1)
     energy_kwh: Array     # [T] per-bin energy (sustainability #2)
     tflops: Array         # [T] achieved TFLOP/s (performance #1)
     utilization: Array    # [T] mean datacenter utilization (performance #2)
     efficiency: Array     # [T] TFLOPs per kWh (paper Fig. 5C)
+    gco2: Array | None = None           # [T] per-bin carbon (sust. #3)
+    power_demand_w: Array | None = None  # [T] pre-cap demand (cap analysis)
 
 
 jax.tree_util.register_pytree_node(
     Prediction,
-    lambda p: ((p.power_w, p.energy_kwh, p.tflops, p.utilization, p.efficiency), None),
+    lambda p: ((p.power_w, p.energy_kwh, p.tflops, p.utilization,
+                p.efficiency, p.gco2, p.power_demand_w), None),
     lambda _, c: Prediction(*c),
 )
 
@@ -486,15 +500,24 @@ def predict_metrics(
     params: PowerParams,
     dc: DatacenterConfig,
     model: str = "opendc",
+    carbon_intensity: Array | None = None,
 ) -> Prediction:
-    """Map a utilization field to the paper's metric set (Fig. 5A/B/C)."""
+    """Map a utilization field to the paper's metric set (Fig. 5A/B/C).
+
+    ``carbon_intensity`` (``[T]`` gCO2/kWh, broadcastable against the power
+    trace) additionally fills the per-bin ``gco2`` leaf; without it the
+    prediction is bit-for-bit the pre-carbon output with ``gco2=None``.
+    """
     power = datacenter_power(u_th, params, model=model)
     e = energy_kwh(power, SAMPLE_SECONDS)
     util = jnp.mean(u_th, axis=-1)
     tflops = util * dc.peak_tflops
     eff = tflops / jnp.maximum(e, 1e-9)
+    gco2 = None
+    if carbon_intensity is not None:
+        gco2 = carbon_gco2(e, jnp.asarray(carbon_intensity))
     return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
-                      utilization=util, efficiency=eff)
+                      utilization=util, efficiency=eff, gco2=gco2)
 
 
 def simulate(

@@ -26,6 +26,7 @@ class ProposalKind(enum.Enum):
     RESTART_STRAGGLER = "restart_straggler"  # major
     REBALANCE = "rebalance"                # major
     SCHEDULER_CHANGE = "scheduler_change"  # major: swap placement policy
+    CARBON_REDUCTION = "carbon_reduction"  # major: cap/shift for lower gCO2
 
 
 #: proposal kinds the orchestrator may apply without a human (minor changes)
@@ -126,6 +127,7 @@ def propose_from_scenario(
     min_energy_saving_frac: float = 0.02,
     min_wait_improvement_frac: float = 0.10,
     max_energy_regression_frac: float = 0.02,
+    min_carbon_saving_frac: float = 0.02,
 ) -> list[Proposal]:
     """Map a batched what-if candidate's summary to operator proposals.
 
@@ -140,6 +142,13 @@ def propose_from_scenario(
     mean queue wait by ``min_wait_improvement_frac`` (or places strictly
     more jobs), and costs at most ``max_energy_regression_frac`` extra
     energy — software-only wins surface before any hardware moves.
+
+    Carbon: when the sweep ran against a grid carbon-intensity trace (both
+    ``gco2`` fields finite), a candidate that cuts total gCO2 by at least
+    ``min_carbon_saving_frac`` without breaking SLOs becomes a
+    CARBON_REDUCTION proposal naming the knob that did it (time shift,
+    carbon-aware cap, or topology) — the carbon-driven action the HITL gate
+    exists to approve.
     """
     out: list[Proposal] = []
     slo_ok = (
@@ -201,14 +210,45 @@ def propose_from_scenario(
                         "mean_wait_bins": summary.mean_wait_bins,
                         "unplaced_jobs": summary.unplaced_jobs,
                         "energy_kwh": summary.energy_kwh}))
+    # carbon-driven actions: only comparable when both ran with a trace
+    g_base, g_cand = baseline.gco2, summary.gco2
+    if (math.isfinite(g_base) and math.isfinite(g_cand) and slo_ok
+            and g_base - g_cand > min_carbon_saving_frac * max(g_base, 1e-9)):
+        knobs = []
+        if summary.shift_bins != baseline.shift_bins:
+            knobs.append(f"shift deferrable jobs by {summary.shift_bins} bins")
+        if summary.carbon_cap_base_w is not None:
+            knobs.append(
+                f"carbon-aware cap {summary.carbon_cap_base_w/1e3:.1f} kW "
+                f"{summary.carbon_cap_slope:+.1f} W/(gCO2/kWh)")
+        if summary.num_hosts != baseline.num_hosts:
+            knobs.append(f"{summary.num_hosts} hosts")
+        out.append(Proposal(
+            ProposalKind.CARBON_REDUCTION, window,
+            f"what-if '{summary.name}': {', '.join(knobs) or 'candidate'} "
+            f"cuts carbon to {g_cand/1e3:.1f} kgCO2 "
+            f"(vs {g_base/1e3:.1f}, -{(g_base - g_cand)/max(g_base,1e-9):.1%}) "
+            f"at {summary.energy_kwh:.1f} kWh (vs {baseline.energy_kwh:.1f})",
+            impact={"scenario": summary.name,
+                    "gco2": g_cand,
+                    "gco2_saving": g_base - g_cand,
+                    "shift_bins": summary.shift_bins,
+                    "carbon_cap_base_w": summary.carbon_cap_base_w,
+                    "energy_kwh": summary.energy_kwh}))
     cap = summary.power_cap_w
-    if cap is not None and math.isfinite(cap) and summary.cap_exceeded_bins > 0:
+    carbon_capped = summary.carbon_cap_base_w is not None
+    if ((carbon_capped or (cap is not None and math.isfinite(cap)))
+            and summary.cap_exceeded_bins > 0):
+        cap_desc = (f"{cap/1e3:.1f} kW" if cap is not None
+                    else f"carbon-aware <= {summary.carbon_cap_base_w/1e3:.1f} kW")
         out.append(Proposal(
             ProposalKind.POWER_CAP, window,
-            f"what-if '{summary.name}': predicted draw exceeds cap "
-            f"{cap/1e3:.1f} kW in {summary.cap_exceeded_bins} bins "
-            f"(peak {summary.peak_power_w/1e3:.1f} kW)",
+            f"what-if '{summary.name}': demand runs into cap {cap_desc} "
+            f"in {summary.cap_exceeded_bins} bins "
+            f"(peak demand {summary.peak_demand_w/1e3:.1f} kW, "
+            f"delivered peak {summary.peak_power_w/1e3:.1f} kW)",
             impact={"scenario": summary.name,
                     "cap_exceeded_bins": summary.cap_exceeded_bins,
-                    "peak_power_w": summary.peak_power_w}))
+                    "peak_power_w": summary.peak_power_w,
+                    "peak_demand_w": summary.peak_demand_w}))
     return out

@@ -29,8 +29,13 @@ from repro.core.desim import Prediction, SimOutput, predict_metrics, simulate_ut
 from repro.core.feedback import HITLGate, Proposal, propose_from_scenario, propose_from_state
 from repro.core.power import PowerParams, mape
 from repro.core.scenarios import Scenario, ScenarioSummary, evaluate_scenarios
+from repro.traces.carbon import validate_carbon_intensity
 from repro.core.slo import NFR1, BiasTracker, SLOMonitor
-from repro.core.telemetry import TelemetryStore, TelemetryWindow
+from repro.core.telemetry import (
+    CARBON_INTENSITY_KEY,
+    TelemetryStore,
+    TelemetryWindow,
+)
 from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
 
 
@@ -58,6 +63,7 @@ class WindowRecord:
     params: PowerParams
     prediction: Prediction
     mape: float | None = None        # filled when telemetry lands
+    gco2: float | None = None        # window carbon (needs intensity trace)
     proposals: int = 0
 
 
@@ -92,12 +98,22 @@ class Orchestrator:
         cfg: OrchestratorConfig = OrchestratorConfig(),
         base_params: PowerParams = PowerParams(),
         gate: HITLGate | None = None,
+        carbon_intensity: "np.ndarray | None" = None,
     ):
         self.workload = workload
         self.dc = dc
         self.t_bins = int(t_bins)
         self.cfg = cfg
         self.base_params = base_params
+        # full-horizon grid carbon-intensity forecast ([t_bins] gCO2/kWh);
+        # window predictions gain gCO2 and what-if sweeps become carbon-aware.
+        # Per-window *measured* intensity in telemetry extras
+        # (telemetry.CARBON_INTENSITY_KEY) overrides this forecast when
+        # scoring a window.
+        if carbon_intensity is not None:
+            carbon_intensity = validate_carbon_intensity(
+                np.asarray(carbon_intensity), self.t_bins)
+        self.carbon_intensity = carbon_intensity
         self.store = TelemetryStore(cfg.bins_per_window)
         self.gate = gate or HITLGate()
         self.monitor = SLOMonitor([NFR1])
@@ -151,8 +167,11 @@ class Orchestrator:
         params = (self.calibrator.params_for_next()
                   if self.cfg.calibrate else self.base_params)
         t0 = time.time()
+        ci_w = (self.carbon_intensity[sl]
+                if self.carbon_intensity is not None else None)
         pred = predict_metrics(
-            sim.u_th[sl], params, self.dc, model=self.cfg.power_model
+            sim.u_th[sl], params, self.dc, model=self.cfg.power_model,
+            carbon_intensity=ci_w,
         )
         pred.power_w.block_until_ready()
         sim_seconds = time.time() - t0
@@ -165,6 +184,25 @@ class Orchestrator:
         # Telemetry for this window (produced asynchronously by the physical
         # twin; in-loop experiments ingest it before calling run_window).
         tw = self.store.get(window)
+        # window carbon: prefer *measured* intensity from telemetry extras
+        # over the configured forecast (same precedence as power itself).
+        ci_meas = (tw.extras.get(CARBON_INTENSITY_KEY)
+                   if tw is not None else None)
+        if (ci_meas is not None
+                and np.asarray(ci_meas).shape[0]
+                != np.asarray(pred.energy_kwh).shape[0]):
+            ci_meas = None  # partially-clipped extras: fall back to forecast
+        if ci_meas is not None:
+            # same boundary rule as the forecast: a NaN/negative measured
+            # intensity (sensor glitch) must fail loudly, not flip the sign
+            # of the sustainability record.
+            ci_meas = validate_carbon_intensity(np.asarray(ci_meas))
+        if ci_meas is not None:
+            rec.gco2 = float(np.sum(
+                np.asarray(pred.energy_kwh, np.float64)
+                * np.asarray(ci_meas, np.float64)))
+        elif pred.gco2 is not None:
+            rec.gco2 = float(np.sum(np.asarray(pred.gco2, np.float64)))
         if tw is not None:
             rec.mape = float(mape(jnp.asarray(tw.power_w, dtype=jnp.float32),
                                   pred.power_w))
@@ -232,6 +270,7 @@ class Orchestrator:
             self.workload, self.dc, scs,
             t_bins=self.t_bins, base_params=params, max_hosts=max_hosts,
             model=self.cfg.power_model,
+            carbon_intensity=self.carbon_intensity,
         )
         window = len(self.records)
         baseline = summaries[0]

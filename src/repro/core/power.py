@@ -20,8 +20,68 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
+
+
+def _concrete(x) -> np.ndarray | None:
+    """Return ``x`` as a numpy array when it is concrete, else ``None``.
+
+    Validation must never touch traced values: ``PowerParams`` is a pytree
+    whose unflatten runs inside jit/vmap with tracers as leaves, and a
+    concrete-only check there would abort tracing.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    if isinstance(x, (bool, int, float, np.ndarray, np.generic, jax.Array)):
+        try:
+            return np.asarray(x)
+        except Exception:  # e.g. a donated/deleted buffer
+            return None
+    return None
+
+
+def validate_power_params(p_idle, p_max, r) -> None:
+    """Reject parameterizations outside the model's valid domain — loudly.
+
+    The OpenDC form ``P = P_idle + (P_max - P_idle)(2u - u^r)`` silently
+    produces garbage outside it:
+
+      * ``r <= 0`` — at ``u = 0`` the shape term ``2u - u^r`` is ``-1``
+        (``0^0 = 1``) so the defaults yield **-210 W**, and ``r < 0``
+        divides by zero (``0^r = inf`` -> ``-inf`` watts);
+      * ``p_max < p_idle`` — a negative span inverts the curve (full load
+        "draws less" than idle).
+
+    Only *concrete* values are checked; traced values (inside jit/vmap)
+    pass through — every host-side construction boundary (``PowerParams``
+    itself, ``Scenario``, ``build_scenario_set``) is concrete, so bad
+    values cannot reach a traced program unvalidated.
+    """
+    rv = _concrete(r)
+    if rv is not None and rv.size and (~np.isfinite(rv) | (rv <= 0)).any():
+        raise ValueError(
+            f"power-model exponent r must be finite and > 0, got "
+            f"{float(np.min(rv))}: r <= 0 makes P(u=0) negative "
+            "(0^0 = 1 -> shape term -1), r < 0 yields -inf watts, and "
+            "NaN/inf poisons every downstream kWh/gCO2")
+    pi, pm = _concrete(p_idle), _concrete(p_max)
+    if pi is not None and pi.size and (~np.isfinite(pi) | (pi < 0)).any():
+        raise ValueError(
+            f"p_idle must be finite and >= 0 W, got {float(np.min(pi))}")
+    if pm is not None and pm.size and (~np.isfinite(pm)).any():
+        raise ValueError("p_max must be finite W, got non-finite value(s)")
+    if pi is not None and pm is not None and pi.size and pm.size:
+        try:
+            bad = np.broadcast_arrays(pm, pi)
+        except ValueError:
+            return  # non-broadcastable shapes fail later with a shape error
+        if (bad[0] < bad[1]).any():
+            raise ValueError(
+                f"p_max must be >= p_idle (got p_max min "
+                f"{float(bad[0].min())} < p_idle {float(bad[1].max())}): a "
+                "negative span inverts the power curve")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +91,18 @@ class PowerParams:
     Each field is a scalar (shared across hosts) or a ``[H]`` vector
     (per-host).  The calibrator treats ``r`` (and, beyond the paper,
     ``p_idle``/``p_max``) as free parameters.
+
+    Construction validates concrete values (``r > 0``, ``p_max >= p_idle``,
+    see :func:`validate_power_params`); traced leaves inside jit/vmap are
+    exempt, so the pytree round-trip stays trace-safe.
     """
 
     p_idle: Array | float = 70.0   # W, idle draw per host
     p_max: Array | float = 350.0   # W, full-load draw per host
     r: Array | float = 2.0         # calibration exponent (paper §3.2)
+
+    def __post_init__(self):
+        validate_power_params(self.p_idle, self.p_max, self.r)
 
     def tree_flatten(self):  # pragma: no cover - convenience
         return (self.p_idle, self.p_max, self.r), None
@@ -59,7 +126,8 @@ def opendc_power(u: Array, params: PowerParams) -> Array:
     p_idle = jnp.asarray(params.p_idle, u.dtype)
     p_max = jnp.asarray(params.p_max, u.dtype)
     r = jnp.asarray(params.r, u.dtype)
-    # u**r with u==0 and fractional r is fine (0**r = 0 for r>0); guard r<=0.
+    # u**r with u==0 and fractional r is fine (0**r = 0 for r>0); r <= 0 is
+    # rejected at the PowerParams/Scenario boundary (validate_power_params).
     shape = 2.0 * u - jnp.power(u, r)
     return p_idle + (p_max - p_idle) * shape
 
@@ -124,8 +192,32 @@ def energy_kwh(power_w: Array, dt_seconds: float) -> Array:
     return power_w * (dt_seconds / 3600.0) / 1000.0
 
 
+def carbon_gco2(energy_kwh_t: Array, intensity: Array) -> Array:
+    """Per-bin operational carbon [T] gCO2 from energy and grid intensity.
+
+    ``energy_kwh_t`` is the per-bin energy trace (kWh, see
+    :func:`energy_kwh`); ``intensity`` is the grid carbon-intensity trace
+    (gCO2/kWh, see :mod:`repro.traces.carbon`) broadcast against it.  The
+    sustainability headline of a run is ``jnp.sum(carbon_gco2(...))``.
+    """
+    return energy_kwh_t * jnp.asarray(intensity, energy_kwh_t.dtype)
+
+
 def mape(real: Array, sim: Array, eps: float = 1e-9) -> Array:
-    """Mean Absolute Percentage Error, % (paper §3.2)."""
+    """Mean Absolute Percentage Error, % (paper §3.2).
+
+    The denominator is ``|real| + eps`` (never ``real + eps``: a negative
+    residual trace must not flip the error's sign or cancel against eps),
+    and **zero-real bins are excluded from the mean** — a bin where the
+    measured value is exactly 0 (every host offline) has no meaningful
+    percentage error, and dividing by eps there exploded the window MAPE to
+    ~5e10 % per zero bin.  If *all* bins are zero-real the MAPE is undefined
+    and NaN is returned (surfaced, not hidden — NaN fails any SLO check).
+    """
     real = jnp.asarray(real)
     sim = jnp.asarray(sim)
-    return jnp.mean(jnp.abs((real - sim) / (real + eps))) * 100.0
+    nonzero = jnp.abs(real) > eps
+    n = jnp.sum(nonzero)
+    ape = jnp.abs((real - sim) / (jnp.abs(real) + eps))
+    total = jnp.sum(jnp.where(nonzero, ape, 0.0))
+    return jnp.where(n > 0, total / jnp.maximum(n, 1), jnp.nan) * 100.0

@@ -3,8 +3,11 @@
 What-if analysis re-simulates the same trace against S candidate
 configurations — topologies (host count, cores per host), **placement
 policies** (first/best/worst/random-fit, backfill depth), power-model
-parameters, power caps, workload perturbations — and compares SLO and
-sustainability outcomes before any hardware moves.  The naive loop pays S
+parameters, **enforced power caps** (static and carbon-aware,
+``cap_t = base + slope * intensity_t``), workload perturbations including
+**deferrable-job time-shifting** — and compares SLO and sustainability
+outcomes (energy, power, **gCO2** against a grid carbon-intensity trace)
+before any hardware moves.  The naive loop pays S
 trace + compile + run cycles; since the masked DES core
 (:func:`repro.core.desim.simulate_utilization_masked`) is shape-identical
 across candidates once the host axis is padded to a static ``max_hosts``,
@@ -40,7 +43,13 @@ from repro.core.desim import (
     resolve_policy,
     simulate_utilization_masked,
 )
-from repro.core.power import PowerParams, datacenter_power, energy_kwh
+from repro.core.power import (
+    PowerParams,
+    carbon_gco2,
+    datacenter_power,
+    energy_kwh,
+)
+from repro.traces.carbon import validate_carbon_intensity
 from repro.traces.schema import (
     SAMPLE_SECONDS,
     DatacenterConfig,
@@ -71,16 +80,37 @@ class Scenario:
         (0 = strict head-of-line blocking).  Both become *traced* scalars,
         so a scheduler sweep shares one compilation with a topology sweep.
       * **Power model** — ``p_idle`` / ``p_max`` / ``r`` override the
-        calibrated parameters; ``power_cap_w`` flags bins above the cap.
+        calibrated parameters.  Invalid overrides (``r <= 0``,
+        ``p_max < p_idle``) raise at construction — they would otherwise
+        produce negative watts (see ``power.validate_power_params``).
+      * **Power cap** — ``power_cap_w`` is a static facility cap, now
+        *enforced* in the read-out (delivered power is clipped to the cap
+        and performance metrics are throttled accordingly, not merely
+        flagged); ``carbon_cap_base_w``/``carbon_cap_slope`` add a
+        carbon-aware cap ``base + slope * intensity_t`` (slope in W per
+        gCO2/kWh, usually negative: dirtier grid -> tighter cap).  The
+        effective per-bin cap is the minimum of the two.  Carbon-aware caps
+        require a ``carbon_intensity`` trace at run time.
       * **Workload** — multiplicative knobs on the shared base trace:
         ``arrival_scale`` compresses submission times (×k arrival rate),
         ``duration_scale`` stretches runtimes, ``util_scale`` scales the
-        per-phase utilization profiles (clipped to [0, 1]).
+        per-phase utilization profiles (clipped to [0, 1]), and
+        ``shift_bins`` time-shifts *deferrable* jobs (see
+        ``Workload.deferrable``; default: all jobs) by that many 5-minute
+        bins — positive delays work into later (e.g. cleaner-grid) bins.
+
+    All knobs stack into ``[S]`` tensors or per-scenario workload copies of
+    identical shape, so a (caps × shifts × topologies) grid still compiles
+    **once** (see :func:`run_scenarios`).
 
     >>> Scenario(name="bf", policy="best_fit", backfill_depth=4).policy
     'best_fit'
     >>> Scenario().backfill_depth        # default: strict FCFS worst-fit
     0
+    >>> Scenario(r=0.0)
+    Traceback (most recent call last):
+        ...
+    ValueError: scenario '': power-model exponent r must be > 0, got 0.0
     """
 
     name: str = ""
@@ -92,9 +122,51 @@ class Scenario:
     p_max: float | None = None
     r: float | None = None
     power_cap_w: float | None = None
+    carbon_cap_base_w: float | None = None
+    carbon_cap_slope: float = 0.0
     arrival_scale: float = 1.0
     duration_scale: float = 1.0
     util_scale: float = 1.0
+    shift_bins: int = 0
+
+    def __post_init__(self):
+        # the Scenario boundary is host-side and concrete: bad power-model
+        # parameters must never survive long enough to emit negative watts.
+        if self.r is not None and not (math.isfinite(self.r) and self.r > 0):
+            raise ValueError(
+                f"scenario {self.name!r}: power-model exponent r must be "
+                f"> 0, got {self.r}")
+        if self.p_idle is not None and not (math.isfinite(self.p_idle)
+                                            and self.p_idle >= 0):
+            raise ValueError(
+                f"scenario {self.name!r}: p_idle must be finite and >= 0 W, "
+                f"got {self.p_idle}")
+        if self.p_max is not None and not math.isfinite(self.p_max):
+            raise ValueError(
+                f"scenario {self.name!r}: p_max must be finite W, "
+                f"got {self.p_max}")
+        if (self.p_idle is not None and self.p_max is not None
+                and self.p_max < self.p_idle):
+            raise ValueError(
+                f"scenario {self.name!r}: p_max ({self.p_max}) < p_idle "
+                f"({self.p_idle}) inverts the power curve")
+        if self.power_cap_w is not None and not self.power_cap_w > 0:
+            raise ValueError(
+                f"scenario {self.name!r}: power_cap_w must be > 0 W, "
+                f"got {self.power_cap_w}")
+        if self.carbon_cap_base_w is not None and not self.carbon_cap_base_w > 0:
+            raise ValueError(
+                f"scenario {self.name!r}: carbon_cap_base_w must be > 0 W, "
+                f"got {self.carbon_cap_base_w}")
+        for knob in ("arrival_scale", "duration_scale"):
+            if not getattr(self, knob) > 0:
+                raise ValueError(
+                    f"scenario {self.name!r}: {knob} must be > 0, "
+                    f"got {getattr(self, knob)}")
+        if not self.util_scale >= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: util_scale must be >= 0, "
+                f"got {self.util_scale}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,7 +194,15 @@ class ScenarioSet:
     ``backfill_depth``      ``[S]`` int32               successors that may
                                                         jump a blocked head
     ``params``              leaves ``[S]`` float32      power-model params
-    ``power_cap_w``         ``[S]`` float32             +inf = uncapped
+    ``power_cap_w``         ``[S]`` float32             static cap, enforced
+                                                        (+inf = uncapped)
+    ``carbon_cap_base_w``   ``[S]`` float32             carbon-aware cap base
+                                                        (+inf = no carbon cap)
+    ``carbon_cap_slope``    ``[S]`` float32             W per gCO2/kWh; the
+                                                        per-bin cap is
+                                                        ``base + slope * I_t``
+    ``shift_bins``          ``[S]`` int32               applied time shift
+                                                        (provenance)
     ``peak_tflops``         ``[S]`` float32             topology peak
     ======================  ==========================  =====================
 
@@ -140,6 +220,9 @@ class ScenarioSet:
     backfill_depth: Array     # [S] int32
     params: PowerParams       # leaves [S] float32
     power_cap_w: Array        # [S] float32 (+inf = uncapped)
+    carbon_cap_base_w: Array  # [S] float32 (+inf = no carbon-aware cap)
+    carbon_cap_slope: Array   # [S] float32 (W per gCO2/kWh)
+    shift_bins: Array         # [S] int32 (provenance; already applied)
     peak_tflops: Array        # [S] float32
     names: tuple[str, ...]
     max_backfill: int = 0
@@ -157,14 +240,27 @@ jax.tree_util.register_pytree_node(
     ScenarioSet,
     lambda s: ((s.workload, s.host_mask_s, s.num_hosts, s.cores_per_host,
                 s.policy_id, s.backfill_depth, s.params, s.power_cap_w,
+                s.carbon_cap_base_w, s.carbon_cap_slope, s.shift_bins,
                 s.peak_tflops), (s.names, s.max_backfill)),
     lambda aux, c: ScenarioSet(*c, names=aux[0], max_backfill=aux[1]),
 )
 
 
-def _perturb(submit: np.ndarray, dur: np.ndarray, util: np.ndarray,
-             sc: Scenario) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Apply a scenario's workload knobs (host-side numpy: build-time path)."""
+def _perturb(base: dict[str, np.ndarray | None],
+             sc: Scenario) -> dict[str, np.ndarray | None]:
+    """Apply a scenario's workload knobs (host-side numpy: build-time path).
+
+    ``base`` holds the job-axis arrays (``submit``, ``dur``, ``util``,
+    ``cores``, ``valid``, ``deferrable`` — the last possibly ``None``).
+    Time-shifting moves deferrable valid jobs by ``sc.shift_bins`` bins
+    (clipped at 0) and then re-sorts the job axis by the new submission
+    times: the DES's FCFS queue order *is* the array order, so an unsorted
+    axis would let late-shifted jobs head-block earlier work.  The stable
+    sort keeps padding jobs (huge submit sentinel) at the tail and is the
+    identity when nothing shifts.
+    """
+    out = dict(base)
+    submit, dur, util = base["submit"], base["dur"], base["util"]
     if sc.arrival_scale != 1.0:
         # ×k arrival rate = submissions land k× denser on the bin axis
         submit = np.floor(
@@ -175,7 +271,22 @@ def _perturb(submit: np.ndarray, dur: np.ndarray, util: np.ndarray,
         ).astype(np.int32)
     if sc.util_scale != 1.0:
         util = np.clip(util * sc.util_scale, 0.0, 1.0).astype(np.float32)
-    return submit, dur, util
+    out.update(submit=submit, dur=dur, util=util)
+    if sc.shift_bins != 0:
+        defer = base["deferrable"]
+        movable = (base["valid"] if defer is None
+                   else (defer & base["valid"]))
+        submit = np.where(
+            movable, np.maximum(submit + int(sc.shift_bins), 0), submit
+        ).astype(np.int32)
+        order = np.argsort(submit, kind="stable")
+        out.update(
+            submit=submit[order], dur=out["dur"][order],
+            util=out["util"][order], cores=base["cores"][order],
+            valid=base["valid"][order],
+            deferrable=None if defer is None else defer[order],
+        )
+    return out
 
 
 def _scalar(x) -> float:
@@ -225,20 +336,24 @@ def build_scenario_set(
     # Every scenario perturbs the same base trace, so the stacked workload is
     # assembled host-side in numpy (one device transfer per field) — this
     # runs on every sweep and must not cost a per-scenario dispatch cascade.
-    s_count, n_jobs = len(scenarios), workload.num_jobs
-    base_sub = np.asarray(workload.submit_bin)
-    base_dur = np.asarray(workload.duration_bins)
-    base_util = np.asarray(workload.util_levels)
-    perturbed = [_perturb(base_sub, base_dur, base_util, sc)
-                 for sc in scenarios]
+    base = dict(
+        submit=np.asarray(workload.submit_bin),
+        dur=np.asarray(workload.duration_bins),
+        util=np.asarray(workload.util_levels),
+        cores=np.asarray(workload.cores),
+        valid=np.asarray(workload.valid),
+        deferrable=(None if workload.deferrable is None
+                    else np.asarray(workload.deferrable)),
+    )
+    perturbed = [_perturb(base, sc) for sc in scenarios]
     wl = Workload(
-        submit_bin=jnp.asarray(np.stack([p[0] for p in perturbed])),
-        duration_bins=jnp.asarray(np.stack([p[1] for p in perturbed])),
-        cores=jnp.asarray(np.broadcast_to(
-            np.asarray(workload.cores), (s_count, n_jobs))),
-        util_levels=jnp.asarray(np.stack([p[2] for p in perturbed])),
-        valid=jnp.asarray(np.broadcast_to(
-            np.asarray(workload.valid), (s_count, n_jobs))),
+        submit_bin=jnp.asarray(np.stack([p["submit"] for p in perturbed])),
+        duration_bins=jnp.asarray(np.stack([p["dur"] for p in perturbed])),
+        cores=jnp.asarray(np.stack([p["cores"] for p in perturbed])),
+        util_levels=jnp.asarray(np.stack([p["util"] for p in perturbed])),
+        valid=jnp.asarray(np.stack([p["valid"] for p in perturbed])),
+        deferrable=(None if base["deferrable"] is None else jnp.asarray(
+            np.stack([p["deferrable"] for p in perturbed]))),
     )
 
     def pick(field: str):
@@ -261,6 +376,11 @@ def build_scenario_set(
     cap = jnp.asarray(
         [sc.power_cap_w if sc.power_cap_w is not None else math.inf
          for sc in scenarios], jnp.float32)
+    carbon_base = jnp.asarray(
+        [sc.carbon_cap_base_w if sc.carbon_cap_base_w is not None
+         else math.inf for sc in scenarios], jnp.float32)
+    carbon_slope = jnp.asarray(
+        [sc.carbon_cap_slope for sc in scenarios], jnp.float32)
     return ScenarioSet(
         workload=wl,
         host_mask_s=host_mask(hosts_a, mh),
@@ -269,9 +389,15 @@ def build_scenario_set(
         policy_id=jnp.asarray([resolve_policy(sc.policy) for sc in scenarios],
                               jnp.int32),
         backfill_depth=jnp.asarray(depths, jnp.int32),
+        # PowerParams validates the [S] stacks: a scenario that overrides
+        # only p_max below the base p_idle (or vice versa) fails here.
         params=PowerParams(p_idle=pick("p_idle"), p_max=pick("p_max"),
                            r=pick("r")),
         power_cap_w=cap,
+        carbon_cap_base_w=carbon_base,
+        carbon_cap_slope=carbon_slope,
+        shift_bins=jnp.asarray([int(sc.shift_bins) for sc in scenarios],
+                               jnp.int32),
         peak_tflops=peak,
         names=names,
         max_backfill=max(depths),
@@ -279,26 +405,49 @@ def build_scenario_set(
 
 
 def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
-                    peak_tflops: Array, model: str) -> Prediction:
+                    peak_tflops: Array, model: str,
+                    cap_t: Array, intensity: Array | None) -> Prediction:
     """Mask-aware :func:`repro.core.desim.predict_metrics` for one scenario.
 
     Padded (inactive) hosts must not dilute mean utilization or draw idle
     power, so both aggregations respect the active-host mask.
+
+    Power-cap **enforcement** (vs. the old flag-only behavior): ``cap_t``
+    (scalar or ``[T]``; +inf = uncapped) clips the *delivered* power, and
+    performance metrics lose the same fraction of the active (above-idle)
+    draw — a linear-throttle (DVFS-proxy) approximation.  Pre-cap demand is
+    preserved in ``Prediction.power_demand_w`` so cap-violation analysis
+    still sees what the workload *wanted*.  An uncapped scenario
+    (``cap_t = +inf``) stays bit-for-bit the pre-enforcement output:
+    ``min(x, inf) == x`` and the throttle select falls through to the raw
+    utilization.
     """
     maskf = mask.astype(u_th.dtype)
-    power = datacenter_power(u_th, params, model=model, online_mask=maskf)
+    demand = datacenter_power(u_th, params, model=model, online_mask=maskf)
+    exceeded = demand > cap_t
+    power = jnp.minimum(demand, cap_t)
+    # scalar per-scenario params on this path (see ROADMAP per-host item)
+    idle_floor = jnp.asarray(params.p_idle, u_th.dtype) * jnp.sum(maskf)
+    throttle = jnp.clip(
+        (cap_t - idle_floor) / jnp.maximum(demand - idle_floor, 1e-9),
+        0.0, 1.0)
     e = energy_kwh(power, SAMPLE_SECONDS)
-    util = jnp.sum(u_th * maskf, axis=-1) / jnp.maximum(jnp.sum(maskf), 1.0)
+    util_raw = jnp.sum(u_th * maskf, axis=-1) / jnp.maximum(
+        jnp.sum(maskf), 1.0)
+    util = jnp.where(exceeded, util_raw * throttle, util_raw)
     tflops = util * peak_tflops
     eff = tflops / jnp.maximum(e, 1e-9)
+    gco2 = None if intensity is None else carbon_gco2(e, intensity)
     return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
-                      utilization=util, efficiency=eff)
+                      utilization=util, efficiency=eff, gco2=gco2,
+                      power_demand_w=demand)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
                                              "max_starts_per_bin", "model"))
 def _run_scenarios_jit(
     ss: ScenarioSet,
+    carbon_intensity: Array | None,
     *,
     max_hosts: int,
     t_bins: int,
@@ -311,7 +460,8 @@ def _run_scenarios_jit(
     n_jobs = int(ss.workload.submit_bin.shape[-1])
     chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
 
-    def one(w, mask, cores, policy_id, backfill_depth, params, peak):
+    def one(w, mask, cores, policy_id, backfill_depth, params,
+            cap_w, carbon_base, carbon_slope, peak):
         sim = simulate_utilization_masked(
             w, mask, cores,
             max_hosts=max_hosts, t_bins=t_bins,
@@ -320,12 +470,24 @@ def _run_scenarios_jit(
             max_backfill=ss.max_backfill,   # static aux, uniform over S
             force_chunked_readout=chunk,
         )
-        pred = _predict_masked(sim.u_th, params, mask, peak, model)
+        # effective per-bin cap: min(static facility cap, carbon-aware cap).
+        # The intensity trace is shared across scenarios (closure constant
+        # under the vmap); only the scalar cap parameters ride the S axis,
+        # so (caps x shifts x topologies) grids stay one program.
+        cap_t = cap_w
+        if carbon_intensity is not None:
+            cap_t = jnp.minimum(
+                cap_t,
+                jnp.maximum(carbon_base + carbon_slope * carbon_intensity,
+                            0.0))
+        pred = _predict_masked(sim.u_th, params, mask, peak, model,
+                               cap_t, carbon_intensity)
         return sim, pred
 
     return jax.vmap(one)(ss.workload, ss.host_mask_s, ss.cores_per_host,
-                         ss.policy_id, ss.backfill_depth,
-                         ss.params, ss.peak_tflops)
+                         ss.policy_id, ss.backfill_depth, ss.params,
+                         ss.power_cap_w, ss.carbon_cap_base_w,
+                         ss.carbon_cap_slope, ss.peak_tflops)
 
 
 def run_scenarios(
@@ -335,6 +497,7 @@ def run_scenarios(
     t_bins: int,
     max_starts_per_bin: int = 64,
     model: str = "opendc",
+    carbon_intensity: "Array | np.ndarray | None" = None,
 ) -> tuple[SimOutput, Prediction]:
     """Simulate + predict all S scenarios in one jitted program.
 
@@ -344,17 +507,38 @@ def run_scenarios(
     ``sim.job_host`` are ``[S, J]`` (-1 = never started), and every
     :class:`~repro.core.desim.Prediction` leaf is ``[S, t_bins]``.
 
+    ``carbon_intensity`` (``[t_bins]`` gCO2/kWh, shared by all scenarios —
+    see :mod:`repro.traces.carbon`) activates the carbon subsystem: the
+    prediction gains per-bin ``gco2`` and carbon-aware power caps
+    (``Scenario.carbon_cap_base_w``) become computable.  Omitting it keeps
+    every output leaf bit-for-bit identical to the pre-carbon engine
+    (``gco2=None``); scenarios that *request* a carbon-aware cap without a
+    trace are rejected loudly rather than silently uncapped.
+
     One compilation covers any scenario batch with the same
-    ``(S, max_hosts, t_bins, J, max_backfill)`` shape — the sequential
-    what-if loop's per-candidate retrace/recompile is gone, and because the
-    placement policy is a traced ``[S]`` axis, scheduler sweeps ride the
-    same program as topology sweeps.  Scenario *names* are pytree aux data
-    (part of the jit cache key), so they are anonymized before entering jit
-    — differently-named sweeps of the same shape share one compilation.
+    ``(S, max_hosts, t_bins, J, max_backfill)`` shape (per intensity
+    presence) — the sequential what-if loop's per-candidate
+    retrace/recompile is gone, and because the placement policy, caps and
+    time shifts are traced ``[S]`` axes (or same-shape workload data),
+    scheduler/carbon sweeps ride the same program as topology sweeps.
+    Scenario *names* are pytree aux data (part of the jit cache key), so
+    they are anonymized before entering jit — differently-named sweeps of
+    the same shape share one compilation.
     """
+    if carbon_intensity is None:
+        if np.isfinite(np.asarray(ss.carbon_cap_base_w)).any():
+            raise ValueError(
+                "scenario(s) set carbon_cap_base_w but no carbon_intensity "
+                "trace was supplied — a carbon-aware cap cannot be computed "
+                "without one (pass carbon_intensity=[t_bins] gCO2/kWh)")
+        ci = None
+    else:
+        ci = jnp.asarray(
+            validate_carbon_intensity(np.asarray(carbon_intensity), t_bins),
+            jnp.float32)
     anon = dataclasses.replace(ss, names=("",) * ss.num_scenarios)
     return _run_scenarios_jit(
-        anon, max_hosts=max_hosts, t_bins=t_bins,
+        anon, ci, max_hosts=max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model,
     )
 
@@ -379,6 +563,16 @@ class ScenarioSummary:
 
     ``kwh_per_cpu_hour`` is NaN when the scenario's workload has zero CPU-hours
     — an empty trace is surfaced, never hidden behind a clamped denominator.
+
+    Sustainability fields: ``gco2`` is the scenario's total operational
+    carbon (grams CO2; NaN when no carbon-intensity trace was supplied) and
+    ``carbon_intensity_avg`` the energy-weighted mean grid intensity it ran
+    against (gCO2/kWh; NaN without a trace or with zero energy).  Cap
+    fields reflect *enforcement*: ``energy_kwh``/``mean_power_w``/
+    ``peak_power_w`` are delivered (post-cap), ``peak_demand_w`` is what the
+    workload wanted, and ``cap_exceeded_bins`` counts bins where demand ran
+    into the effective (static ∧ carbon-aware) cap.  ``shift_bins`` records
+    the applied deferrable-job time shift.
     """
 
     name: str
@@ -396,26 +590,47 @@ class ScenarioSummary:
     energy_kwh: float
     mean_power_w: float
     peak_power_w: float
+    peak_demand_w: float
     cpu_hours: float
     kwh_per_cpu_hour: float
+    gco2: float
+    carbon_intensity_avg: float
+    shift_bins: int
     power_cap_w: float | None
+    carbon_cap_base_w: float | None
+    carbon_cap_slope: float
     cap_exceeded_bins: int
 
 
 def summarize_scenarios(
-    ss: ScenarioSet, sim: SimOutput, pred: Prediction
+    ss: ScenarioSet, sim: SimOutput, pred: Prediction,
+    carbon_intensity: "np.ndarray | Array | None" = None,
 ) -> list[ScenarioSummary]:
-    """Collapse batched outputs into one comparable record per scenario."""
+    """Collapse batched outputs into one comparable record per scenario.
+
+    Pass the same ``carbon_intensity`` the sweep ran with so cap-violation
+    counting sees the effective (carbon-aware) per-bin cap; carbon totals
+    come from ``pred.gco2`` directly.
+    """
     util = np.asarray(pred.utilization)        # [S, T] (mask-aware)
     queue = np.asarray(sim.queue_len)          # [S, T]
     start = np.asarray(sim.job_start)          # [S, J]
     submit = np.asarray(ss.workload.submit_bin)  # [S, J] (post-perturbation)
     valid = np.asarray(ss.workload.valid)      # [S, J]
-    power = np.asarray(pred.power_w)           # [S, T]
+    power = np.asarray(pred.power_w)           # [S, T] delivered (post-cap)
+    demand = (np.asarray(pred.power_demand_w)  # [S, T] pre-cap demand
+              if pred.power_demand_w is not None else power)
     energy = np.asarray(pred.energy_kwh)       # [S, T]
+    gco2 = (np.asarray(pred.gco2)              # [S, T] or None
+            if pred.gco2 is not None else None)
     cap = np.asarray(ss.power_cap_w)           # [S]
+    cbase = np.asarray(ss.carbon_cap_base_w)   # [S]
+    cslope = np.asarray(ss.carbon_cap_slope)   # [S]
+    shifts = np.asarray(ss.shift_bins)         # [S]
     policy = np.asarray(ss.policy_id)          # [S]
     depth = np.asarray(ss.backfill_depth)      # [S]
+    ci = (None if carbon_intensity is None
+          else np.asarray(carbon_intensity, np.float64))
     cpu_h = np.asarray(
         jax.vmap(lambda w: jnp.sum(w.cpu_hours()))(ss.workload))
 
@@ -425,6 +640,11 @@ def summarize_scenarios(
         ekwh = float(energy[s].sum())
         placed = (start[s] >= 0) & valid[s]
         waits = (start[s] - submit[s])[placed]
+        cap_t = np.full_like(power[s], cap[s])     # effective per-bin cap
+        if ci is not None:
+            cap_t = np.minimum(
+                cap_t, np.maximum(cbase[s] + cslope[s] * ci, 0.0))
+        g = float(gco2[s].sum()) if gco2 is not None else float("nan")
         out.append(ScenarioSummary(
             name=name,
             num_hosts=int(ss.num_hosts[s]),
@@ -443,10 +663,18 @@ def summarize_scenarios(
             energy_kwh=ekwh,
             mean_power_w=float(power[s].mean()),
             peak_power_w=float(power[s].max()),
+            peak_demand_w=float(demand[s].max()),
             cpu_hours=ch,
             kwh_per_cpu_hour=(ekwh / ch) if ch > 0 else float("nan"),
+            gco2=g,
+            carbon_intensity_avg=(g / ekwh if np.isfinite(g) and ekwh > 0
+                                  else float("nan")),
+            shift_bins=int(shifts[s]),
             power_cap_w=None if np.isinf(cap[s]) else float(cap[s]),
-            cap_exceeded_bins=int((power[s] > cap[s]).sum()),
+            carbon_cap_base_w=(None if np.isinf(cbase[s])
+                               else float(cbase[s])),
+            carbon_cap_slope=float(cslope[s]),
+            cap_exceeded_bins=int((demand[s] > cap_t).sum()),
         ))
     return out
 
@@ -461,6 +689,7 @@ def evaluate_scenarios(
     max_hosts: int | None = None,
     model: str = "opendc",
     max_starts_per_bin: int = 64,
+    carbon_intensity: "Array | np.ndarray | None" = None,
 ) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
     """End-to-end what-if sweep: build, batch-simulate, summarize.
 
@@ -469,14 +698,19 @@ def evaluate_scenarios(
     artifacts (the device-side batch plus host-side summaries) so callers
     can both rank candidates and drill into per-bin fields.  ``scenarios``
     may sweep any :class:`Scenario` axis — topology, placement policy,
-    backfill depth, power model, caps, workload scaling — and the whole
-    sweep still compiles once per ``(S, max_hosts, t_bins, J, max_backfill)``
-    shape.
+    backfill depth, power model, enforced (carbon-aware) caps, workload
+    scaling and time-shifting — and the whole sweep still compiles once per
+    ``(S, max_hosts, t_bins, J, max_backfill)`` shape.  Supplying
+    ``carbon_intensity`` ([t_bins] gCO2/kWh) fills the ``gco2`` /
+    ``carbon_intensity_avg`` summary fields; without it they are NaN and
+    outputs match the pre-carbon engine bit for bit.
     """
     ss = build_scenario_set(workload, dc, scenarios, base_params,
                             max_hosts=max_hosts)
     sim, pred = run_scenarios(
         ss, max_hosts=ss.max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model,
+        carbon_intensity=carbon_intensity,
     )
-    return ss, sim, pred, summarize_scenarios(ss, sim, pred)
+    return ss, sim, pred, summarize_scenarios(
+        ss, sim, pred, carbon_intensity=carbon_intensity)

@@ -79,21 +79,39 @@ class BiasTracker:
 
     Under-estimation (sim < real) risks under-provisioning; over-estimation
     wastes energy (paper §3.4, SPEC RG Cloud framing [13]).
+
+    Exact ties (``sim == real``) carry no directional information and are
+    counted separately — folding them into *over* (the pre-fix behavior)
+    skewed the Fig. 6 bias split whenever predictions hit measurements
+    exactly (synthetic traces, quantized meters, zero-power windows).
+    ``under_fraction``/``over_fraction`` are therefore fractions of the
+    *directional* samples only; ``ties`` is reported alongside.
     """
 
     under: int = 0
     over: int = 0
+    ties: int = 0
 
     def observe(self, real: np.ndarray, sim: np.ndarray) -> None:
         real = np.asarray(real)
         sim = np.asarray(sim)
         self.under += int(np.sum(sim < real))
-        self.over += int(np.sum(sim >= real))
+        self.over += int(np.sum(sim > real))
+        self.ties += int(np.sum(sim == real))
 
     @property
     def samples(self) -> int:
+        return self.under + self.over + self.ties
+
+    @property
+    def directional(self) -> int:
+        """Samples that actually lean one way (excludes exact ties)."""
         return self.under + self.over
 
     @property
     def under_fraction(self) -> float:
-        return self.under / self.samples if self.samples else 0.0
+        return self.under / self.directional if self.directional else 0.0
+
+    @property
+    def over_fraction(self) -> float:
+        return self.over / self.directional if self.directional else 0.0

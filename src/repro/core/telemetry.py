@@ -32,10 +32,21 @@ import numpy as np
 from repro.core import codec
 from repro.traces.schema import SAMPLE_SECONDS
 
+#: well-known extras column: measured grid carbon intensity ``[Tw]``
+#: (gCO2/kWh) for the window.  When present the orchestrator scores window
+#: carbon against this *measured* signal instead of its configured forecast
+#: (same precedence reality takes over the model everywhere else).
+CARBON_INTENSITY_KEY = "carbon_intensity"
+
 
 @dataclasses.dataclass(frozen=True)
 class TelemetryWindow:
-    """One window of operation's worth of physical-twin telemetry."""
+    """One window of operation's worth of physical-twin telemetry.
+
+    ``extras`` carries additional aligned ``[Tw]``-leading columns; known
+    keys: :data:`CARBON_INTENSITY_KEY` (measured grid carbon intensity,
+    gCO2/kWh).  Extras are clipped, persisted and loaded with the window.
+    """
 
     window: int               # window index (lock-step schedule)
     t0_bin: int               # first 5-min bin covered

@@ -36,7 +36,7 @@ TB_C = 128     # candidates per block
 
 
 def _kernel(u_ref, real_ref, pidle_ref, pmax_ref, r_ref, out_ref, *,
-            n_t: int, n_h: int, t_tiles: int):
+            n_t: int, n_h: int):
     ti = pl.program_id(1)
 
     @pl.when(ti == 0)
@@ -64,13 +64,15 @@ def _kernel(u_ref, real_ref, pidle_ref, pmax_ref, r_ref, out_ref, *,
     # [Tb, Hp, 1] * [1, 1, Cb] -> [Tb, Hp, Cb] in VREGs, reduce axis 1.
     sr = jnp.sum(jnp.exp(log_u[:, :, None] * r[None]), axis=1)  # [Tb, Cb]
 
+    # MAPE semantics shared with power.mape / the XLA oracle: |real| in the
+    # denominator, zero-real bins masked out (the bin-count normalization
+    # 100/n_nonzero is applied by the wrapper — n_nonzero is data-dependent
+    # and candidate-independent, so the kernel only accumulates raw sums).
+    nz_mask = (jnp.abs(real) > 1e-9).astype(jnp.float32)         # [Tb, 1]
     sim = n_h * p_idle + (p_max - p_idle) * (s2 - sr)            # [Tb, Cb]
-    rel = jnp.abs((real - sim) / (real + 1e-9)) * t_mask         # [Tb, Cb]
+    rel = (jnp.abs((real - sim) / (jnp.abs(real) + 1e-9))
+           * t_mask * nz_mask)                                   # [Tb, Cb]
     out_ref[...] += jnp.sum(rel, axis=0, keepdims=True)          # [1, Cb]
-
-    @pl.when(ti == t_tiles - 1)
-    def _finish():
-        out_ref[...] = out_ref[...] * (100.0 / n_t)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "tb_t", "tb_c"))
@@ -101,7 +103,7 @@ def calib_mape_grid_pallas(
 
     t_tiles = tp // tb_t
     c_tiles = cp // tb_c
-    kernel = functools.partial(_kernel, n_t=t, n_h=h, t_tiles=t_tiles)
+    kernel = functools.partial(_kernel, n_t=t, n_h=h)
     out = pl.pallas_call(
         kernel,
         grid=(c_tiles, t_tiles),
@@ -116,4 +118,10 @@ def calib_mape_grid_pallas(
         out_shape=jax.ShapeDtypeStruct((1, cp), jnp.float32),
         interpret=interpret,
     )(u, real, pi, pm, rr)
-    return out[0, :c]
+    # normalization matches power.mape: mean over the *nonzero-real* bins
+    # (zero-real bins carry no meaningful percentage error and were masked
+    # inside the kernel); an all-zero window is undefined -> NaN for every
+    # candidate, so the calibrator keeps its incumbent instead of "fitting".
+    n_nz = jnp.sum(jnp.abs(real_power.astype(jnp.float32)) > 1e-9)
+    scaled = out[0, :c] * (100.0 / jnp.maximum(n_nz, 1))
+    return jnp.where(n_nz > 0, scaled, jnp.nan)

@@ -26,6 +26,15 @@ def calib_mape_grid_ref(
     For candidate c:  sim_t = H*p_idle_c + (p_max_c - p_idle_c) * (S2_t - Sr_t(c))
     with S2_t = sum_h 2*u_th and Sr_t(c) = sum_h u_th^{r_c}; MAPE over t.
 
+    Same MAPE semantics as :func:`repro.core.power.mape`: denominator
+    ``|real| + eps``, zero-real bins (all hosts offline) excluded from
+    the mean — one dead bin must not blow every candidate's score to 1e10 %
+    and wash out the grid search — and an *all*-zero window returns NaN for
+    every candidate (undefined, surfaced; ``calibrate_window`` keeps the
+    incumbent parameters on such windows instead of shipping an arbitrary
+    grid point as a "perfect" fit).  The mask is candidate-independent, so
+    exclusion is a per-bin weight, not a shape change.
+
     The [C, T] intermediate is materialized here — the Pallas kernel's whole
     point is to tile this away (see calib_mape.py).
     """
@@ -40,7 +49,11 @@ def calib_mape_grid_ref(
     span = (p_max - p_idle).astype(jnp.float32)[:, None]
     sim = h * p_idle.astype(jnp.float32)[:, None] + span * (s2[None, :] - sr)
     rp = real_power.astype(jnp.float32)[None, :]
-    return jnp.mean(jnp.abs((rp - sim) / (rp + 1e-9)), axis=1) * 100.0
+    nonzero = jnp.abs(rp) > 1e-9                        # [1, T]
+    n_nz = jnp.sum(nonzero)
+    ape = jnp.abs((rp - sim) / (jnp.abs(rp) + 1e-9)) * nonzero
+    out = jnp.sum(ape, axis=1) * (100.0 / jnp.maximum(n_nz, 1))
+    return jnp.where(n_nz > 0, out, jnp.nan)
 
 
 def power_sim_ref(

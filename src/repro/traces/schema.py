@@ -32,6 +32,11 @@ class Workload:
         job over its lifetime, expressed as U equal-length phases of per-core
         utilization in [0, 1] (OpenDC "fragments").
       valid: ``[J] bool`` — padding mask (traces are padded to fixed J).
+      deferrable: ``[J] bool`` or ``None`` — which jobs tolerate submission
+        time-shifting (batch/background work vs. interactive).  ``None``
+        means *all* jobs are deferrable — the permissive default keeps
+        carbon-aware time-shift scenarios (``Scenario.shift_bins``)
+        available on traces that carry no deferability metadata.
     """
 
     submit_bin: Array
@@ -39,6 +44,7 @@ class Workload:
     cores: Array
     util_levels: Array
     valid: Array
+    deferrable: Array | None = None
 
     @property
     def num_jobs(self) -> int:
@@ -56,7 +62,8 @@ class Workload:
 
 jax.tree_util.register_pytree_node(
     Workload,
-    lambda w: ((w.submit_bin, w.duration_bins, w.cores, w.util_levels, w.valid), None),
+    lambda w: ((w.submit_bin, w.duration_bins, w.cores, w.util_levels,
+                w.valid, w.deferrable), None),
     lambda _, c: Workload(*c),
 )
 
@@ -123,4 +130,6 @@ def pad_workload(w: Workload, to_jobs: int) -> Workload:
         cores=_pad(w.cores, 1),
         util_levels=_pad(w.util_levels, 0.0),
         valid=_pad(w.valid, False),
+        deferrable=(None if w.deferrable is None
+                    else _pad(w.deferrable, False)),
     )

@@ -1,11 +1,16 @@
 """Per-architecture smoke tests: REDUCED config of the same family, one
 forward/train step + one decode step on CPU; output shapes + no NaNs.
-(The FULL configs are exercised via the dry-run only.)"""
+(The FULL configs are exercised via the dry-run only.)
+
+Whole module is tier-2 (``slow``): 11 architectures x (train + decode)
+compile ~100 s of XLA programs on CPU — run via ``pytest -m slow``."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import all_archs, get_config
 from repro.launch.steps import (

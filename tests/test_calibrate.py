@@ -72,6 +72,40 @@ def test_backends_agree():
     np.testing.assert_allclose(m_x, m_p, atol=1e-3)
 
 
+def test_all_zero_window_keeps_incumbent():
+    """An all-offline (zero-power) window has no defined MAPE: every
+    candidate scores NaN and calibration must keep the incumbent params —
+    not crown grid point 0 a 'perfect' 0 % fit."""
+    zeros = jnp.zeros((T,), jnp.float32)
+    m = np.asarray(evaluate_candidates(
+        U, zeros, candidate_grid(CalibrationSpec(r_points=8), BASE)))
+    assert np.isnan(m).all()
+    m_pl = np.asarray(evaluate_candidates(
+        U, zeros, candidate_grid(CalibrationSpec(r_points=8), BASE),
+        backend="pallas_interpret"))
+    assert np.isnan(m_pl).all()
+    res = calibrate_window(U, zeros, CalibrationSpec(r_points=8), BASE)
+    assert res.params == BASE
+    assert np.isnan(res.mape)
+
+
+def test_joint_grid_clamps_narrow_span_base():
+    """Regression: a valid narrow-span base (p_max/p_idle < 1.353) used to
+    make the joint meshgrid emit inverted-curve candidates, which the new
+    PowerParams boundary rejects — the grid must clamp instead of crash."""
+    narrow = PowerParams(300.0, 350.0, 2.0)
+    cand = candidate_grid(CalibrationSpec(mode="joint", r_points=4,
+                                          scale_points=5), narrow)
+    pi, pm = np.asarray(cand.p_idle), np.asarray(cand.p_max)
+    assert (pm >= pi).all()
+    # and a full cycle still runs end to end on such a base
+    real = _truth(r=2.4, p_idle=300.0, p_max=350.0)
+    res = calibrate_window(
+        U, real, CalibrationSpec(mode="joint", r_points=6, scale_points=5),
+        narrow)
+    assert np.isfinite(res.mape)
+
+
 def test_self_calibrator_pipelining():
     cal = SelfCalibrator(CalibrationSpec(), BASE, history_windows=2)
     # before any telemetry: base params

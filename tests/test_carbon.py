@@ -1,0 +1,340 @@
+"""Carbon-aware what-if subsystem: traces, integration, caps, time-shifting."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.feedback import ProposalKind, propose_from_scenario
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.power import PowerParams, carbon_gco2, energy_kwh
+from repro.core.scenarios import (
+    Scenario,
+    build_scenario_set,
+    evaluate_scenarios,
+    run_scenarios,
+)
+from repro.core.telemetry import CARBON_INTENSITY_KEY, TelemetryWindow
+from repro.traces.carbon import (
+    load_carbon_intensity,
+    make_diurnal_carbon,
+    validate_carbon_intensity,
+)
+from repro.traces.schema import DatacenterConfig, Workload
+from repro.traces.surf import (
+    BINS_PER_DAY,
+    SurfTraceSpec,
+    make_surf22_like,
+    synthesize_ground_truth,
+)
+
+T_BINS = int(0.5 * BINS_PER_DAY)
+DC = DatacenterConfig(num_hosts=64, cores_per_host=16)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_surf22_like(SurfTraceSpec(days=0.5, seed=11), DC)
+
+
+@pytest.fixture(scope="module")
+def intensity():
+    return make_diurnal_carbon(T_BINS, seed=3)
+
+
+# -- trace layer --------------------------------------------------------------
+
+def test_diurnal_generator_shape_and_bounds():
+    ci = make_diurnal_carbon(2 * BINS_PER_DAY, base=320.0, solar_dip=180.0,
+                             evening_peak=120.0, seed=0)
+    assert ci.shape == (2 * BINS_PER_DAY,)
+    assert ci.dtype == np.float32
+    assert (ci >= 0).all() and np.isfinite(ci).all()
+    # diurnal structure: midday (13:00) is cleaner than evening (19:30)
+    midday = ci[int(13 / 24 * BINS_PER_DAY)]
+    evening = ci[int(19.5 / 24 * BINS_PER_DAY)]
+    assert midday < evening
+    # deterministic under a seed; seed=None disables the wander entirely
+    np.testing.assert_array_equal(ci, make_diurnal_carbon(
+        2 * BINS_PER_DAY, base=320.0, solar_dip=180.0, evening_peak=120.0,
+        seed=0))
+    pure = make_diurnal_carbon(2 * BINS_PER_DAY, seed=None)
+    np.testing.assert_array_equal(pure[:BINS_PER_DAY], pure[BINS_PER_DAY:])
+
+
+def test_validate_warns_on_implausible_units():
+    with pytest.warns(UserWarning, match="typical grid band"):
+        validate_carbon_intensity(np.array([300.0, 50_000.0], np.float32))
+
+
+def test_validate_carbon_intensity_rejects_bad():
+    with pytest.raises(ValueError):
+        validate_carbon_intensity(np.array([1.0, -2.0]))
+    with pytest.raises(ValueError):
+        validate_carbon_intensity(np.array([1.0, np.nan]))
+    with pytest.raises(ValueError):
+        validate_carbon_intensity(np.ones((2, 2)))
+    with pytest.raises(ValueError):
+        validate_carbon_intensity(np.array([], np.float32))
+    with pytest.raises(ValueError):
+        validate_carbon_intensity(np.ones(5), t_bins=7)
+
+
+def test_loader_csv_layouts_and_resampling(tmp_path):
+    p1 = tmp_path / "flat.csv"
+    p1.write_text("# comment\n300\n250.5\n400\n")
+    np.testing.assert_allclose(load_carbon_intensity(str(p1)),
+                               [300.0, 250.5, 400.0])
+    p2 = tmp_path / "two_col.csv"
+    p2.write_text("timestamp,gco2_per_kwh\n0,100\n1,200\n2,300\n")
+    np.testing.assert_allclose(load_carbon_intensity(str(p2)),
+                               [100.0, 200.0, 300.0])
+    # shorter than horizon -> tiled (diurnal-periodic); longer -> truncated
+    np.testing.assert_allclose(load_carbon_intensity(str(p2), t_bins=5),
+                               [100.0, 200.0, 300.0, 100.0, 200.0])
+    np.testing.assert_allclose(load_carbon_intensity(str(p2), t_bins=2),
+                               [100.0, 200.0])
+    bad = tmp_path / "bad.csv"
+    bad.write_text("1\n2\noops\n")
+    with pytest.raises(ValueError):
+        load_carbon_intensity(str(bad))
+
+
+# -- carbon integration (hand-computed golden) --------------------------------
+
+def test_carbon_integration_3bin_golden():
+    """Hand-computed: power [1000, 2000, 500] W over 5-min bins against
+    intensity [300, 100, 600] gCO2/kWh."""
+    power = jnp.asarray([1000.0, 2000.0, 500.0])
+    e = energy_kwh(power, 300.0)            # [kWh] = W * (300/3600)/1000
+    np.testing.assert_allclose(
+        np.asarray(e), [1 / 12, 2 / 12, 0.5 / 12], rtol=1e-6)
+    g = carbon_gco2(e, jnp.asarray([300.0, 100.0, 600.0]))
+    # 83.333Wh*300 + 166.667Wh*100 + 41.667Wh*600 = 25 + 16.667 + 25 g
+    np.testing.assert_allclose(np.asarray(g), [25.0, 100 / 6, 25.0],
+                               rtol=1e-6)
+    assert float(g.sum()) == pytest.approx(200.0 / 3, rel=1e-6)
+
+
+def test_scenario_summary_reports_gco2(workload, intensity):
+    _, _, pred, summaries = evaluate_scenarios(
+        workload, DC, [Scenario(name="base")], t_bins=T_BINS,
+        carbon_intensity=intensity)
+    (s,) = summaries
+    expect = float((np.asarray(pred.energy_kwh[0], np.float64)
+                    * intensity).sum())
+    assert s.gco2 == pytest.approx(expect, rel=1e-5)
+    assert s.carbon_intensity_avg == pytest.approx(s.gco2 / s.energy_kwh,
+                                                   rel=1e-6)
+    assert intensity.min() <= s.carbon_intensity_avg <= intensity.max()
+
+
+def test_no_intensity_means_nan_not_zero(workload):
+    _, _, pred, summaries = evaluate_scenarios(
+        workload, DC, [Scenario(name="base")], t_bins=T_BINS)
+    assert pred.gco2 is None
+    assert math.isnan(summaries[0].gco2)
+    assert math.isnan(summaries[0].carbon_intensity_avg)
+
+
+# -- power-cap enforcement ----------------------------------------------------
+
+def test_static_cap_is_enforced_not_flagged(workload):
+    cap = 6000.0   # 64 hosts idle at 70 W = 4480 W floor; demand exceeds this
+    _, _, pred, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="free"), Scenario(name="capped", power_cap_w=cap)],
+        t_bins=T_BINS)
+    demand = np.asarray(pred.power_demand_w[1])
+    delivered = np.asarray(pred.power_w[1])
+    exceeded = demand > cap
+    assert exceeded.any(), "test cap never binds; tighten it"
+    np.testing.assert_allclose(delivered[exceeded], cap, rtol=1e-6)
+    np.testing.assert_array_equal(delivered[~exceeded], demand[~exceeded])
+    # free lane is untouched: demand == delivered bit-for-bit
+    np.testing.assert_array_equal(np.asarray(pred.power_w[0]),
+                                  np.asarray(pred.power_demand_w[0]))
+    s = summaries[1]
+    assert s.cap_exceeded_bins == int(exceeded.sum())
+    assert s.peak_power_w <= cap + 1e-3 < s.peak_demand_w
+    assert s.energy_kwh < summaries[0].energy_kwh
+    # throttling prices the cap in performance currency too
+    assert (np.asarray(pred.tflops[1])[exceeded]
+            < np.asarray(pred.tflops[0])[exceeded]).all()
+
+
+def test_carbon_aware_cap_follows_intensity(workload, intensity):
+    # cap = base + slope * I_t: dirtier grid -> tighter cap
+    base_w, slope = 7000.0, -8.0
+    _, _, pred, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="cc", carbon_cap_base_w=base_w,
+                  carbon_cap_slope=slope)],
+        t_bins=T_BINS, carbon_intensity=intensity)
+    cap_t = np.maximum(base_w + slope * intensity, 0.0)
+    demand = np.asarray(pred.power_demand_w[0])
+    delivered = np.asarray(pred.power_w[0])
+    exceeded = demand > cap_t
+    assert exceeded.any(), "carbon cap never binds; tighten it"
+    np.testing.assert_allclose(delivered[exceeded], cap_t[exceeded],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(delivered[~exceeded], demand[~exceeded])
+    assert summaries[0].cap_exceeded_bins == int(exceeded.sum())
+    assert summaries[0].carbon_cap_base_w == pytest.approx(base_w)
+    assert summaries[0].gco2 < float((energy_kwh(
+        jnp.asarray(demand), 300.0) * intensity).sum())
+
+
+def test_carbon_cap_without_trace_raises(workload):
+    ss = build_scenario_set(
+        workload, DC, [Scenario(name="cc", carbon_cap_base_w=5000.0)])
+    with pytest.raises(ValueError, match="carbon_cap_base_w"):
+        run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=T_BINS)
+
+
+# -- deferrable-job time-shifting ---------------------------------------------
+
+def _two_job_workload(deferrable):
+    return Workload(
+        submit_bin=jnp.asarray([0, 2], jnp.int32),
+        duration_bins=jnp.asarray([2, 2], jnp.int32),
+        cores=jnp.asarray([4, 4], jnp.int32),
+        util_levels=jnp.ones((2, 2), jnp.float32),
+        valid=jnp.ones((2,), bool),
+        deferrable=deferrable,
+    )
+
+
+def test_shift_bins_moves_only_deferrable_jobs():
+    w = _two_job_workload(jnp.asarray([True, False]))
+    ss = build_scenario_set(w, DatacenterConfig(num_hosts=2, cores_per_host=8),
+                            [Scenario(name="s", shift_bins=4)])
+    sub = np.sort(np.asarray(ss.workload.submit_bin[0]))
+    np.testing.assert_array_equal(sub, [2, 4])     # job0 0->4, job1 stays 2
+    # default None deferrable mask = everything moves
+    w_all = _two_job_workload(None)
+    ss_all = build_scenario_set(
+        w_all, DatacenterConfig(num_hosts=2, cores_per_host=8),
+        [Scenario(name="s", shift_bins=4)])
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(ss_all.workload.submit_bin[0])), [4, 6])
+
+
+def test_shift_keeps_fcfs_order_sorted():
+    """The DES's queue order is the array order: after shifting, submission
+    times must be non-decreasing or late-shifted jobs would head-block
+    earlier work."""
+    w = make_surf22_like(SurfTraceSpec(days=0.5, seed=11), DC)
+    defer = np.zeros(w.num_jobs, bool)
+    defer[::3] = True                               # shift every third job
+    w = Workload(w.submit_bin, w.duration_bins, w.cores, w.util_levels,
+                 w.valid, jnp.asarray(defer))
+    ss = build_scenario_set(w, DC, [Scenario(name="s", shift_bins=24)])
+    sub = np.asarray(ss.workload.submit_bin[0])
+    assert (np.diff(sub) >= 0).all()
+    # mass is conserved: same multiset of durations/cores
+    assert np.asarray(ss.workload.valid[0]).sum() == w.num_jobs
+
+
+def test_shift_toward_clean_bins_cuts_carbon(workload):
+    """Intensity dirty early / clean late: delaying deferrable work must cut
+    gCO2 while conserving placed work inside a long-enough horizon."""
+    t_bins = T_BINS + 48                            # slack so no job falls off
+    ci = np.full(t_bins, 600.0, np.float32)
+    ci[T_BINS // 2:] = 50.0                        # clean second half
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="now"), Scenario(name="later", shift_bins=36)],
+        t_bins=t_bins, carbon_intensity=ci)
+    now, later = summaries
+    assert later.unplaced_jobs <= now.unplaced_jobs
+    assert later.gco2 < now.gco2
+    assert later.cpu_hours == pytest.approx(now.cpu_hours)
+
+
+# -- single-compile invariant for the carbon grid -----------------------------
+
+def test_carbon_grid_single_compilation(workload, intensity):
+    if run_scenarios._cache_size is None:
+        pytest.skip("jax private _cache_size API unavailable")
+    def grid(k):
+        return [Scenario(name=f"{k}-c{c}-s{s}", carbon_cap_base_w=c,
+                         carbon_cap_slope=-10.0 * k, shift_bins=s,
+                         num_hosts=h)
+                for c in (6000.0, 8000.0) for s in (0, 12) for h in (32, 64)]
+    ss1 = build_scenario_set(workload, DC, grid(1), max_hosts=64)
+    ss2 = build_scenario_set(workload, DC, grid(2), max_hosts=64)
+    run_scenarios(ss1, max_hosts=64, t_bins=T_BINS,
+                  carbon_intensity=intensity)[0].u_th.block_until_ready()
+    after_first = run_scenarios._cache_size()
+    run_scenarios(ss2, max_hosts=64, t_bins=T_BINS,
+                  carbon_intensity=intensity)[0].u_th.block_until_ready()
+    assert run_scenarios._cache_size() == after_first
+
+
+# -- proposals + orchestrator -------------------------------------------------
+
+def test_propose_carbon_reduction(workload, intensity):
+    _, _, _, summaries = evaluate_scenarios(
+        workload, DC,
+        [Scenario(name="base"),
+         Scenario(name="cc", carbon_cap_base_w=6500.0,
+                  carbon_cap_slope=-5.0)],
+        t_bins=T_BINS, carbon_intensity=intensity)
+    base, cc = summaries
+    assert cc.gco2 < base.gco2
+    props = propose_from_scenario(0, cc, base)
+    kinds = {p.kind for p in props}
+    assert ProposalKind.CARBON_REDUCTION in kinds
+    carbon = next(p for p in props
+                  if p.kind == ProposalKind.CARBON_REDUCTION)
+    assert carbon.impact["gco2_saving"] > 0
+    # no trace -> NaN gco2 -> the carbon rule must stay silent
+    no_ci = propose_from_scenario(
+        0, summaries[0], summaries[0].__class__(**{
+            **summaries[0].__dict__, "gco2": float("nan")}))
+    assert ProposalKind.CARBON_REDUCTION not in {p.kind for p in no_ci}
+
+
+def test_orchestrator_rejects_bad_measured_intensity(workload, intensity):
+    """Measured intensity from telemetry extras crosses the same validation
+    boundary as the forecast — a negative/NaN sensor stream must raise, not
+    flip the sign of the window's gCO2 record."""
+    orch = Orchestrator(
+        workload, DC, T_BINS,
+        OrchestratorConfig(bins_per_window=36, calibrate=False),
+        carbon_intensity=intensity)
+    sim = orch._ensure_sim()
+    u0 = np.asarray(sim.u_th[:36])
+    orch.store.ingest(TelemetryWindow(
+        window=0, t0_bin=0, u_th=u0, power_w=synthesize_ground_truth(u0),
+        extras={CARBON_INTENSITY_KEY: np.full(36, -50.0)}))
+    with pytest.raises(ValueError, match=">= 0"):
+        orch.run_window(0)
+
+
+def test_orchestrator_carbon_loop(workload, intensity):
+    orch = Orchestrator(
+        workload, DC, T_BINS,
+        OrchestratorConfig(bins_per_window=36, calibrate=False),
+        carbon_intensity=intensity)
+    sim = orch._ensure_sim()
+    # window 0 telemetry carries *measured* intensity (overrides forecast)
+    u0 = np.asarray(sim.u_th[:36])
+    p0 = synthesize_ground_truth(u0)
+    measured = intensity[:36] * 1.5
+    orch.store.ingest(TelemetryWindow(
+        window=0, t0_bin=0, u_th=u0, power_w=p0,
+        extras={CARBON_INTENSITY_KEY: measured}))
+    rec0 = orch.run_window(0)
+    rec1 = orch.run_window(1)       # no telemetry: forecast intensity
+    assert rec0.gco2 is not None and rec1.gco2 is not None
+    expect0 = float((np.asarray(rec0.prediction.energy_kwh, np.float64)
+                     * measured.astype(np.float64)).sum())
+    assert rec0.gco2 == pytest.approx(expect0, rel=1e-6)
+    expect1 = float(np.asarray(rec1.prediction.gco2, np.float64).sum())
+    assert rec1.gco2 == pytest.approx(expect1, rel=1e-6)
+    # what-if sweeps inherit the forecast: summaries carry finite gCO2
+    res = orch.evaluate_whatif([Scenario(name="h32", num_hosts=32)])
+    assert all(math.isfinite(s.gco2) for s in res.summaries)

@@ -75,6 +75,25 @@ def test_bias_tracker():
     assert bt.under_fraction == pytest.approx(2 / 3)
 
 
+def test_bias_tracker_counts_ties_separately():
+    """Regression: exact ties (sim == real) used to count as over-estimation,
+    skewing the Fig. 6 bias split — a perfectly calibrated model read as
+    100 % over-estimating.  Ties are now their own bucket and the
+    under/over fractions cover directional samples only."""
+    bt = BiasTracker()
+    bt.observe(np.array([10.0, 10.0, 10.0, 10.0]),
+               np.array([10.0, 10.0, 9.0, 11.0]))
+    assert (bt.under, bt.over, bt.ties) == (1, 1, 2)
+    assert bt.samples == 4 and bt.directional == 2
+    assert bt.under_fraction == pytest.approx(0.5)
+    assert bt.over_fraction == pytest.approx(0.5)
+    # all-ties stream: no direction at all, not "all over"
+    bt2 = BiasTracker()
+    bt2.observe(np.array([5.0, 5.0]), np.array([5.0, 5.0]))
+    assert bt2.over == 0 and bt2.ties == 2
+    assert bt2.under_fraction == 0.0 and bt2.over_fraction == 0.0
+
+
 def test_hitl_gate_minor_auto_major_pending():
     gate = HITLGate()
     minor = gate.submit(Proposal(ProposalKind.RECALIBRATE, 0, "recal"))

@@ -1,10 +1,16 @@
 """Model-layer correctness: chunked attention vs naive softmax; decode paths
-consistent with full-sequence forward (GQA cache, MLA absorbed, Mamba2 SSD)."""
+consistent with full-sequence forward (GQA cache, MLA absorbed, Mamba2 SSD).
+
+Whole module is tier-2 (``slow``): the decode-vs-forward equivalences scan
+whole sequences through jitted step functions (~70 s on CPU) — run via
+``pytest -m slow``."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs.base import ModelConfig
 from repro.kernels.ref import flash_attention_ref

@@ -239,8 +239,11 @@ def _summary(**kw):
         backfill_depth=0, mean_util=0.5, p99_queue=3.0, max_queue=5,
         mean_wait_bins=10.0, p99_wait_bins=20.0, unplaced_jobs=0,
         total_jobs=100, energy_kwh=50.0, mean_power_w=1000.0,
-        peak_power_w=2000.0, cpu_hours=100.0, kwh_per_cpu_hour=0.5,
-        power_cap_w=None, cap_exceeded_bins=0)
+        peak_power_w=2000.0, peak_demand_w=2000.0, cpu_hours=100.0,
+        kwh_per_cpu_hour=0.5, gco2=float("nan"),
+        carbon_intensity_avg=float("nan"), shift_bins=0,
+        power_cap_w=None, carbon_cap_base_w=None, carbon_cap_slope=0.0,
+        cap_exceeded_bins=0)
     base.update(kw)
     return ScenarioSummary(**base)
 

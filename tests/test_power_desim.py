@@ -6,12 +6,14 @@ import pytest
 
 from repro.core.desim import simulate, simulate_utilization
 from repro.core.power import (
+    POWER_MODELS,
     PowerParams,
     datacenter_power,
     linear_power,
     mape,
     opendc_power,
 )
+from repro.core.scenarios import Scenario
 from repro.traces.schema import DatacenterConfig, Workload, pad_workload
 from repro.traces.surf import SurfTraceSpec, make_surf22_like
 
@@ -56,6 +58,149 @@ def test_mape_zero_iff_equal():
     a = jnp.asarray(np.random.default_rng(0).uniform(10, 20, 64))
     assert float(mape(a, a)) == pytest.approx(0.0, abs=1e-5)
     assert float(mape(a, a * 1.1)) == pytest.approx(10.0, rel=1e-3)
+
+
+# -- regression: r <= 0 silently produced negative watts ----------------------
+
+def test_power_params_rejects_r_le_zero():
+    """Pre-fix repro: PowerParams(r=0) at u=0 gave 70 + 280*(0 - 0^0) =
+    -210 W, and r=-1 gave -inf (0^-1 = inf).  Both must now raise at the
+    PowerParams boundary instead of corrupting every downstream kWh/gCO2."""
+    for bad_r in (0.0, -1.0):
+        with pytest.raises(ValueError, match="r must be finite and > 0"):
+            PowerParams(p_idle=70.0, p_max=350.0, r=bad_r)
+    # the would-be corruption, demonstrated with the validator bypassed:
+    p = PowerParams(70.0, 350.0, 2.0)
+    object.__setattr__(p, "r", 0.0)
+    out = float(opendc_power(jnp.asarray([0.0]), p)[0])
+    assert out == pytest.approx(-210.0)     # what users silently got before
+
+
+def test_power_params_rejects_non_finite():
+    """NaN/inf parameters are the same silent-corruption class as r <= 0:
+    they must fail the boundary too (NaN compares False against any bound,
+    so naive range checks wave it through)."""
+    for bad in (dict(r=float("nan")), dict(r=float("inf")),
+                dict(p_idle=float("nan")), dict(p_max=float("nan")),
+                dict(p_max=float("inf"))):
+        with pytest.raises(ValueError):
+            PowerParams(**{**dict(p_idle=70.0, p_max=350.0, r=2.0), **bad})
+    with pytest.raises(ValueError):
+        Scenario(name="bad", r=float("nan"))
+    with pytest.raises(ValueError):
+        Scenario(name="bad", p_idle=float("nan"))
+    with pytest.raises(ValueError):
+        Scenario(name="bad", p_max=float("inf"))
+
+
+def test_power_params_rejects_inverted_span():
+    with pytest.raises(ValueError, match="p_max"):
+        PowerParams(p_idle=400.0, p_max=350.0, r=2.0)
+    with pytest.raises(ValueError, match="p_idle"):
+        PowerParams(p_idle=-5.0, p_max=350.0, r=2.0)
+    # per-host vectors are validated elementwise
+    with pytest.raises(ValueError):
+        PowerParams(p_idle=np.array([70.0, 360.0]),
+                    p_max=np.array([350.0, 350.0]), r=2.0)
+
+
+def test_power_params_traced_values_pass_through():
+    """Validation is concrete-only: tracer leaves (jit/vmap pytree
+    round-trips) must not abort tracing."""
+    import jax
+
+    @jax.jit
+    def f(r):
+        return opendc_power(jnp.asarray([0.5]),
+                            PowerParams(70.0, 350.0, r))[0]
+
+    assert float(f(2.0)) == pytest.approx(float(
+        opendc_power(jnp.asarray([0.5]), PowerParams(70.0, 350.0, 2.0))[0]))
+
+
+def test_scenario_rejects_bad_power_params():
+    with pytest.raises(ValueError, match="r must be > 0"):
+        Scenario(name="bad", r=0.0)
+    with pytest.raises(ValueError, match="inverts"):
+        Scenario(name="bad", p_idle=400.0, p_max=350.0)
+    with pytest.raises(ValueError, match="power_cap_w"):
+        Scenario(name="bad", power_cap_w=-5.0)
+
+
+# -- regression: zero-real bins exploded MAPE to ~5e10 % ----------------------
+
+def test_mape_zero_real_bins_excluded():
+    """Pre-fix repro: real=[0, 100], sim=[50, 100] gave
+    mean(|0-50|/1e-9, 0)/2 = 2.5e10 %.  Zero-real bins (all hosts offline)
+    now drop out of the mean."""
+    real = jnp.asarray([0.0, 100.0, 100.0])
+    sim = jnp.asarray([50.0, 110.0, 90.0])
+    assert float(mape(real, sim)) == pytest.approx(10.0, rel=1e-5)
+    # all-zero real: undefined, surfaced as NaN (fails any SLO comparison)
+    assert np.isnan(float(mape(jnp.zeros(3), sim)))
+    # negative residual traces: |real| denominator keeps the error's sign
+    # structure intact (same magnitude as the positive trace)
+    assert float(mape(-real, -sim)) == pytest.approx(10.0, rel=1e-5)
+
+
+def test_calib_kernel_mape_matches_power_mape_on_zero_bins():
+    """The calibration grid kernel (oracle + pallas interpret) shares the
+    zero-real-bin exclusion — one dead bin must not wash out the search."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.uniform(0, 1, (32, 8)).astype(np.float32))
+    real = np.asarray(
+        opendc_power(u, PowerParams(70.0, 350.0, 2.5))).sum(1)
+    real[5] = 0.0                                   # dead bin
+    real_j = jnp.asarray(real.astype(np.float32))
+    cand = PowerParams(p_idle=jnp.asarray([70.0]), p_max=jnp.asarray([350.0]),
+                       r=jnp.asarray([2.5]))
+    got_xla = float(kops.calib_mape_grid(
+        u, real_j, cand.p_idle, cand.p_max, cand.r, backend="xla")[0])
+    got_pl = float(kops.calib_mape_grid(
+        u, real_j, cand.p_idle, cand.p_max, cand.r,
+        backend="pallas_interpret")[0])
+    want = float(mape(real_j, jnp.asarray(np.asarray(
+        opendc_power(u, PowerParams(70.0, 350.0, 2.5))).sum(1))))
+    assert got_xla == pytest.approx(want, abs=1e-3)
+    assert got_pl == pytest.approx(want, abs=1e-3)
+    assert got_xla < 1.0                            # not 5e10
+
+
+# -- property tests: all four POWER_MODELS ------------------------------------
+
+_GRID_PARAMS = [PowerParams(70.0, 350.0, r) for r in (1.0, 1.5, 2.0)]
+
+
+@pytest.mark.parametrize("name", sorted(POWER_MODELS))
+def test_all_models_hit_boundaries(name):
+    """P(0) = p_idle and P(1) = p_max for every model in the zoo."""
+    fn = POWER_MODELS[name]
+    for params in _GRID_PARAMS:
+        out = np.asarray(fn(jnp.asarray([0.0, 1.0]), params))
+        assert out[0] == pytest.approx(params.p_idle, rel=1e-6)
+        assert out[1] == pytest.approx(params.p_max, rel=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(POWER_MODELS))
+def test_all_models_bounded_and_monotone_on_valid_domain(name):
+    """Within [p_idle, p_max] and monotone in u on the model's valid domain
+    (for opendc that is r <= 2 — the form genuinely overshoots p_max for
+    r > 2, a known model quirk pinned by the loose-bound test above)."""
+    fn = POWER_MODELS[name]
+    u = jnp.linspace(0.0, 1.0, 257)
+    for params in _GRID_PARAMS:
+        out = np.asarray(fn(u, params))
+        lo, hi = float(np.asarray(params.p_idle)), float(
+            np.asarray(params.p_max))
+        assert (out >= lo - 1e-3).all()
+        assert (out <= hi + 1e-3).all()
+        assert (np.diff(out) >= -1e-3).all(), f"{name} non-monotone"
+        # utilization outside [0, 1] is clipped, never extrapolated
+        wild = np.asarray(fn(jnp.asarray([-0.5, 1.7]), params))
+        assert wild[0] == pytest.approx(lo, rel=1e-6)
+        assert wild[1] == pytest.approx(hi, rel=1e-6)
 
 
 def _small_workload():

@@ -205,6 +205,47 @@ def test_propose_from_scenario_rules(workload):
     assert any(p.kind == ProposalKind.POWER_CAP for p in cap_props)
 
 
+def test_no_intensity_outputs_match_pre_carbon_goldens():
+    """With no carbon-intensity trace the engine's outputs are bit-for-bit
+    the pre-carbon-subsystem outputs (goldens captured from the pre-PR
+    engine).  The capped lane's *sim* outputs and pre-cap demand also match;
+    its delivered power differs only where enforcement clips to the cap —
+    the one intended behavior change (power_cap_w used to be flag-only)."""
+    import pathlib
+
+    g = np.load(pathlib.Path(__file__).parent
+                / "golden" / "scenarios_pre_carbon.npz")
+    dc = DatacenterConfig(num_hosts=32, cores_per_host=16)
+    w = make_surf22_like(SurfTraceSpec(days=0.25, seed=5), dc)
+    cap = 5000.0
+    scs = [Scenario(name="base"),
+           Scenario(name="h16", num_hosts=16),
+           Scenario(name="bf", policy="best_fit", backfill_depth=2),
+           Scenario(name="hot", util_scale=1.5),
+           Scenario(name="cap", power_cap_w=cap)]
+    _, sim, pred, summaries = evaluate_scenarios(w, dc, scs, t_bins=72)
+    for k in ("u_th", "queue_len", "running", "job_start", "job_host"):
+        np.testing.assert_array_equal(np.asarray(getattr(sim, k)), g[k],
+                                      err_msg=k)
+    for k in ("power_w", "energy_kwh", "tflops", "utilization", "efficiency"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pred, k))[:4], g[k][:4], err_msg=k)
+    # capped lane: demand is the old (flag-only) power; delivered power is
+    # demand clipped to the cap, bit-identical wherever the cap is slack
+    demand = np.asarray(pred.power_demand_w[4])
+    np.testing.assert_array_equal(demand, g["power_w"][4])
+    exceeded = g["power_w"][4] > cap
+    delivered = np.asarray(pred.power_w[4])
+    np.testing.assert_array_equal(delivered[~exceeded],
+                                  g["power_w"][4][~exceeded])
+    assert (delivered <= cap + 1e-6).all() or not exceeded.any()
+    np.testing.assert_array_equal(
+        [s.cap_exceeded_bins for s in summaries], g["cap_exceeded"])
+    np.testing.assert_allclose(
+        [s.energy_kwh for s in summaries[:4]], g["energy_total"][:4],
+        rtol=1e-6)
+
+
 def test_orchestrator_evaluate_whatif_routes_gate(workload):
     orch = Orchestrator(workload, DC, T_BINS,
                         OrchestratorConfig(bins_per_window=36, calibrate=False))

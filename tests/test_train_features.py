@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_train_step, param_specs_for
@@ -23,6 +24,7 @@ def _tiny():
                        d_ff=64, remat="none").validate()
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch():
     cfg = _tiny()
     opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10,
