@@ -19,6 +19,12 @@ grid-carbon-intensity trace — single-compile is **asserted** (cap
 parameters are traced ``[S]`` scalars, shifts are same-shape workload
 data), including across re-parameterized grids of the same shape.
 
+A fourth case *shards the scenario axis*: ``run_scenarios(shard=True)``
+``shard_map``s S over the device mesh, records the warm speedup vs the
+single-device vmap and asserts bit-for-bit equality (multi-device runtimes
+only — on CPU export ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+before launch).
+
     PYTHONPATH=src python benchmarks/whatif_batch.py
 """
 
@@ -200,6 +206,58 @@ def run_carbon_grid(days: float = 1.0) -> dict:
     }
 
 
+def run_sharded(days: float = 1.0, num_scenarios: int = 16) -> dict | None:
+    """Scenario-axis sharding: shard_map over S vs the single-device vmap.
+
+    Needs a multi-device runtime; on CPU boxes export
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+    *before* process start (the tier1-multidevice CI job does exactly this).
+    Reports warm wall-clock for both paths and asserts the shard_map output
+    is bit-for-bit the vmap output — the same gate as
+    ``tests/test_shard_scenarios.py``.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return None
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    host_counts = [64 + 12 * i for i in range(num_scenarios)]
+    ss = build_scenario_set(
+        w, dc, [Scenario(name=f"h{h}", num_hosts=h) for h in host_counts])
+
+    def timed(**kw):
+        sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins,
+                                  **kw)
+        sim.u_th.block_until_ready()          # warm-up/compile
+        t0 = time.time()
+        sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins,
+                                  **kw)
+        sim.u_th.block_until_ready()
+        return time.time() - t0, sim, pred
+
+    vmap_s, sim_v, pred_v = timed()
+    shard_s, sim_s, pred_s = timed(shard=True)
+    exact = all(
+        bool((np.asarray(a) == np.asarray(b)).all())
+        for a, b in zip(jax.tree.leaves((sim_v, pred_v)),
+                        jax.tree.leaves((sim_s, pred_s))))
+    # the acceptance gate, enforced (not just printed): shard_map over S
+    # must reproduce the single-device vmap path bit for bit.
+    assert exact, "sharded scenario outputs diverged from the vmap path"
+    return {
+        "devices": n_dev,
+        "num_scenarios": num_scenarios,
+        "t_bins": t_bins,
+        "vmap_warm_s": vmap_s,
+        "shard_warm_s": shard_s,
+        "speedup": vmap_s / shard_s,
+        "bitwise_equal": exact,
+    }
+
+
 def main() -> None:
     r = run()
     print(f"what-if sweep, S={r['num_scenarios']} topologies, "
@@ -231,6 +289,20 @@ def main() -> None:
               "asserted incl. re-parameterization)")
     print(f"  per-scenario gCO2 spread: {c['gco2_min_kg']:.1f} - "
           f"{c['gco2_max_kg']:.1f} kgCO2")
+
+    s = run_sharded()
+    if s is None:
+        print("\nsharded scenario axis: skipped (single device; export "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4 to "
+              "exercise shard_map on CPU)")
+    else:
+        print(f"\nsharded scenario axis: S={s['num_scenarios']} over "
+              f"{s['devices']} devices, {s['t_bins']} bins")
+        print(f"  vmap (1 device), warm:  {s['vmap_warm_s']:8.2f} s")
+        print(f"  shard_map, warm:        {s['shard_warm_s']:8.2f} s "
+              f"-> {s['speedup']:.2f}x")
+        print(f"  bit-for-bit vs vmap: "
+              f"{'PASS' if s['bitwise_equal'] else 'FAIL'}")
 
 
 if __name__ == "__main__":

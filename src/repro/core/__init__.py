@@ -33,12 +33,14 @@ from repro.core.orchestrator import (
     WindowRecord,
 )
 from repro.core.scenarios import (
+    SCENARIO_AXIS,
     Scenario,
     ScenarioSet,
     ScenarioSummary,
     build_scenario_set,
     evaluate_scenarios,
     run_scenarios,
+    scenario_mesh,
     summarize_scenarios,
 )
 from repro.core.power import (
@@ -53,13 +55,36 @@ from repro.core.power import (
     validate_power_params,
 )
 from repro.core.slo import NFR1, SLO, BiasTracker, SLOMonitor
+from repro.core.state import (
+    SimSlice,
+    TelemetrySlice,
+    TwinConfig,
+    TwinState,
+    WindowOutput,
+    empty_telemetry,
+    init_twin_state,
+    load_state,
+    make_telemetry,
+    save_state,
+    twin_step,
+    twin_step_jit,
+)
 from repro.core.telemetry import (
     CARBON_INTENSITY_KEY,
     TelemetryStore,
     TelemetryWindow,
     clip_to_window,
 )
-from repro.core.twin import DigitalTwin, TraceGroundTruth, TwinRunResult, run_surf_experiment
+from repro.core.twin import (
+    DigitalTwin,
+    TraceGroundTruth,
+    TwinRunResult,
+    fleet_step,
+    index_twin_state,
+    run_fleet,
+    run_surf_experiment,
+    stack_twin_states,
+)
 
 __all__ = [
     "CalibrationResult", "CalibrationSpec", "SelfCalibrator",
@@ -69,14 +94,18 @@ __all__ = [
     "HITLGate", "Proposal", "ProposalKind",
     "propose_from_scenario", "propose_from_state",
     "Orchestrator", "OrchestratorConfig", "WhatIfResult", "WindowRecord",
-    "Scenario", "ScenarioSet", "ScenarioSummary",
+    "SCENARIO_AXIS", "Scenario", "ScenarioSet", "ScenarioSummary",
     "build_scenario_set", "evaluate_scenarios", "run_scenarios",
-    "summarize_scenarios",
+    "scenario_mesh", "summarize_scenarios",
     "POWER_MODELS", "PowerParams", "carbon_gco2", "datacenter_power",
     "energy_kwh", "linear_power", "mape", "opendc_power",
     "validate_power_params",
     "NFR1", "SLO", "BiasTracker", "SLOMonitor",
+    "SimSlice", "TelemetrySlice", "TwinConfig", "TwinState", "WindowOutput",
+    "empty_telemetry", "init_twin_state", "load_state", "make_telemetry",
+    "save_state", "twin_step", "twin_step_jit",
     "CARBON_INTENSITY_KEY", "TelemetryStore", "TelemetryWindow",
     "clip_to_window",
     "DigitalTwin", "TraceGroundTruth", "TwinRunResult", "run_surf_experiment",
+    "fleet_step", "index_twin_state", "run_fleet", "stack_twin_states",
 ]

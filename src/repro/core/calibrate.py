@@ -99,6 +99,80 @@ def evaluate_candidates(
     )
 
 
+def _grid_traced(spec: CalibrationSpec, base: PowerParams,
+                 r_lo, r_hi, s_lo, s_hi) -> PowerParams:
+    """Candidate grid with *traced* bounds (the refine path of the pure core).
+
+    Mirrors :func:`candidate_grid` but builds the grid with jnp so the zoom
+    bounds may depend on traced values (the incumbent best parameters inside
+    ``jit``).  ``jnp.linspace`` and ``np.linspace`` can differ in the last
+    ulp, so refined sweeps are numerically — not bitwise — equivalent to the
+    host-side path; the default spec (``refine_iters=0``) never takes this
+    path.
+    """
+    r = jnp.linspace(r_lo, r_hi, spec.r_points).astype(jnp.float32)
+    pi_base = jnp.mean(jnp.asarray(base.p_idle, jnp.float32))
+    pm_base = jnp.mean(jnp.asarray(base.p_max, jnp.float32))
+    if spec.mode == "r_only":
+        c = spec.r_points
+        return PowerParams(p_idle=jnp.full((c,), pi_base),
+                           p_max=jnp.full((c,), pm_base), r=r)
+    s = jnp.linspace(s_lo, s_hi, spec.scale_points).astype(jnp.float32)
+    rr, si, sm = jnp.meshgrid(r, s, s, indexing="ij")
+    p_idle = si.ravel() * pi_base
+    p_max = sm.ravel() * pm_base
+    return PowerParams(p_idle=p_idle, p_max=jnp.maximum(p_max, p_idle),
+                       r=rr.ravel())
+
+
+def calibrate_traced(
+    u_th: Array,
+    real_power: Array,
+    cand: PowerParams,
+    spec: CalibrationSpec,
+    base: PowerParams,
+    backend: Backend = "xla",
+) -> tuple[PowerParams, Array]:
+    """Pure, jittable calibration cycle (the core of :func:`calibrate_window`).
+
+    ``cand`` is the precomputed base grid (``candidate_grid(spec, base)`` —
+    host-side, so the grid values are bitwise those of the imperative path).
+    Returns ``(params, best_mape)`` as traced scalars: the argmin-MAPE
+    candidate, refined ``spec.refine_iters`` times, or ``base`` with a NaN
+    MAPE when no candidate has a defined MAPE (all-zero-power history —
+    same keep-the-incumbent rule as :func:`calibrate_window`).
+    """
+    mapes = evaluate_candidates(u_th, real_power, cand, backend=backend)
+    b = jnp.argmin(jnp.where(jnp.isnan(mapes), jnp.inf, mapes))
+    best = PowerParams(p_idle=cand.p_idle[b], p_max=cand.p_max[b], r=cand.r[b])
+    best_mape = mapes[b]
+    any_finite = jnp.any(jnp.isfinite(mapes))
+
+    r_lo, r_hi = spec.r_lo, spec.r_hi
+    s_lo, s_hi = spec.scale_lo, spec.scale_hi
+    for _ in range(spec.refine_iters):
+        span_r = (r_hi - r_lo) * spec.refine_shrink
+        span_s = (s_hi - s_lo) * spec.refine_shrink
+        r_lo = jnp.maximum(1.0, best.r - span_r / 2)
+        r_hi = best.r + span_r / 2
+        s_lo, s_hi = 1.0 - span_s / 2, 1.0 + span_s / 2
+        cand2 = _grid_traced(spec, best, r_lo, r_hi, s_lo, s_hi)
+        m2 = evaluate_candidates(u_th, real_power, cand2, backend=backend)
+        b2 = jnp.argmin(jnp.where(jnp.isnan(m2), jnp.inf, m2))
+        better = m2[b2] < best_mape          # NaN-safe: NaN never wins
+        best = PowerParams(
+            p_idle=jnp.where(better, cand2.p_idle[b2], best.p_idle),
+            p_max=jnp.where(better, cand2.p_max[b2], best.p_max),
+            r=jnp.where(better, cand2.r[b2], best.r))
+        best_mape = jnp.where(better, m2[b2], best_mape)
+
+    params = jax.tree.map(
+        lambda chosen, fallback: jnp.where(
+            any_finite, chosen, jnp.mean(jnp.asarray(fallback, jnp.float32))),
+        best, base)
+    return params, best_mape
+
+
 @dataclasses.dataclass(frozen=True)
 class CalibrationResult:
     params: PowerParams          # scalar best parameters

@@ -1,14 +1,19 @@
-"""The Orchestrator (paper §2.3, component C).
+"""The Orchestrator (paper §2.3, component C) — now a thin imperative shell.
 
-Central authority for the windowed twinning cycle: it owns the lock-step,
-synchronized schedule of windows of operation, feeds pre-processed telemetry
-into the simulation engine, runs the Self-Calibrator *pipelined* with the
-engine (C_k calibrates S_{k+1}, Fig. 3), records run metadata, and publishes
-predictions + proposals.
+All per-window math lives in the pure functional core
+(:mod:`repro.core.state`): a pytree :class:`~repro.core.state.TwinState`
+advanced by the jitted :func:`~repro.core.state.twin_step`.  This shell owns
+only what a pure function cannot: telemetry I/O (the
+:class:`~repro.core.telemetry.TelemetryStore`), wall-clock pacing
+(acceleration factor), run metadata (:class:`WindowRecord` — "which outputs
+belong together", §2.3), float64 sustainability bookkeeping, and the
+SLO-aware proposals routed through the human-in-the-loop gate.
 
-It deliberately does NOT manage its own resource allocation (paper §2.3's
-design choice): execution scheduling stays with the host runtime; the
-orchestrator validates the digital-twinning loop itself.
+The split is behavior-preserving: the shell reproduces the pre-redesign
+per-window MAPE, parameter stream and gCO2 records bit-for-bit (pinned by
+``tests/golden/orchestrator_pre_core.npz``), while the core it delegates to
+additionally composes with ``vmap`` (fleets of twins,
+``repro.core.twin.run_fleet``) and ``scan``.
 
 Acceleration factor (paper §2.3): ratio between simulated and wall time.
   * factor=1   — live twinning: the loop sleeps out each window's wall time.
@@ -21,14 +26,26 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.calibrate import CalibrationSpec, SelfCalibrator
-from repro.core.desim import Prediction, SimOutput, predict_metrics, simulate_utilization
+from repro.core.calibrate import CalibrationSpec
+from repro.core.desim import Prediction, SimOutput, simulate_utilization
 from repro.core.feedback import HITLGate, Proposal, propose_from_scenario, propose_from_state
 from repro.core.power import PowerParams, mape
 from repro.core.scenarios import Scenario, ScenarioSummary, evaluate_scenarios
+from repro.core.state import (
+    SimSlice,
+    TwinConfig,
+    TwinState,
+    empty_telemetry,
+    init_twin_state,
+    load_state,
+    make_telemetry,
+    save_state,
+    twin_step_jit,
+)
 from repro.traces.carbon import validate_carbon_intensity
 from repro.core.slo import NFR1, BiasTracker, SLOMonitor
 from repro.core.telemetry import (
@@ -54,7 +71,13 @@ class OrchestratorConfig:
 @dataclasses.dataclass
 class WindowRecord:
     """Run metadata the orchestrator records per window (paper §2.3:
-    'which outputs belong together')."""
+    'which outputs belong together').
+
+    ``sim_seconds`` times the whole fused ``twin_step`` (prediction *and*
+    calibration — they compile into one program since the pure-core
+    redesign); ``calib_seconds`` is kept for schema compatibility but is
+    always 0.0, as the fused program has no separable calibration phase.
+    """
 
     window: int
     started_at: float
@@ -72,8 +95,11 @@ class WhatIfResult:
     """Outcome of one batched what-if sweep.
 
     ``summaries[0]`` is the baseline (current topology) when the sweep was
-    run with ``include_baseline=True``; ``proposals`` are already submitted
-    to the orchestrator's HITL gate.
+    run with ``include_baseline=True``; with ``include_baseline=False`` the
+    summaries are the user's scenarios only (the baseline is still evaluated
+    internally so every candidate — including the first — is compared
+    against the *current* configuration, never against another candidate).
+    ``proposals`` are already submitted to the orchestrator's HITL gate.
     """
 
     summaries: list[ScenarioSummary]
@@ -88,6 +114,9 @@ class Orchestrator:
     The physical twin is abstracted as the TelemetryStore producer —
     experiments push synthesized ground truth; the live-training example
     pushes real measurements from the training run.
+
+    The windowed math is one ``twin_step`` per window on ``self.state``;
+    this object is the I/O shell around it.
     """
 
     def __init__(
@@ -116,14 +145,47 @@ class Orchestrator:
         self.carbon_intensity = carbon_intensity
         self.store = TelemetryStore(cfg.bins_per_window)
         self.gate = gate or HITLGate()
-        self.monitor = SLOMonitor([NFR1])
-        self.bias = BiasTracker()
         self.records: list[WindowRecord] = []
-        self.calibrator = SelfCalibrator(
-            cfg.calibration, base_params, backend=cfg.kernel_backend,
+        self.twin_cfg = TwinConfig(
+            bins_per_window=cfg.bins_per_window,
+            dc=dc,
+            calibration=cfg.calibration,
+            calibrate=cfg.calibrate,
             history_windows=cfg.history_windows,
+            power_model=cfg.power_model,
+            kernel_backend=cfg.kernel_backend,
+            slos=(NFR1,),
         )
+        self.state: TwinState = init_twin_state(self.twin_cfg, base_params)
         self._sim: SimOutput | None = None
+
+    # -- pure-core views ------------------------------------------------------
+    @property
+    def monitor(self) -> SLOMonitor:
+        """SLO compliance view, hydrated from the core's accumulators."""
+        return SLOMonitor.from_counts(
+            self.twin_cfg.slos, self.state.slo_samples,
+            self.state.slo_compliant)
+
+    @property
+    def bias(self) -> BiasTracker:
+        """Fig.-6 bias split, hydrated from the core's accumulators."""
+        return BiasTracker(under=int(self.state.bias_under),
+                           over=int(self.state.bias_over),
+                           ties=int(self.state.bias_ties))
+
+    def save_state(self, path: str) -> None:
+        """Checkpoint the twin core (see :func:`repro.core.state.save_state`)."""
+        save_state(self.state, path)
+
+    def restore_state(self, path: str) -> None:
+        """Resume from a checkpoint; the config must match this orchestrator."""
+        state = load_state(path)
+        if state.cfg != self.twin_cfg:
+            raise ValueError(
+                "checkpointed TwinConfig differs from this orchestrator's "
+                f"configuration:\n  saved: {state.cfg}\n  here:  {self.twin_cfg}")
+        self.state = state
 
     # -- simulation engine (component H) ------------------------------------
     def _ensure_sim(self) -> SimOutput:
@@ -156,30 +218,13 @@ class Orchestrator:
 
     # -- one window of operation --------------------------------------------
     def run_window(self, window: int) -> WindowRecord:
-        """Execute one window: predict (S_k) with params from C_{k-1},
-        then — when this window's telemetry has landed — calibrate (C_k)
-        for S_{k+1} and score the prediction."""
+        """Execute one window: gather its inputs, advance the pure core one
+        ``twin_step`` (predict S_k with params from C_{k-1}; score + calibrate
+        C_k when telemetry has landed), then do the shell work — records,
+        float64 carbon bookkeeping, proposals, pacing."""
         t_start = time.time()
         sim = self._ensure_sim()
         sl = self.window_slice(window)
-
-        # S_k: predict this window using the *pipelined* parameters.
-        params = (self.calibrator.params_for_next()
-                  if self.cfg.calibrate else self.base_params)
-        t0 = time.time()
-        ci_w = (self.carbon_intensity[sl]
-                if self.carbon_intensity is not None else None)
-        pred = predict_metrics(
-            sim.u_th[sl], params, self.dc, model=self.cfg.power_model,
-            carbon_intensity=ci_w,
-        )
-        pred.power_w.block_until_ready()
-        sim_seconds = time.time() - t0
-
-        rec = WindowRecord(
-            window=window, started_at=t_start, sim_seconds=sim_seconds,
-            calib_seconds=0.0, params=params, prediction=pred,
-        )
 
         # Telemetry for this window (produced asynchronously by the physical
         # twin; in-loop experiments ingest it before calling run_window).
@@ -188,34 +233,44 @@ class Orchestrator:
         # over the configured forecast (same precedence as power itself).
         ci_meas = (tw.extras.get(CARBON_INTENSITY_KEY)
                    if tw is not None else None)
-        if (ci_meas is not None
-                and np.asarray(ci_meas).shape[0]
-                != np.asarray(pred.energy_kwh).shape[0]):
+        if ci_meas is not None and np.asarray(ci_meas).shape[0] != (sl.stop - sl.start):
             ci_meas = None  # partially-clipped extras: fall back to forecast
         if ci_meas is not None:
             # same boundary rule as the forecast: a NaN/negative measured
             # intensity (sensor glitch) must fail loudly, not flip the sign
             # of the sustainability record.
             ci_meas = validate_carbon_intensity(np.asarray(ci_meas))
+
+        ci_w = (jnp.asarray(self.carbon_intensity[sl], jnp.float32)
+                if self.carbon_intensity is not None else None)
+        telem = (make_telemetry(tw.u_th, tw.power_w) if tw is not None
+                 else empty_telemetry(self.cfg.bins_per_window,
+                                      self.dc.num_hosts))
+
+        # All the math: one pure, jitted step on the twin core.
+        t0 = time.time()
+        self.state, out = twin_step_jit(
+            self.state, telem, SimSlice(u_th=sim.u_th[sl],
+                                        carbon_intensity=ci_w))
+        pred = out.prediction
+        pred.power_w.block_until_ready()
+        sim_seconds = time.time() - t0
+
+        rec = WindowRecord(
+            window=window, started_at=t_start, sim_seconds=sim_seconds,
+            calib_seconds=0.0, params=out.params_used, prediction=pred,
+        )
+
+        # float64 sustainability record (host-side reporting precision).
         if ci_meas is not None:
             rec.gco2 = float(np.sum(
                 np.asarray(pred.energy_kwh, np.float64)
                 * np.asarray(ci_meas, np.float64)))
         elif pred.gco2 is not None:
             rec.gco2 = float(np.sum(np.asarray(pred.gco2, np.float64)))
-        if tw is not None:
-            rec.mape = float(mape(jnp.asarray(tw.power_w, dtype=jnp.float32),
-                                  pred.power_w))
-            self.monitor.observe("mape", [rec.mape])
-            self.bias.observe(tw.power_w, np.asarray(pred.power_w))
 
-            # C_k: calibrate on observed history -> parameters for S_{k+1}.
-            # The calibrator assembles its own bounded history internally;
-            # only the newest window is fed in.
-            if self.cfg.calibrate:
-                t0 = time.time()
-                self.calibrator.observe(tw.u_th, tw.power_w)
-                rec.calib_seconds = time.time() - t0
+        if tw is not None:
+            rec.mape = float(out.mape)
 
             # SLO-aware proposals through the HITL gate.
             props = propose_from_state(
@@ -252,20 +307,27 @@ class Orchestrator:
 
         Uses the *calibrated* power parameters (the twin's current best model
         of reality) so what-if outcomes reflect the live datacenter, not the
-        spec sheet.  Candidates are compared against a baseline scenario (the
-        current topology and scheduler — worst-fit FCFS, no backfill —
-        prepended unless ``include_baseline=False`` and the first scenario is
-        already the baseline); each candidate that improves a sustainability
-        metric without breaking SLOs, cuts queue wait via a cheaper
-        *scheduler* (placement policy / backfill depth, a software-only
-        change), or violates its power cap becomes a proposal routed through
-        the HITL gate.
+        spec sheet.  A baseline scenario (the current topology and scheduler
+        — worst-fit FCFS, no backfill) is always evaluated alongside the
+        candidates and **every** user scenario is compared against it; each
+        candidate that improves a sustainability metric without breaking
+        SLOs, cuts queue wait via a cheaper *scheduler* (placement policy /
+        backfill depth, a software-only change), or violates its power cap
+        becomes a proposal routed through the HITL gate.
+
+        ``include_baseline`` only controls whether the baseline appears in
+        the returned ``summaries``/``sim``/``prediction`` (as entry 0) — it
+        never changes which scenarios generate proposals.  (Before this fix,
+        ``include_baseline=False`` silently treated the *first user scenario*
+        as the baseline and excluded it from proposal generation.)  Because
+        the baseline always rides along, an explicit ``max_hosts`` is raised
+        to at least the current topology's host count (the padded host axis
+        must fit the baseline; per-lane outputs are unaffected).
         """
-        params = (self.calibrator.params_for_next()
-                  if self.cfg.calibrate else self.base_params)
-        scs = list(scenarios)
-        if include_baseline:
-            scs = [Scenario(name="baseline")] + scs
+        params = self.state.params
+        scs = [Scenario(name="baseline")] + list(scenarios)
+        if max_hosts is not None:
+            max_hosts = max(int(max_hosts), self.dc.num_hosts)
         _, sim, pred, summaries = evaluate_scenarios(
             self.workload, self.dc, scs,
             t_bins=self.t_bins, base_params=params, max_hosts=max_hosts,
@@ -278,6 +340,10 @@ class Orchestrator:
         for s in summaries[1:]:
             for p in propose_from_scenario(window, s, baseline):
                 proposals.append(self.gate.submit(p))
+        if not include_baseline:
+            sim = jax.tree.map(lambda x: x[1:], sim)
+            pred = jax.tree.map(lambda x: x[1:], pred)
+            summaries = summaries[1:]
         return WhatIfResult(summaries=summaries, proposals=proposals,
                             sim=sim, prediction=pred)
 

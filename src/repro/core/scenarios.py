@@ -193,7 +193,9 @@ class ScenarioSet:
                                                         ``PLACEMENT_POLICIES``)
     ``backfill_depth``      ``[S]`` int32               successors that may
                                                         jump a blocked head
-    ``params``              leaves ``[S]`` float32      power-model params
+    ``params``              leaves ``[S, H]`` float32   per-host power-model
+                                                        params (rows constant
+                                                        for scalar bases)
     ``power_cap_w``         ``[S]`` float32             static cap, enforced
                                                         (+inf = uncapped)
     ``carbon_cap_base_w``   ``[S]`` float32             carbon-aware cap base
@@ -289,9 +291,34 @@ def _perturb(base: dict[str, np.ndarray | None],
     return out
 
 
-def _scalar(x) -> float:
-    """Collapse a scalar-or-per-host power parameter to one scalar."""
-    return float(np.mean(np.asarray(x)))
+def _per_host_params(base_params: PowerParams, scenarios, hosts,
+                     mh: int) -> PowerParams:
+    """Stack power params as ``[S, max_hosts]`` rows (per-host aware).
+
+    The base parameters may be scalars (one row value) or per-host vectors
+    from calibration against a heterogeneous fleet; scenario overrides are
+    scalars and replace the whole row.  Hosts beyond the base vector's
+    length (scaled-up topologies, padding) assume fleet-average hardware —
+    they are masked out of power/utilization unless the scenario activates
+    them.  Pre-redesign this collapsed everything to per-scenario scalar
+    means, silently flattening heterogeneous fleets on the what-if path
+    (ROADMAP item).
+    """
+    def rows(field: str) -> Array:
+        base_v = np.asarray(getattr(base_params, field),
+                            np.float32).reshape(-1)
+        base_row = np.full((mh,), float(base_v.mean()), np.float32)
+        base_row[:min(base_v.size, mh)] = base_v[:mh]
+        out = np.empty((len(scenarios), mh), np.float32)
+        for i, sc in enumerate(scenarios):
+            ov = getattr(sc, field)
+            out[i] = base_row if ov is None else np.float32(ov)
+        return jnp.asarray(out)
+
+    # PowerParams validates the [S, H] stacks elementwise: a scenario that
+    # overrides only p_max below the base p_idle (or vice versa) fails here.
+    return PowerParams(p_idle=rows("p_idle"), p_max=rows("p_max"),
+                       r=rows("r"))
 
 
 def build_scenario_set(
@@ -313,8 +340,10 @@ def build_scenario_set(
     the largest candidate host count — pass it explicitly to pin one
     compilation cache key across sweeps of different candidate mixes) and
     per-scenario activity is recorded in ``host_mask_s``; padded hosts never
-    receive jobs, contribute no utilization and draw no power.  Per-host
-    power parameters are collapsed to scalars on this path (see ROADMAP).
+    receive jobs, contribute no utilization and draw no power.  Power-model
+    parameters are carried as ``[S, max_hosts]`` per-host rows, so
+    heterogeneous fleets (per-host calibrated bases) survive the what-if
+    path; scalar scenario overrides replace a whole row.
     The static backfill window ``max_backfill`` is the max candidate depth,
     so depth-0 sweeps compile the backfill machinery out entirely.
 
@@ -356,12 +385,6 @@ def build_scenario_set(
             np.stack([p["deferrable"] for p in perturbed]))),
     )
 
-    def pick(field: str):
-        base = _scalar(getattr(base_params, field))
-        return jnp.asarray(
-            [getattr(sc, field) if getattr(sc, field) is not None else base
-             for sc in scenarios], jnp.float32)
-
     hosts_a = jnp.asarray(hosts, jnp.int32)
     cores_a = jnp.asarray(cores, jnp.int32)
     depths = [max(int(sc.backfill_depth), 0) for sc in scenarios]
@@ -389,10 +412,7 @@ def build_scenario_set(
         policy_id=jnp.asarray([resolve_policy(sc.policy) for sc in scenarios],
                               jnp.int32),
         backfill_depth=jnp.asarray(depths, jnp.int32),
-        # PowerParams validates the [S] stacks: a scenario that overrides
-        # only p_max below the base p_idle (or vice versa) fails here.
-        params=PowerParams(p_idle=pick("p_idle"), p_max=pick("p_max"),
-                           r=pick("r")),
+        params=_per_host_params(base_params, scenarios, hosts, mh),
         power_cap_w=cap,
         carbon_cap_base_w=carbon_base,
         carbon_cap_slope=carbon_slope,
@@ -426,8 +446,8 @@ def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
     demand = datacenter_power(u_th, params, model=model, online_mask=maskf)
     exceeded = demand > cap_t
     power = jnp.minimum(demand, cap_t)
-    # scalar per-scenario params on this path (see ROADMAP per-host item)
-    idle_floor = jnp.asarray(params.p_idle, u_th.dtype) * jnp.sum(maskf)
+    # params are per-host [H] rows; the idle floor is the active hosts' sum
+    idle_floor = jnp.sum(jnp.asarray(params.p_idle, u_th.dtype) * maskf)
     throttle = jnp.clip(
         (cap_t - idle_floor) / jnp.maximum(demand - idle_floor, 1e-9),
         0.0, 1.0)
@@ -443,9 +463,7 @@ def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
                       power_demand_w=demand)
 
 
-@functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
-                                             "max_starts_per_bin", "model"))
-def _run_scenarios_jit(
+def _scenario_lanes(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
     *,
@@ -453,12 +471,16 @@ def _run_scenarios_jit(
     t_bins: int,
     max_starts_per_bin: int,
     model: str,
+    chunk: bool,
 ) -> tuple[SimOutput, Prediction]:
-    # the DES core's own readout bound is per-scenario; under the scenario
-    # vmap every intermediate gains the S axis, so the bound must include S
-    # (workload leaves are [S, J]: take J from the trailing axis).
-    n_jobs = int(ss.workload.submit_bin.shape[-1])
-    chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
+    """vmap of the per-lane DES + prediction — the shared trace-level body.
+
+    Both execution paths run exactly this: the single-device path vmaps it
+    over the full S axis, the sharded path runs it per device over the local
+    S shard (``chunk`` is resolved from the *global* batch in both cases, so
+    every lane compiles the same readout program and the two paths agree bit
+    for bit).
+    """
 
     def one(w, mask, cores, policy_id, backfill_depth, params,
             cap_w, carbon_base, carbon_slope, peak):
@@ -490,6 +512,91 @@ def _run_scenarios_jit(
                          ss.carbon_cap_slope, ss.peak_tflops)
 
 
+@functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
+                                             "max_starts_per_bin", "model"))
+def _run_scenarios_jit(
+    ss: ScenarioSet,
+    carbon_intensity: Array | None,
+    *,
+    max_hosts: int,
+    t_bins: int,
+    max_starts_per_bin: int,
+    model: str,
+) -> tuple[SimOutput, Prediction]:
+    # the DES core's own readout bound is per-scenario; under the scenario
+    # vmap every intermediate gains the S axis, so the bound must include S
+    # (workload leaves are [S, J]: take J from the trailing axis).
+    n_jobs = int(ss.workload.submit_bin.shape[-1])
+    chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
+    return _scenario_lanes(
+        ss, carbon_intensity, max_hosts=max_hosts, t_bins=t_bins,
+        max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
+
+
+#: mesh axis name the scenario batch is sharded over
+SCENARIO_AXIS = "scenarios"
+
+
+def scenario_mesh(num_devices: int | None = None):
+    """A 1-D device mesh over ``SCENARIO_AXIS`` (default: all local devices).
+
+    On CPU-only deployments, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* process
+    start to split the host into N devices (the ``tier1-multidevice`` CI job
+    runs the equivalence suite exactly that way).
+    """
+    from repro.parallel.sharding import make_mesh_compat
+
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    return make_mesh_compat((n,), (SCENARIO_AXIS,),
+                            devices=np.array(jax.devices()[:n]))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "max_hosts", "t_bins",
+                                             "max_starts_per_bin", "model",
+                                             "chunk"))
+def _run_scenarios_sharded_jit(
+    ss: ScenarioSet,
+    carbon_intensity: Array | None,
+    *,
+    mesh,
+    max_hosts: int,
+    t_bins: int,
+    max_starts_per_bin: int,
+    model: str,
+    chunk: bool,
+) -> tuple[SimOutput, Prediction]:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(ss_local: ScenarioSet, ci_local: Array | None):
+        return _scenario_lanes(
+            ss_local, ci_local, max_hosts=max_hosts, t_bins=t_bins,
+            max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(SCENARIO_AXIS), P()),      # S-axis sharded; trace replicated
+        out_specs=P(SCENARIO_AXIS),
+        check_rep=False,
+    )(ss, carbon_intensity)
+
+
+def _pad_scenario_axis(ss: ScenarioSet, pad: int) -> ScenarioSet:
+    """Pad the S axis by replicating lane 0 (masked off by the caller).
+
+    Mirrors the host-axis padding story: the padded lanes are real
+    (scenario-0 copies) so every device runs a full shard, and the caller
+    slices the outputs back to the true S.
+    """
+    if pad == 0:
+        return ss
+    padded = jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.repeat(x[:1], pad, axis=0)], axis=0), ss)
+    return dataclasses.replace(padded, names=ss.names + ("",) * pad)
+
+
 def run_scenarios(
     ss: ScenarioSet,
     *,
@@ -498,6 +605,8 @@ def run_scenarios(
     max_starts_per_bin: int = 64,
     model: str = "opendc",
     carbon_intensity: "Array | np.ndarray | None" = None,
+    shard: bool = False,
+    mesh=None,
 ) -> tuple[SimOutput, Prediction]:
     """Simulate + predict all S scenarios in one jitted program.
 
@@ -524,6 +633,17 @@ def run_scenarios(
     Scenario *names* are pytree aux data (part of the jit cache key), so
     they are anonymized before entering jit — differently-named sweeps of
     the same shape share one compilation.
+
+    **Scenario-axis sharding**: with ``shard=True`` the S axis is
+    ``shard_map``-ped over the devices of ``mesh`` (default: a 1-D
+    :func:`scenario_mesh` over all local devices) — each device runs the
+    *same* per-lane program over its local shard, so 100s-of-candidate
+    sweeps scale across cores/chips while staying **bit-for-bit identical**
+    to the single-device vmap path (pinned by
+    ``tests/test_shard_scenarios.py``; speedup recorded by
+    ``benchmarks/whatif_batch.py``).  S is padded to a multiple of the
+    device count with masked scenario-0 replicas and the outputs are sliced
+    back to the true S, mirroring the host-axis padding story.
     """
     if carbon_intensity is None:
         if np.isfinite(np.asarray(ss.carbon_cap_base_w)).any():
@@ -536,11 +656,32 @@ def run_scenarios(
         ci = jnp.asarray(
             validate_carbon_intensity(np.asarray(carbon_intensity), t_bins),
             jnp.float32)
-    anon = dataclasses.replace(ss, names=("",) * ss.num_scenarios)
-    return _run_scenarios_jit(
-        anon, ci, max_hosts=max_hosts, t_bins=t_bins,
-        max_starts_per_bin=max_starts_per_bin, model=model,
+    s = ss.num_scenarios
+    anon = dataclasses.replace(ss, names=("",) * s)
+    if not shard:
+        return _run_scenarios_jit(
+            anon, ci, max_hosts=max_hosts, t_bins=t_bins,
+            max_starts_per_bin=max_starts_per_bin, model=model,
+        )
+    mesh = scenario_mesh() if mesh is None else mesh
+    n_dev = mesh.shape[SCENARIO_AXIS]
+    per_dev = -(-s // n_dev)
+    if n_dev > 1:
+        # keep >= 2 lanes per device: a batch-1 vmapped while_loop inside
+        # shard_map trips an XLA sharding-propagation bug on jax 0.4.x
+        # ("tile_assignment should have N devices" on the backfill skip-mask
+        # iota) — one extra masked replica lane per device sidesteps it.
+        per_dev = max(per_dev, 2)
+    padded = _pad_scenario_axis(anon, per_dev * n_dev - s)
+    # readout chunking is resolved from the *global* (unpadded) batch so the
+    # per-lane program matches the vmap path's exactly (bit-for-bit gate).
+    n_jobs = int(ss.workload.submit_bin.shape[-1])
+    chunk = s * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
+    out = _run_scenarios_sharded_jit(
+        padded, ci, mesh=mesh, max_hosts=max_hosts, t_bins=t_bins,
+        max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk,
     )
+    return jax.tree.map(lambda x: x[:s], out)
 
 
 # surfaced for the single-compilation regression test; `_cache_size` is
@@ -690,6 +831,8 @@ def evaluate_scenarios(
     model: str = "opendc",
     max_starts_per_bin: int = 64,
     carbon_intensity: "Array | np.ndarray | None" = None,
+    shard: bool = False,
+    mesh=None,
 ) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
     """End-to-end what-if sweep: build, batch-simulate, summarize.
 
@@ -710,7 +853,7 @@ def evaluate_scenarios(
     sim, pred = run_scenarios(
         ss, max_hosts=ss.max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model,
-        carbon_intensity=carbon_intensity,
+        carbon_intensity=carbon_intensity, shard=shard, mesh=mesh,
     )
     return ss, sim, pred, summarize_scenarios(
         ss, sim, pred, carbon_intensity=carbon_intensity)

@@ -3,12 +3,23 @@
 NFR1 (paper §2.1): prediction error (MAPE) must stay below 10 % for at least
 90 % of the operational time.  The monitor tracks the per-window MAPE stream
 and the under/over-estimation bias the paper analyses in Fig. 6.
+
+Two styles live here:
+
+  * the *imperative* monitors (:class:`SLOMonitor`, :class:`BiasTracker`) —
+    host-side streaming objects for interactive use;
+  * the *functional* accumulators (:func:`observe_slos`,
+    :func:`observe_bias`) — pure jnp update rules over integer count arrays,
+    used by the pure twin core (``repro.core.state.twin_step``) so the whole
+    windowed cycle stays jit/vmap-able.  The imperative classes hydrate from
+    those counts (:meth:`SLOMonitor.from_counts`) for reporting.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -51,12 +62,71 @@ class SLOReport:
         return self.compliance >= self.slo.min_compliance
 
 
+def slo_holds(slo: SLO, value):
+    """Traced compliance check: does ``value`` satisfy the SLO's comparison?
+
+    Pure jnp (the comparison operator is static, the value may be a tracer);
+    NaN values never comply, matching the host-side :meth:`SLO.holds` where
+    every comparison against NaN is False.
+    """
+    return {
+        "lt": lambda v: v < slo.threshold,
+        "le": lambda v: v <= slo.threshold,
+        "gt": lambda v: v > slo.threshold,
+        "ge": lambda v: v >= slo.threshold,
+    }[slo.comparison](value)
+
+
+def observe_slos(slos: tuple[SLO, ...], samples, compliant, value, valid,
+                 metric: str = "mape"):
+    """One functional SLO-accumulator update over a shared metric stream.
+
+    ``samples``/``compliant`` are ``[len(slos)]`` int32 arrays; ``value`` is
+    an observation of ``metric`` (scalar, may be NaN) and ``valid`` a bool
+    scalar masking the whole update (no telemetry -> no observation).  Like
+    the imperative :meth:`SLOMonitor.observe`, only SLOs defined over
+    ``metric`` are updated — the rest keep their counts (and read as
+    unobserved in reports).  Returns the updated ``(samples, compliant)``
+    pair; pure, so `jit`/`vmap` compose.
+    """
+    if not slos:
+        return samples, compliant
+    inc = jnp.asarray(valid, jnp.int32)
+    on = jnp.asarray([s.metric == metric for s in slos], jnp.int32)
+    holds = jnp.stack([jnp.asarray(slo_holds(s, value), jnp.int32)
+                       for s in slos])
+    return samples + inc * on, compliant + holds * inc * on
+
+
+def observe_bias(under, over, ties, real, sim, valid):
+    """Functional :class:`BiasTracker` update (pure jnp).
+
+    Counts the directional split of ``sim`` vs ``real`` over a window and
+    adds it to the running int32 scalars when ``valid``; exact ties stay a
+    separate bucket (same semantics as the imperative tracker).
+    """
+    inc = jnp.asarray(valid, jnp.int32)
+    return (under + inc * jnp.sum(sim < real).astype(jnp.int32),
+            over + inc * jnp.sum(sim > real).astype(jnp.int32),
+            ties + inc * jnp.sum(sim == real).astype(jnp.int32))
+
+
 class SLOMonitor:
     """Streams per-sample metric values against a set of SLOs."""
 
     def __init__(self, slos: list[SLO]):
         self.slos = slos
         self._counts = {s.name: [0, 0] for s in slos}  # [samples, compliant]
+
+    @classmethod
+    def from_counts(cls, slos: "list[SLO] | tuple[SLO, ...]",
+                    samples, compliant) -> "SLOMonitor":
+        """Hydrate a monitor from the pure core's accumulator arrays."""
+        mon = cls(list(slos))
+        for i, s in enumerate(mon.slos):
+            mon._counts[s.name] = [int(np.asarray(samples)[i]),
+                                   int(np.asarray(compliant)[i])]
+        return mon
 
     def observe(self, metric: str, values: np.ndarray | list[float]) -> None:
         arr = np.atleast_1d(np.asarray(values, np.float64))

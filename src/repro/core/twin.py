@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Iterator
 
+import jax
 import numpy as np
 
 from repro.core.desim import simulate_utilization
@@ -24,6 +25,7 @@ from repro.core.feedback import HITLGate, Proposal
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig, WindowRecord
 from repro.core.power import PowerParams
 from repro.core.slo import SLOReport
+from repro.core.state import TwinState, WindowOutput, twin_step
 from repro.core.telemetry import TelemetryWindow, clip_to_window
 
 # NOTE: repro.traces.* is imported lazily inside functions — traces depends on
@@ -99,6 +101,74 @@ class DigitalTwin:
             under_estimation_fraction=orch.bias.under_fraction,
             approved_proposals=approved,
         )
+
+
+# -- fleet twinning: vmap(twin_step) over independent datacenters -------------
+
+def stack_twin_states(states: "list[TwinState] | tuple[TwinState, ...]") -> TwinState:
+    """Stack D independent twins into one batched ``TwinState`` ``[D, ...]``.
+
+    Every state must share the same :class:`~repro.core.state.TwinConfig`
+    (the config is pytree aux data, so mismatched configs fail loudly at
+    stack time) and the same array shapes — i.e. the fleet twins datacenters
+    of one padded size per compiled program, like the scenario engine's
+    ``max_hosts`` axis.
+    """
+    if not states:
+        raise ValueError("need at least one TwinState to stack")
+    cfg = states[0].cfg
+    for s in states[1:]:
+        if s.cfg != cfg:
+            raise ValueError(
+                "fleet states must share one TwinConfig (got differing "
+                f"configs:\n  {cfg}\n  {s.cfg})")
+    return jax.tree.map(lambda *xs: jax.numpy.stack(xs, axis=0), *states)
+
+
+def index_twin_state(fleet: TwinState, i: int) -> TwinState:
+    """Extract one twin's state from a batched fleet state."""
+    return jax.tree.map(lambda x: x[i], fleet)
+
+
+#: one fused program that twins D datacenters for one window: every leaf of
+#: the three inputs leads with the fleet axis [D, ...].
+fleet_step = jax.jit(jax.vmap(twin_step))
+
+
+def _run_fleet(fleet: TwinState, telemetry, sim_slices):
+    def body(state, inputs):
+        telem, sl = inputs
+        return jax.vmap(twin_step)(state, telem, sl)
+
+    return jax.lax.scan(body, fleet, (telemetry, sim_slices))
+
+
+_run_fleet_jit = jax.jit(_run_fleet)
+
+
+def run_fleet(fleet: TwinState, telemetry, sim_slices
+              ) -> tuple[TwinState, WindowOutput]:
+    """Twin a whole fleet over a whole horizon in ONE compiled program.
+
+    ``fleet`` is a batched :class:`~repro.core.state.TwinState` (see
+    :func:`stack_twin_states`); ``telemetry`` / ``sim_slices`` are
+    :class:`~repro.core.state.TelemetrySlice` /
+    :class:`~repro.core.state.SimSlice` pytrees whose array leaves lead with
+    ``[W, D, ...]`` (windows, datacenters).  Runs ``lax.scan`` over the
+    window axis of ``vmap(twin_step)`` over the fleet axis, so D datacenters
+    x W windows — prediction, scoring, SLO/bias accumulation and grid-search
+    calibration — compile once and execute as a single fused program.
+
+    Returns the final fleet state and the per-window outputs stacked
+    ``[W, D, ...]``.  Each lane is the exact computation :func:`twin_step`
+    performs solo (pinned by ``tests/test_twin_core.py``).
+    """
+    return _run_fleet_jit(fleet, telemetry, sim_slices)
+
+
+# surfaced for the single-compilation regression test; `_cache_size` is
+# private jax API, so its absence must degrade to None, not an import error
+run_fleet._cache_size = getattr(_run_fleet_jit, "_cache_size", None)
 
 
 def run_surf_experiment(

