@@ -25,6 +25,13 @@ single-device vmap and asserts bit-for-bit equality (multi-device runtimes
 only — on CPU export ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
 before launch).
 
+A fifth case runs the *scenario optimizer* (``repro.core.optimize``): a
+multi-generation search over (structures x carbon caps x time shifts) whose
+fixed-shape candidate batches must all ride ONE compiled evaluator —
+**asserted**: exactly 1 compile for the whole search, and 0 further
+compiles for a second search after warmup.  Reports candidates/sec and the
+objective reached vs an exhaustive grid of equal candidate budget.
+
     PYTHONPATH=src python benchmarks/whatif_batch.py
 """
 
@@ -37,6 +44,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.desim import PLACEMENT_POLICIES, simulate, simulate_utilization_masked
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+    score_batch,
+)
 from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
 from repro.traces.carbon import make_diurnal_carbon
 from repro.traces.schema import DatacenterConfig, host_mask
@@ -206,6 +220,89 @@ def run_carbon_grid(days: float = 1.0) -> dict:
     }
 
 
+def run_optimizer(days: float = 0.5) -> dict:
+    """Scenario optimizer vs an exhaustive grid at equal candidate budget.
+
+    The acceptance gates, **asserted** (when jax exposes its jit cache):
+
+      * the whole multi-generation search — init batches plus every
+        refinement generation — compiles the evaluator exactly once;
+      * a second search after warmup adds zero compiles ("<= 1 compile
+        after warmup").
+
+    Reported: fresh-candidates/sec for the warm search (reserved
+    baseline/incumbent lanes excluded from the count — they are evaluator
+    work, not search budget), the same for an exhaustive grid holding
+    **exactly the same number of candidates** (evaluated the way an
+    operator would: one big batch, its own compile), and the best
+    objective each reaches.
+    """
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    intensity = make_diurnal_carbon(t_bins)
+    space = SearchSpace(
+        structures=(Scenario(name="wf"),
+                    Scenario(name="bf", policy="best_fit", backfill_depth=8),
+                    Scenario(name="h200", num_hosts=200)),
+        carbon_cap_base_w=(30_000.0, 80_000.0),
+        carbon_cap_slope=(-80.0, 0.0),
+        shift_bins=(0, 72))
+    objective = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.5, w_unplaced=50.0,
+                              w_throttled=0.1)
+    # 8 fresh lanes/batch x (1 init + 2 refinement) = 24 fresh candidates —
+    # exactly the size of the levels-2 exhaustive grid below (equal budget)
+    cfg = OptimizerConfig(batch_size=10, generations=2, init="random")
+    kw = dict(t_bins=t_bins, carbon_intensity=intensity, key=0, config=cfg)
+
+    jax.clear_caches()
+    cache = run_scenarios._cache_size
+    t0 = time.time()
+    res = optimize(w, dc, space, objective, **kw)
+    cold_s = time.time() - t0
+    compiles = cache() if cache is not None else None
+    t0 = time.time()
+    res = optimize(w, dc, space, objective, **kw)
+    warm_s = time.time() - t0
+    compiles_after = cache() if cache is not None else None
+    if compiles is not None:
+        # the acceptance gate: all generations ride ONE compiled program,
+        # and a repeated search after warmup never recompiles.
+        assert compiles == 1, f"optimizer compiled {compiles}x, want 1"
+        assert compiles_after == compiles, "warm optimizer search retraced"
+
+    # exhaustive grid at (as near as the axes allow) equal budget, evaluated
+    # the way an operator would: one batch, scored once.
+    levels = 2
+    grid = space.grid(levels)           # 3 structures x 2^3 levels = 24
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, grid, max_hosts=space.max_hosts(dc),
+                            max_backfill=space.max_backfill())
+    sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=t_bins,
+                              carbon_intensity=intensity)
+    grid_obj = score_batch(objective, ss, sim, pred,
+                           t_bins=t_bins)["objective"]
+    grid_s = time.time() - t0
+    assert res.candidates == len(grid), "budgets drifted; fix cfg or levels"
+
+    return {
+        "t_bins": t_bins,
+        "candidates": res.candidates,
+        "evaluations": res.evaluations,
+        "batches": res.batches,
+        "compiles": compiles,
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "cand_per_s_warm": res.candidates / warm_s,
+        "best_objective": res.best.objective,
+        "baseline_objective": res.baseline.objective,
+        "grid_candidates": len(grid),
+        "grid_s": grid_s,
+        "grid_cand_per_s": len(grid) / grid_s,
+        "grid_best_objective": float(grid_obj.min()),
+    }
+
+
 def run_sharded(days: float = 1.0, num_scenarios: int = 16) -> dict | None:
     """Scenario-axis sharding: shard_map over S vs the single-device vmap.
 
@@ -289,6 +386,22 @@ def main() -> None:
               "asserted incl. re-parameterization)")
     print(f"  per-scenario gCO2 spread: {c['gco2_min_kg']:.1f} - "
           f"{c['gco2_max_kg']:.1f} kgCO2")
+
+    o = run_optimizer()
+    print(f"\nscenario optimizer: {o['candidates']} fresh candidates "
+          f"({o['evaluations']} lanes incl. baseline/incumbent) over "
+          f"{o['batches']} fixed-shape batches, {o['t_bins']} bins")
+    if o["compiles"] is not None:
+        print(f"  compiled programs: {o['compiles']} (PASS: single compile "
+              "across all generations, asserted incl. a warm re-search)")
+    print(f"  search, cold: {o['cold_s']:6.2f} s   warm: {o['warm_s']:6.2f} s"
+          f" -> {o['cand_per_s_warm']:.1f} candidates/s")
+    print(f"  exhaustive grid at equal budget ({o['grid_candidates']} "
+          f"candidates, own compile): {o['grid_s']:6.2f} s -> "
+          f"{o['grid_cand_per_s']:.1f} candidates/s")
+    print(f"  objective: searched {o['best_objective']:.2f} vs grid best "
+          f"{o['grid_best_objective']:.2f} vs baseline "
+          f"{o['baseline_objective']:.2f}")
 
     s = run_sharded()
     if s is None:

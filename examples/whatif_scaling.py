@@ -25,12 +25,24 @@ grid is one jitted ``vmap`` — one compilation instead of one per candidate
 which scheduler won on mean queue wait, and which carbon knob bought the
 largest gCO2 cut and at what performance price.
 
+The swept grid answers "which of *these* candidates is best"; the closing
+section lets the **scenario optimizer** (``repro.core.optimize``) *search*
+the same knob space — continuous carbon-cap base/slope, integer time
+shifts, discrete schedulers — and prints the operating point it found next
+to the grid's best, under one scalarized objective.
+
     PYTHONPATH=src python examples/whatif_scaling.py
 """
 
 import math
 
 from repro.core.desim import PLACEMENT_POLICIES
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+)
 from repro.core.scenarios import Scenario, evaluate_scenarios
 from repro.traces.carbon import make_diurnal_carbon
 from repro.traces.schema import DatacenterConfig
@@ -106,11 +118,48 @@ def main() -> None:
               f"{s.unplaced_jobs - baseline.unplaced_jobs:+d} unplaced, "
               f"{s.cap_exceeded_bins} cap-limited bins")
 
+    # -- the optimizer searches what the grid only samples -------------------
+    objective = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.5, w_unplaced=50.0,
+                              w_throttled=0.1)
+    space = SearchSpace(
+        structures=tuple(
+            Scenario(name=p, policy=p,
+                     backfill_depth=0 if p == "worst_fit" else 8)
+            for p in policies),
+        carbon_cap_base_w=(35_000.0, 80_000.0),
+        carbon_cap_slope=(-80.0, 0.0),
+        shift_bins=(0, 72))
+    res = optimize(workload, base, space, objective, t_bins=t_bins,
+                   carbon_intensity=intensity, key=0,
+                   config=OptimizerConfig(batch_size=16, generations=3))
+    # the grid's best under the same objective (carbon candidates only have
+    # comparable knobs; weight the same terms the optimizer minimized)
+    def grid_score(s):
+        return (s.gco2 / 1e3 + 0.5 * max(s.mean_wait_bins, 0.0)
+                + 50.0 * s.unplaced_jobs + 0.1 * s.cap_exceeded_bins)
+    grid_win = min((s for s in summaries
+                    if math.isfinite(s.mean_wait_bins)), key=grid_score)
+    b = res.best_summary
+    print(f"\nsearched optimum (objective: gCO2 + 0.5*wait + 50*unplaced "
+          f"+ 0.1*throttled bins; {res.candidates} candidates, "
+          f"{res.batches} single-compile batches):")
+    print(f"  swept grid best : {grid_win.name:>14s}  "
+          f"score {grid_score(grid_win):9.1f}  "
+          f"({grid_win.gco2/1e3:.1f} kgCO2, wait "
+          f"{grid_win.mean_wait_bins:.2f})")
+    cap = ("none" if b.carbon_cap_base_w is None else
+           f"{b.carbon_cap_base_w/1e3:.1f}kW{b.carbon_cap_slope:+.0f}")
+    print(f"  searched optimum: {b.policy}/bf={b.backfill_depth} "
+          f"cap={cap} shift={b.shift_bins}  "
+          f"objective {res.best.objective:9.1f}  "
+          f"({b.gco2/1e3:.1f} kgCO2, wait {b.mean_wait_bins:.2f}) "
+          f"vs baseline {res.baseline.objective:.1f}")
+
     print("\nReading: fewer hosts -> higher utilization and queueing but "
           "less idle energy;\npacking policies + backfill trade spread for "
           "wait time; carbon caps and time\nshifts buy gCO2 with wait-time "
-          "currency — the twin prices the trade before\nany hardware moves "
-          "(HITL decides).")
+          "currency — the optimizer *searches* that\ntrade-space and the "
+          "twin prices it before any hardware moves (HITL decides).")
 
 
 if __name__ == "__main__":

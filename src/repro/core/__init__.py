@@ -23,10 +23,21 @@ from repro.core.feedback import (
     HITLGate,
     Proposal,
     ProposalKind,
+    propose_from_optimum,
     propose_from_scenario,
     propose_from_state,
 )
+from repro.core.optimize import (
+    Candidate,
+    ObjectiveSpec,
+    OptimizeResult,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+    score_batch,
+)
 from repro.core.orchestrator import (
+    OptimizeWhatIfResult,
     Orchestrator,
     OrchestratorConfig,
     WhatIfResult,
@@ -92,7 +103,10 @@ __all__ = [
     "Prediction", "SimOutput", "predict_metrics", "simulate",
     "simulate_utilization",
     "HITLGate", "Proposal", "ProposalKind",
-    "propose_from_scenario", "propose_from_state",
+    "propose_from_optimum", "propose_from_scenario", "propose_from_state",
+    "Candidate", "ObjectiveSpec", "OptimizeResult", "OptimizerConfig",
+    "SearchSpace", "optimize", "score_batch",
+    "OptimizeWhatIfResult",
     "Orchestrator", "OrchestratorConfig", "WhatIfResult", "WindowRecord",
     "SCENARIO_AXIS", "Scenario", "ScenarioSet", "ScenarioSummary",
     "build_scenario_set", "evaluate_scenarios", "run_scenarios",

@@ -252,3 +252,76 @@ def propose_from_scenario(
                     "peak_power_w": summary.peak_power_w,
                     "peak_demand_w": summary.peak_demand_w}))
     return out
+
+
+def propose_from_optimum(
+    window: int,
+    summary: "ScenarioSummary",
+    baseline: "ScenarioSummary",
+    *,
+    objective: float,
+    baseline_objective: float,
+    breakdown: dict,
+    baseline_breakdown: dict,
+    **thresholds,
+) -> list[Proposal]:
+    """Route a *searched* operating point through the proposal rules.
+
+    The scenario optimizer (:mod:`repro.core.optimize`) hands the winning
+    candidate here with its scalarized objective breakdown; every proposal
+    the ordinary what-if rules emit for it
+    (:func:`propose_from_scenario`, ``thresholds`` forwarded) gains the
+    search provenance an approver needs: the winner's objective vs the
+    baseline's and the per-term breakdown (gCO2, energy, SLO penalties).
+
+    When the searched optimum improves the objective but trips none of the
+    threshold-based rules (savings below the per-metric thresholds, or
+    spread across several metrics), a CARBON_REDUCTION proposal is emitted
+    anyway — the whole point of searching is that the optimizer may land on
+    an operating point no single-metric rule would have flagged.  A winner
+    identical to the baseline configuration proposes nothing.
+    """
+    out = propose_from_scenario(window, summary, baseline, **thresholds)
+    improved = (math.isfinite(objective)
+                and objective < baseline_objective)
+    same_config = (
+        summary.num_hosts == baseline.num_hosts
+        and summary.cores_per_host == baseline.cores_per_host
+        and summary.policy == baseline.policy
+        and summary.backfill_depth == baseline.backfill_depth
+        and summary.shift_bins == baseline.shift_bins
+        and summary.power_cap_w == baseline.power_cap_w
+        and summary.carbon_cap_base_w == baseline.carbon_cap_base_w
+        and summary.carbon_cap_slope == baseline.carbon_cap_slope)
+    if not out and improved and not same_config:
+        knobs = []
+        if summary.policy != baseline.policy or \
+                summary.backfill_depth != baseline.backfill_depth:
+            knobs.append(f"scheduler {summary.policy}"
+                         f"/backfill={summary.backfill_depth}")
+        if summary.num_hosts != baseline.num_hosts:
+            knobs.append(f"{summary.num_hosts} hosts")
+        if summary.cores_per_host != baseline.cores_per_host:
+            knobs.append(f"{summary.cores_per_host} cores/host")
+        if summary.shift_bins != baseline.shift_bins:
+            knobs.append(f"shift deferrable jobs by {summary.shift_bins} bins")
+        if summary.power_cap_w is not None:
+            knobs.append(f"cap {summary.power_cap_w/1e3:.1f} kW")
+        if summary.carbon_cap_base_w is not None:
+            knobs.append(
+                f"carbon-aware cap {summary.carbon_cap_base_w/1e3:.1f} kW "
+                f"{summary.carbon_cap_slope:+.1f} W/(gCO2/kWh)")
+        out.append(Proposal(
+            ProposalKind.CARBON_REDUCTION, window,
+            f"searched optimum '{summary.name}': "
+            f"{', '.join(knobs) or 'candidate'} "
+            f"improves the operating objective to {objective:.3f} "
+            f"(vs baseline {baseline_objective:.3f})",
+            impact={"scenario": summary.name}))
+    for p in out:
+        p.impact["objective"] = objective
+        p.impact["objective_baseline"] = baseline_objective
+        p.impact["objective_breakdown"] = dict(breakdown)
+        p.impact["objective_breakdown_baseline"] = dict(baseline_breakdown)
+        p.impact["searched_optimum"] = summary.name
+    return out

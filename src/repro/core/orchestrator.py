@@ -31,8 +31,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.calibrate import CalibrationSpec
-from repro.core.desim import Prediction, SimOutput, simulate_utilization
-from repro.core.feedback import HITLGate, Proposal, propose_from_scenario, propose_from_state
+from repro.core.desim import PLACEMENT_POLICIES, Prediction, SimOutput, simulate_utilization
+from repro.core.feedback import (
+    HITLGate,
+    Proposal,
+    propose_from_optimum,
+    propose_from_scenario,
+    propose_from_state,
+)
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizeResult,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+)
 from repro.core.power import PowerParams, mape
 from repro.core.scenarios import Scenario, ScenarioSummary, evaluate_scenarios
 from repro.core.state import (
@@ -106,6 +119,21 @@ class WhatIfResult:
     proposals: list[Proposal]
     sim: SimOutput              # batched, leaves [S, ...]
     prediction: Prediction      # batched, leaves [S, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizeWhatIfResult:
+    """Outcome of one searched what-if: the optimum plus its HITL routing.
+
+    ``result`` is the raw :class:`~repro.core.optimize.OptimizeResult`
+    (incumbent, baseline, full evaluation history, convergence trace);
+    ``proposals`` are already submitted to the orchestrator's HITL gate and
+    carry the searched optimum's objective breakdown vs the baseline in
+    their ``impact``.
+    """
+
+    result: OptimizeResult
+    proposals: list[Proposal]
 
 
 class Orchestrator:
@@ -346,6 +374,70 @@ class Orchestrator:
             summaries = summaries[1:]
         return WhatIfResult(summaries=summaries, proposals=proposals,
                             sim=sim, prediction=pred)
+
+    # -- searched what-if: optimize over the scenario space ------------------
+    def default_search_space(self) -> SearchSpace:
+        """A conservative software-only search space for the current twin.
+
+        Structures: the current topology under every placement policy (the
+        non-default policies get a backfill window — a pure scheduler
+        change); continuous axes: deferrable-job time-shifting up to 3 hours.
+        Cap axes stay off by default — capping trades performance for watts
+        and deserves an explicitly chosen range (pass a custom
+        :class:`~repro.core.optimize.SearchSpace` to search them).
+        """
+        structures = tuple(
+            Scenario(name=p, policy=p,
+                     backfill_depth=0 if p == "worst_fit" else 4)
+            for p in sorted(PLACEMENT_POLICIES))
+        return SearchSpace(structures=structures, shift_bins=(0, 36))
+
+    def optimize_whatif(
+        self,
+        space: SearchSpace | None = None,
+        objective: ObjectiveSpec | None = None,
+        *,
+        key: "int | jax.Array" = 0,
+        config: OptimizerConfig = OptimizerConfig(),
+        shard: bool = False,
+        mesh=None,
+    ) -> OptimizeWhatIfResult:
+        """Search the scenario space and route the optimum through the gate.
+
+        Where :meth:`evaluate_whatif` scores a hand-written candidate list,
+        this *finds* the operating point: the search space defaults to
+        :meth:`default_search_space` and is evaluated against the twin's
+        **current calibrated** power parameters (``self.state.params``) and
+        carbon forecast, so the optimum reflects the live datacenter, not
+        the spec sheet.  The winner is compared against the always-evaluated
+        baseline and submitted to the HITL gate via
+        :func:`repro.core.feedback.propose_from_optimum` — proposals carry
+        the searched optimum plus its objective breakdown vs baseline.
+        Deterministic given ``key``; ``shard=True`` spans the device mesh.
+        """
+        if space is None:
+            space = self.default_search_space()
+        if objective is None:
+            # no carbon forecast -> optimize energy instead of gCO2 (the
+            # gCO2 weight would otherwise demand a trace we don't have)
+            objective = (ObjectiveSpec() if self.carbon_intensity is not None
+                         else ObjectiveSpec(w_gco2_kg=0.0, w_energy_kwh=1.0))
+        res = optimize(
+            self.workload, self.dc, space, objective,
+            t_bins=self.t_bins, base_params=self.state.params,
+            carbon_intensity=self.carbon_intensity, key=key, config=config,
+            model=self.cfg.power_model, shard=shard, mesh=mesh,
+        )
+        window = len(self.records)
+        proposals = [
+            self.gate.submit(p) for p in propose_from_optimum(
+                window, res.best_summary, res.baseline_summary,
+                objective=res.best.objective,
+                baseline_objective=res.baseline.objective,
+                breakdown=res.best.breakdown,
+                baseline_breakdown=res.baseline.breakdown,
+            )]
+        return OptimizeWhatIfResult(result=res, proposals=proposals)
 
     def run(self, num_windows: int | None = None) -> list[WindowRecord]:
         n = num_windows if num_windows is not None else self.num_windows

@@ -111,6 +111,10 @@ class Scenario:
     Traceback (most recent call last):
         ...
     ValueError: scenario '': power-model exponent r must be > 0, got 0.0
+    >>> Scenario(backfill_depth=40)
+    Traceback (most recent call last):
+        ...
+    ValueError: scenario '': backfill_depth must be in [0, 31] (uint32 skip-mask width), got 40
     """
 
     name: str = ""
@@ -158,6 +162,20 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: carbon_cap_base_w must be > 0 W, "
                 f"got {self.carbon_cap_base_w}")
+        if not math.isfinite(self.carbon_cap_slope):
+            # a NaN/inf slope silently poisons the per-bin effective cap
+            # (min with NaN is NaN in numpy, propagates to every readout)
+            raise ValueError(
+                f"scenario {self.name!r}: carbon_cap_slope must be finite "
+                f"W per gCO2/kWh, got {self.carbon_cap_slope}")
+        if not 0 <= int(self.backfill_depth) <= 31:
+            # the DES skip bitmask is uint32; checked here at the concrete
+            # Scenario boundary, not only in build_scenario_set, so a bad
+            # depth can never reach a traced program (and a negative depth
+            # is rejected instead of being silently clamped to 0)
+            raise ValueError(
+                f"scenario {self.name!r}: backfill_depth must be in [0, 31] "
+                f"(uint32 skip-mask width), got {self.backfill_depth}")
         for knob in ("arrival_scale", "duration_scale"):
             if not getattr(self, knob) > 0:
                 raise ValueError(
@@ -327,6 +345,7 @@ def build_scenario_set(
     scenarios: "list[Scenario] | tuple[Scenario, ...]",
     base_params: PowerParams = PowerParams(),
     max_hosts: int | None = None,
+    max_backfill: int | None = None,
 ) -> ScenarioSet:
     """Stack S candidate configurations against one base trace/topology.
 
@@ -344,11 +363,14 @@ def build_scenario_set(
     parameters are carried as ``[S, max_hosts]`` per-host rows, so
     heterogeneous fleets (per-host calibrated bases) survive the what-if
     path; scalar scenario overrides replace a whole row.
-    The static backfill window ``max_backfill`` is the max candidate depth,
-    so depth-0 sweeps compile the backfill machinery out entirely.
+    The static backfill window ``max_backfill`` defaults to the max candidate
+    depth, so depth-0 sweeps compile the backfill machinery out entirely;
+    pass it explicitly (like ``max_hosts``) to pin one compilation cache key
+    across batches whose depth mixes differ — the optimizer's generation
+    loop (:mod:`repro.core.optimize`) relies on exactly this.
 
-    Raises ``ValueError`` on an empty scenario list or a candidate wanting
-    more hosts than ``max_hosts``.
+    Raises ``ValueError`` on an empty scenario list, a candidate wanting
+    more hosts than ``max_hosts``, or a depth beyond ``max_backfill``.
     """
     if not scenarios:
         raise ValueError("need at least one scenario")
@@ -387,12 +409,17 @@ def build_scenario_set(
 
     hosts_a = jnp.asarray(hosts, jnp.int32)
     cores_a = jnp.asarray(cores, jnp.int32)
-    depths = [max(int(sc.backfill_depth), 0) for sc in scenarios]
-    if max(depths) > 31:
-        # the DES skip bitmask is uint32 — reject rather than silently
-        # mis-schedule (simulate_utilization_masked enforces the same bound)
+    # per-scenario depths are already range-checked at Scenario construction
+    depths = [int(sc.backfill_depth) for sc in scenarios]
+    mb = max(depths) if max_backfill is None else int(max_backfill)
+    if not 0 <= mb <= 31:
         raise ValueError(
-            f"backfill_depth {max(depths)} > 31 (uint32 skip-mask width)")
+            f"max_backfill must be in [0, 31] (uint32 skip-mask width), "
+            f"got {mb}")
+    if max(depths) > mb:
+        raise ValueError(
+            f"scenario wants backfill_depth {max(depths)} > "
+            f"max_backfill={mb}")
     peak = jnp.asarray(
         [dataclasses.replace(dc, num_hosts=h, cores_per_host=c).peak_tflops
          for h, c in zip(hosts, cores)], jnp.float32)
@@ -420,7 +447,7 @@ def build_scenario_set(
                                jnp.int32),
         peak_tflops=peak,
         names=names,
-        max_backfill=max(depths),
+        max_backfill=mb,
     )
 
 

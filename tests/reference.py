@@ -1,0 +1,272 @@
+"""Pure-Python oracle for the vectorized DES and its masked read-out.
+
+An easily-audited, loop-based re-implementation of what the jitted engine
+computes — scheduling (FCFS + placement policies + bounded backfill),
+deferrable-job time-shifting, the OpenDC power model, **enforced** power
+caps (static and carbon-aware) with linear throttling, energy and gCO2.
+Everything runs in plain Python floats (float64), so any agreement with the
+float32 tensor engine is evidence, not tautology.
+
+Used by ``test_policies.py`` (placement exactness) and ``test_oracle.py``
+(cap/shift/readout cross-checks on randomized small cases).  Kept free of
+jax imports on purpose: the oracle must not share code with the system
+under test.
+"""
+
+import math
+
+import numpy as np
+
+
+# -- placement ----------------------------------------------------------------
+
+def _rand_score(host: int, t: int, salt: int) -> int:
+    """Python replica of desim._hash_scores (uint32 mix, masked to 23 bits)."""
+    m = 0xFFFFFFFF
+    x = ((host * 0x9E3779B1) ^ (t * 0x85EBCA77) ^ (salt * 0xC2B2AE3D)) & m
+    x = ((x ^ (x >> 16)) * 0x7FEB352D) & m
+    x = ((x ^ (x >> 15)) * 0x846CA68B) & m
+    x = x ^ (x >> 16)
+    return x & 0x7FFFFF
+
+
+def _pick_host(free, need, policy, t, salt):
+    """Argmax-of-score host choice; ties break to the lowest host index."""
+    fits = [h for h in range(len(free)) if free[h] >= need]
+    if not fits:
+        return None
+    if policy == "first_fit":
+        return fits[0]
+    if policy == "best_fit":
+        return min(fits, key=lambda h: (free[h], h))
+    if policy == "worst_fit":
+        return max(fits, key=lambda h: (free[h], -h))
+    if policy == "random_fit":
+        return max(fits, key=lambda h: (_rand_score(h, t, salt), -h))
+    raise ValueError(policy)
+
+
+def reference_schedule(submit, dur, cores, valid, *, num_hosts,
+                       cores_per_host, t_bins, policy="worst_fit",
+                       backfill_depth=0, max_starts_per_bin=64):
+    """Event-semantics FCFS scheduler the vectorized kernel must reproduce.
+
+    Per bin: release finished jobs' cores, then repeatedly (a) place the
+    queue head if it is submitted and fits anywhere, else (b) let the first
+    of its next `backfill_depth` submitted successors that fits jump ahead,
+    else (c) block the bin.  Host choice per `_pick_host`.
+    """
+    j = len(submit)
+    free = [cores_per_host] * num_hosts
+    release = [[0] * num_hosts for _ in range(t_bins + 1)]
+    job_start = [-1] * j
+    job_host = [-1] * j
+    next_job = 0
+
+    for t in range(t_bins):
+        for h in range(num_hosts):
+            free[h] += release[t][h]
+        n = 0
+        while n < max_starts_per_bin:
+            while next_job < j and job_start[next_job] >= 0:
+                next_job += 1
+            if (next_job >= j or submit[next_job] > t
+                    or not valid[next_job]):
+                break
+            jid = next_job
+            if _pick_host(free, cores[jid], policy, t, n) is None:
+                jid = None
+                for d in range(1, backfill_depth + 1):
+                    c = next_job + d
+                    if c >= j:
+                        break
+                    if (job_start[c] >= 0 or not valid[c]
+                            or submit[c] > t):
+                        continue
+                    if any(f >= cores[c] for f in free):
+                        jid = c
+                        break
+                if jid is None:
+                    break
+            host = _pick_host(free, cores[jid], policy, t, n)
+            free[host] -= cores[jid]
+            job_start[jid] = t
+            job_host[jid] = host
+            end = min(t + max(dur[jid], 1), t_bins)
+            release[end][host] += cores[jid]
+            n += 1
+    return job_start, job_host
+
+
+# -- workload perturbation ----------------------------------------------------
+
+def apply_shift(submit, dur, util, cores, valid, deferrable, shift_bins):
+    """Deferrable-job time-shifting, mirroring scenarios._perturb.
+
+    Moves deferrable valid jobs by ``shift_bins`` (clipped at bin 0), then
+    stably re-sorts the whole job axis by the new submission times — the
+    DES's FCFS queue order *is* the array order.  ``deferrable=None`` means
+    all jobs move.  Returns the re-ordered (submit, dur, util, cores, valid,
+    deferrable) lists.
+    """
+    j = len(submit)
+    movable = [valid[i] and (deferrable is None or deferrable[i])
+               for i in range(j)]
+    shifted = [max(submit[i] + shift_bins, 0) if movable[i] else submit[i]
+               for i in range(j)]
+    order = sorted(range(j), key=lambda i: (shifted[i], i))   # stable
+    pick = lambda xs: [xs[i] for i in order]                  # noqa: E731
+    return (pick(shifted), pick(dur), pick(util), pick(cores), pick(valid),
+            None if deferrable is None else pick(deferrable))
+
+
+# -- utilization field --------------------------------------------------------
+
+def reference_u_th(job_start, submit, dur, cores, util_levels, job_host, *,
+                   num_hosts, cores_per_host, t_bins):
+    """``[t_bins][num_hosts]`` per-host utilization from a schedule.
+
+    Replicates the engine's post-scan read-out: a job runs in bins
+    ``[start, start + max(dur, 1))``, contributing phase
+    ``clip((t - start) * U // max(dur, 1), 0, U - 1)`` of its piecewise
+    profile times its core count, normalized by the host's core capacity.
+    """
+    j = len(job_start)
+    u = [[0.0] * num_hosts for _ in range(t_bins)]
+    phases = len(util_levels[0]) if j else 1
+    for i in range(j):
+        if job_start[i] < 0:
+            continue
+        d = max(dur[i], 1)
+        for t in range(job_start[i], min(job_start[i] + d, t_bins)):
+            ph = min(max((t - job_start[i]) * phases // d, 0), phases - 1)
+            u[t][job_host[i]] += util_levels[i][ph] * cores[i] / cores_per_host
+    return u
+
+
+# -- power / cap / carbon read-out -------------------------------------------
+
+def opendc_power(u, p_idle, p_max, r):
+    """OpenDC analytical model, scalar: P = P_idle + span * (2u - u^r)."""
+    u = min(max(u, 0.0), 1.0)
+    return p_idle + (p_max - p_idle) * (2.0 * u - u ** r)
+
+
+def effective_cap(power_cap_w, carbon_cap_base_w, carbon_cap_slope,
+                  intensity_t):
+    """Per-bin enforced cap: min(static, max(base + slope * I_t, 0)).
+
+    ``None`` caps read as +inf (uncapped); the carbon-aware term only
+    applies when an intensity value is supplied (matching the engine, which
+    rejects carbon caps without a trace).
+    """
+    cap = power_cap_w if power_cap_w is not None else math.inf
+    if intensity_t is not None:
+        base = (carbon_cap_base_w if carbon_cap_base_w is not None
+                else math.inf)
+        cap = min(cap, max(base + carbon_cap_slope * intensity_t, 0.0))
+    return cap
+
+
+def reference_readout(u_th, *, p_idle, p_max, r, power_cap_w=None,
+                      carbon_cap_base_w=None, carbon_cap_slope=0.0,
+                      intensity=None, sample_seconds=300.0):
+    """Masked-readout oracle: demand, enforced cap, throttle, energy, gCO2.
+
+    Mirrors ``scenarios._predict_masked`` in plain float64:
+
+    * ``demand_t``   — sum of the per-host OpenDC power over active hosts;
+    * ``cap_t``      — the effective (static ∧ carbon-aware) per-bin cap;
+    * ``throttled_t``— demand ran into the cap (the engine's cap-exceeded
+      flag);
+    * ``power_t``    — delivered = min(demand, cap);
+    * ``util_t``     — mean active-host utilization, linearly throttled by
+      the above-idle fraction the cap removed when throttled;
+    * ``energy_t`` / ``gco2_t`` — delivered energy (kWh) and carbon (g).
+    """
+    t_bins = len(u_th)
+    num_hosts = len(u_th[0]) if t_bins else 0
+    idle_floor = p_idle * num_hosts
+    out = {k: [] for k in ("demand", "cap", "power", "throttled", "util",
+                           "energy_kwh", "gco2")}
+    for t in range(t_bins):
+        i_t = intensity[t] if intensity is not None else None
+        demand = sum(opendc_power(u_th[t][h], p_idle, p_max, r)
+                     for h in range(num_hosts))
+        cap = effective_cap(power_cap_w, carbon_cap_base_w,
+                            carbon_cap_slope, i_t)
+        throttled = demand > cap
+        power = min(demand, cap)
+        throttle = min(max((cap - idle_floor)
+                           / max(demand - idle_floor, 1e-9), 0.0), 1.0)
+        util_raw = (sum(u_th[t]) / num_hosts) if num_hosts else 0.0
+        util = util_raw * throttle if throttled else util_raw
+        energy = power * sample_seconds / 3600.0 / 1000.0
+        out["demand"].append(demand)
+        out["cap"].append(cap)
+        out["power"].append(power)
+        out["throttled"].append(throttled)
+        out["util"].append(util)
+        out["energy_kwh"].append(energy)
+        out["gco2"].append(energy * i_t if i_t is not None else math.nan)
+    return out
+
+
+def reference_scenario(workload, dc, scenario, *, t_bins, p_idle, p_max, r,
+                       intensity=None, max_starts_per_bin=64):
+    """Full single-scenario oracle: perturb -> schedule -> readout.
+
+    ``workload`` is a dict of plain lists (``submit``, ``dur``, ``cores``,
+    ``util`` — ``[J][U]`` —, ``valid``, optional ``deferrable``);
+    ``scenario`` a :class:`repro.core.scenarios.Scenario`; power params are
+    the *resolved* scalars (scenario override already applied by the
+    caller, or the base).  Returns the readout dict plus the schedule and
+    post-perturbation submit times (``job_start``, ``job_host``,
+    ``submit``, ``waits`` over started valid jobs).
+    """
+    submit = list(workload["submit"])
+    dur = list(workload["dur"])
+    util = [list(row) for row in workload["util"]]
+    cores = list(workload["cores"])
+    valid = list(workload["valid"])
+    defer = (None if workload.get("deferrable") is None
+             else list(workload["deferrable"]))
+
+    if scenario.arrival_scale != 1.0:
+        # float32 on purpose: mirrors scenarios._perturb's rounding exactly
+        submit = [int(np.floor(np.float32(s) / np.float32(
+            scenario.arrival_scale))) for s in submit]
+    if scenario.duration_scale != 1.0:
+        dur = [max(int(np.ceil(np.float32(d) * np.float32(
+            scenario.duration_scale))), 1) for d in dur]
+    if scenario.util_scale != 1.0:
+        util = [[min(max(u * scenario.util_scale, 0.0), 1.0) for u in row]
+                for row in util]
+    if scenario.shift_bins != 0:
+        submit, dur, util, cores, valid, defer = apply_shift(
+            submit, dur, util, cores, valid, defer, int(scenario.shift_bins))
+
+    num_hosts = (scenario.num_hosts if scenario.num_hosts is not None
+                 else dc.num_hosts)
+    cores_per_host = (scenario.cores_per_host
+                      if scenario.cores_per_host is not None
+                      else dc.cores_per_host)
+    policy = scenario.policy if scenario.policy is not None else "worst_fit"
+    job_start, job_host = reference_schedule(
+        submit, dur, cores, valid, num_hosts=num_hosts,
+        cores_per_host=cores_per_host, t_bins=t_bins, policy=policy,
+        backfill_depth=int(scenario.backfill_depth),
+        max_starts_per_bin=max_starts_per_bin)
+    u_th = reference_u_th(
+        job_start, submit, dur, cores, util, job_host,
+        num_hosts=num_hosts, cores_per_host=cores_per_host, t_bins=t_bins)
+    out = reference_readout(
+        u_th, p_idle=p_idle, p_max=p_max, r=r,
+        power_cap_w=scenario.power_cap_w,
+        carbon_cap_base_w=scenario.carbon_cap_base_w,
+        carbon_cap_slope=scenario.carbon_cap_slope, intensity=intensity)
+    out.update(
+        job_start=job_start, job_host=job_host, submit=submit, u_th=u_th,
+        waits=[job_start[i] - submit[i] for i in range(len(submit))
+               if valid[i] and job_start[i] >= 0])
+    return out

@@ -1,0 +1,317 @@
+"""Scenario optimizer: grid-dominance, feasibility, determinism, golden.
+
+The acceptance gates of the optimizer subsystem:
+
+  * the returned incumbent is **feasible** and its objective is <= the best
+    point of an exhaustive grid over the same discretized space (the search
+    seeds with that grid and refinement can only improve);
+  * hard constraints are never violated by the winner — infeasible lanes
+    are masked to +inf, a fully-infeasible space raises;
+  * a fixed PRNG key makes the whole trajectory bit-reproducible, pinned
+    long-term by ``tests/golden/optimize_trajectory.npz`` (regen:
+    ``tools/capture_optimize_golden.py``).
+"""
+
+import dataclasses
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.feedback import ProposalKind
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+    score_batch,
+)
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.scenarios import (
+    Scenario,
+    build_scenario_set,
+    evaluate_scenarios,
+    run_scenarios,
+)
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.schema import DatacenterConfig, Workload
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+import capture_optimize_golden  # noqa: E402  (golden config lives with the tool)
+
+T_BINS = 48
+DC = DatacenterConfig(num_hosts=4, cores_per_host=8)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(3)
+    j = 24
+    return Workload(
+        jnp.asarray(np.sort(rng.integers(0, 24, j)).astype(np.int32)),
+        jnp.asarray(rng.integers(1, 8, j).astype(np.int32)),
+        jnp.asarray(rng.integers(1, 8, j).astype(np.int32)),
+        jnp.asarray(rng.uniform(0.2, 1.0, (j, 3)).astype(np.float32)),
+        jnp.ones((j,), bool),
+        deferrable=jnp.asarray(rng.random(j) < 0.5))
+
+
+@pytest.fixture(scope="module")
+def intensity():
+    return make_diurnal_carbon(T_BINS, seed=2)
+
+
+def _space():
+    return SearchSpace(
+        structures=(Scenario(name="wf"),
+                    Scenario(name="bf", policy="best_fit", backfill_depth=4)),
+        carbon_cap_base_w=(800.0, 2000.0),
+        carbon_cap_slope=(-2.0, 0.0),
+        shift_bins=(0, 12))
+
+
+def _objective(**kw):
+    base = dict(w_gco2_kg=1.0, w_wait=0.05, w_unplaced=10.0, w_throttled=0.02)
+    base.update(kw)
+    return ObjectiveSpec(**base)
+
+
+def _config(**kw):
+    base = dict(batch_size=8, generations=2, init="grid", init_levels=2)
+    base.update(kw)
+    return OptimizerConfig(**base)
+
+
+def test_optimizer_not_worse_than_exhaustive_grid(workload, intensity):
+    """Acceptance: the incumbent's objective <= the best point of the
+    exhaustive grid over the same discretized space, scored independently
+    through the plain evaluator."""
+    space, obj = _space(), _objective()
+    res = optimize(workload, DC, space, obj, t_bins=T_BINS,
+                   carbon_intensity=intensity, key=0, config=_config())
+    assert res.best.feasible
+    grid = space.grid(levels=2)
+    ss = build_scenario_set(workload, DC, grid,
+                            max_hosts=space.max_hosts(DC),
+                            max_backfill=space.max_backfill())
+    sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=T_BINS,
+                              carbon_intensity=intensity)
+    grid_best = score_batch(obj, ss, sim, pred, t_bins=T_BINS)["objective"].min()
+    assert res.best.objective <= grid_best
+    # and the incumbent is exactly the min over everything it evaluated
+    feas = [c.objective for c in res.history if c.feasible]
+    assert res.best.objective == min(feas)
+    # convergence trace is monotone non-increasing
+    assert (np.diff(res.incumbent_objective) <= 0).all()
+
+
+def test_baseline_always_compared_and_reported(workload, intensity):
+    res = optimize(workload, DC, _space(), _objective(), t_bins=T_BINS,
+                   carbon_intensity=intensity, key=1, config=_config())
+    assert res.baseline.scenario.name == "baseline"
+    assert res.baseline.generation == 0 and res.baseline.lane == 0
+    assert res.best.objective <= res.baseline.objective
+    assert res.baseline_summary.num_hosts == DC.num_hosts
+    assert res.baseline_summary.policy == "worst_fit"
+    # breakdowns expose the full component set for operator display
+    for f in ("gco2_kg", "energy_kwh", "penalty_unplaced", "total"):
+        assert f in res.best.breakdown and f in res.baseline.breakdown
+
+
+def test_hard_constraints_never_violated_by_winner(workload, intensity):
+    """A tight peak-power constraint masks hot candidates: every infeasible
+    lane reads +inf and the winner satisfies the constraint."""
+    cap = 1300.0
+    res = optimize(workload, DC, _space(),
+                   _objective(max_peak_power_w=cap),
+                   t_bins=T_BINS, carbon_intensity=intensity, key=0,
+                   config=_config())
+    assert res.best.feasible
+    assert res.best.breakdown["peak_power_w"] <= cap
+    for c in res.history:
+        if not c.feasible:
+            assert c.objective == np.inf
+        else:
+            assert c.breakdown["peak_power_w"] <= cap
+
+
+def test_fully_infeasible_space_raises(workload, intensity):
+    with pytest.raises(ValueError, match="no feasible candidate"):
+        optimize(workload, DC, _space(),
+                 _objective(max_peak_power_w=1.0),   # nothing draws < 1 W
+                 t_bins=T_BINS, carbon_intensity=intensity, key=0,
+                 config=_config())
+
+
+def test_fixed_key_is_bit_reproducible(workload, intensity):
+    a = optimize(workload, DC, _space(), _objective(), t_bins=T_BINS,
+                 carbon_intensity=intensity, key=5, config=_config())
+    b = optimize(workload, DC, _space(), _objective(), t_bins=T_BINS,
+                 carbon_intensity=intensity, key=5, config=_config())
+    assert [c.scenario for c in a.history] == [c.scenario for c in b.history]
+    assert [c.objective for c in a.history] == [c.objective for c in b.history]
+    np.testing.assert_array_equal(a.incumbent_objective,
+                                  b.incumbent_objective)
+    assert a.best.scenario == b.best.scenario
+
+
+def test_missing_carbon_trace_rejected(workload):
+    # gCO2-weighted objective without a trace
+    with pytest.raises(ValueError, match="carbon_intensity"):
+        optimize(workload, DC, SearchSpace(shift_bins=(0, 6)), ObjectiveSpec(),
+                 t_bins=T_BINS, key=0, config=_config())
+    # carbon-aware cap axes without a trace
+    with pytest.raises(ValueError, match="carbon"):
+        optimize(workload, DC, _space(),
+                 ObjectiveSpec(w_gco2_kg=0.0, w_energy_kwh=1.0),
+                 t_bins=T_BINS, key=0, config=_config())
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="finite"):
+        ObjectiveSpec(w_gco2_kg=float("nan"))
+    with pytest.raises(ValueError, match=">= 0"):
+        ObjectiveSpec(w_energy_kwh=-1.0)
+    with pytest.raises(ValueError, match="positive weight"):
+        ObjectiveSpec(w_gco2_kg=0.0, w_wait=0.0, w_unplaced=0.0)
+    with pytest.raises(ValueError, match="max_unplaced_jobs"):
+        ObjectiveSpec(max_unplaced_jobs=-1)
+    with pytest.raises(ValueError, match="lo <= hi"):
+        SearchSpace(shift_bins=(6, 0))
+    with pytest.raises(ValueError, match="> 0 W"):
+        SearchSpace(power_cap_w=(0.0, 100.0))
+    with pytest.raises(ValueError, match="batch_size"):
+        OptimizerConfig(batch_size=2)
+    with pytest.raises(ValueError, match="init"):
+        OptimizerConfig(init="annealing")
+
+
+def test_score_batch_matches_summaries(workload, intensity):
+    """The vectorized objective readout agrees with the per-scenario
+    operator summaries on the shared fields."""
+    scs = [Scenario(name="base"), Scenario(name="cap", power_cap_w=1200.0),
+           Scenario(name="shift", shift_bins=6)]
+    ss, sim, pred, summaries = evaluate_scenarios(
+        workload, DC, scs, t_bins=T_BINS, carbon_intensity=intensity)
+    scores = score_batch(ObjectiveSpec(w_gco2_kg=1.0), ss, sim, pred,
+                         t_bins=T_BINS)
+    for i, s in enumerate(summaries):
+        # score_batch accumulates in float64, the summaries in float32 —
+        # agreement is to f32 reduction noise, not bitwise
+        assert scores["gco2_kg"][i] == pytest.approx(s.gco2 / 1e3, rel=1e-6)
+        assert scores["energy_kwh"][i] == pytest.approx(s.energy_kwh,
+                                                        rel=1e-6)
+        assert scores["unplaced_jobs"][i] == s.unplaced_jobs
+        assert int(scores["cap_exceeded_bins"][i]) == s.cap_exceeded_bins
+        if np.isfinite(s.mean_wait_bins):
+            assert scores["mean_wait_bins"][i] == pytest.approx(
+                s.mean_wait_bins)
+
+
+def test_trajectory_matches_golden():
+    """The pinned trajectory: every objective value, feasibility flag and
+    incumbent choice is bit-for-bit the golden capture's."""
+    g = np.load(pathlib.Path(__file__).parent / "golden"
+                / "optimize_trajectory.npz")
+    res = capture_optimize_golden.run()
+    np.testing.assert_array_equal(
+        np.array([c.objective for c in res.history], np.float64),
+        g["objective"])
+    np.testing.assert_array_equal(
+        np.array([c.feasible for c in res.history], np.bool_), g["feasible"])
+    np.testing.assert_array_equal(
+        np.array([c.generation for c in res.history], np.int64),
+        g["generation"])
+    np.testing.assert_array_equal(
+        np.array([c.lane for c in res.history], np.int64), g["lane"])
+    np.testing.assert_array_equal(res.incumbent_objective,
+                                  g["incumbent_objective"])
+    assert res.best.objective == float(g["best_objective"])
+    assert res.baseline.objective == float(g["baseline_objective"])
+    assert res.best.breakdown["gco2_kg"] == float(g["best_gco2_kg"])
+    assert res.best_summary.num_hosts == int(g["best_num_hosts"])
+    assert res.best_summary.policy == str(g["best_policy"])
+    assert res.best_summary.backfill_depth == int(g["best_backfill"])
+    assert res.best_summary.shift_bins == int(g["best_shift_bins"])
+    want_cap = float(g["best_carbon_cap_base_w"])
+    if np.isnan(want_cap):
+        assert res.best_summary.carbon_cap_base_w is None
+    else:
+        assert res.best_summary.carbon_cap_base_w == want_cap
+    assert res.best_summary.carbon_cap_slope == float(
+        g["best_carbon_cap_slope"])
+
+
+def test_optimize_whatif_routes_winner_through_gate(workload, intensity):
+    """Acceptance: the searched optimum flows through the HITL gate with an
+    objective breakdown vs baseline attached to every proposal."""
+    orch = Orchestrator(workload, DC, T_BINS,
+                        OrchestratorConfig(bins_per_window=24,
+                                           calibrate=False),
+                        carbon_intensity=intensity)
+    res = orch.optimize_whatif(_space(), _objective(), key=0,
+                               config=_config())
+    assert res.result.best.objective <= res.result.baseline.objective
+    assert res.proposals, "an improving optimum must reach the gate"
+    for p in res.proposals:
+        assert p.impact["objective"] == res.result.best.objective
+        assert p.impact["objective_baseline"] == res.result.baseline.objective
+        assert p.impact["objective_breakdown"]["total"] == pytest.approx(
+            res.result.best.breakdown["total"])
+        assert "objective_breakdown_baseline" in p.impact
+        assert p.impact["searched_optimum"] == res.result.best.scenario.name
+    # submitted, pending a human decision
+    assert len(orch.gate.pending()) >= len(res.proposals)
+    kinds = {p.kind for p in res.proposals}
+    assert kinds & {ProposalKind.CARBON_REDUCTION,
+                    ProposalKind.SCHEDULER_CHANGE,
+                    ProposalKind.SCALE_DOWN_IDLE, ProposalKind.POWER_CAP}
+
+
+def test_optimize_whatif_default_space_without_carbon(workload):
+    """No carbon forecast: the default objective optimizes energy instead of
+    demanding a gCO2 trace, over the software-only default space."""
+    orch = Orchestrator(workload, DC, T_BINS,
+                        OrchestratorConfig(bins_per_window=24,
+                                           calibrate=False))
+    res = orch.optimize_whatif(config=_config(generations=1))
+    assert np.isfinite(res.result.best.objective)
+    assert np.isnan(res.result.best.breakdown["gco2_kg"])
+    space = orch.default_search_space()
+    assert {s.policy for s in space.structures} == {
+        "best_fit", "first_fit", "random_fit", "worst_fit"}
+
+
+def test_optimize_uses_calibrated_params(workload, intensity):
+    """The searched optimum must be priced with the twin's *current*
+    calibrated params, not the spec sheet: scaling the power model scales
+    the baseline objective's energy/carbon terms."""
+    from repro.core.power import PowerParams
+
+    space = SearchSpace(structures=(Scenario(name="wf"),),
+                        shift_bins=(0, 6))
+    obj = ObjectiveSpec(w_gco2_kg=1.0)
+    cfg = _config(generations=0, batch_size=4)
+    lo = optimize(workload, DC, space, obj, t_bins=T_BINS,
+                  base_params=PowerParams(p_idle=40.0, p_max=200.0, r=2.0),
+                  carbon_intensity=intensity, key=0, config=cfg)
+    hi = optimize(workload, DC, space, obj, t_bins=T_BINS,
+                  base_params=PowerParams(p_idle=80.0, p_max=400.0, r=2.0),
+                  carbon_intensity=intensity, key=0, config=cfg)
+    assert hi.baseline.breakdown["gco2_kg"] > lo.baseline.breakdown["gco2_kg"]
+
+
+def test_padded_batches_share_one_compile(workload, intensity):
+    """The whole search — init grid batches plus every refinement
+    generation — runs through one compiled evaluator program."""
+    if run_scenarios._cache_size is None:
+        pytest.skip("jax private _cache_size API unavailable")
+    import jax
+
+    jax.clear_caches()
+    optimize(workload, DC, _space(), _objective(), t_bins=T_BINS,
+             carbon_intensity=intensity, key=0,
+             config=_config(generations=3))
+    assert run_scenarios._cache_size() == 1

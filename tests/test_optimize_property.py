@@ -1,0 +1,107 @@
+"""Hypothesis property tests on optimizer invariants.
+
+``hypothesis`` is optional (same policy as ``zstandard``, see ROADMAP):
+environments without it skip this module instead of failing collection.
+
+The invariants, over randomized keys/constraints on a fixed small twin:
+
+  * the returned incumbent is never worse than any candidate the search
+    evaluated (and is the exact min over the feasible history);
+  * hard constraints are never violated by the winner — or, when nothing
+    satisfies them, the search raises instead of returning a violator;
+  * a fixed key makes the search bit-reproducible, end to end.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+)
+from repro.core.scenarios import Scenario
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.schema import DatacenterConfig, Workload
+
+T_BINS = 36
+DC = DatacenterConfig(num_hosts=3, cores_per_host=8)
+
+_rng = np.random.default_rng(19)
+_J = 16
+WORKLOAD = Workload(
+    jnp.asarray(np.sort(_rng.integers(0, 18, _J)).astype(np.int32)),
+    jnp.asarray(_rng.integers(1, 6, _J).astype(np.int32)),
+    jnp.asarray(_rng.integers(1, 8, _J).astype(np.int32)),
+    jnp.asarray(_rng.uniform(0.2, 1.0, (_J, 2)).astype(np.float32)),
+    jnp.ones((_J,), bool),
+    deferrable=jnp.asarray(_rng.random(_J) < 0.5))
+INTENSITY = make_diurnal_carbon(T_BINS, seed=6)
+
+SPACE = SearchSpace(
+    structures=(Scenario(name="wf"),
+                Scenario(name="bf", policy="best_fit", backfill_depth=2)),
+    carbon_cap_base_w=(400.0, 1500.0),
+    shift_bins=(0, 8))
+
+#: one fixed batch shape across all examples — every optimize() call below
+#: reuses a single compiled evaluator, so the property suite stays fast
+CONFIG = OptimizerConfig(batch_size=6, generations=2, init="random")
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _opt(key, objective):
+    return optimize(WORKLOAD, DC, SPACE, objective, t_bins=T_BINS,
+                    carbon_intensity=INTENSITY, key=key, config=CONFIG)
+
+
+@given(key=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_incumbent_never_worse_than_any_evaluated(key):
+    res = _opt(key, ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.1,
+                                  w_unplaced=10.0))
+    feas = [c.objective for c in res.history if c.feasible]
+    assert res.best.feasible
+    assert res.best.objective == min(feas)
+    assert all(res.best.objective <= c.objective for c in res.history)
+    assert (np.diff(res.incumbent_objective) <= 0).all()
+
+
+@given(key=st.integers(0, 2**31 - 1),
+       max_unplaced=st.integers(0, 4),
+       max_wait=st.floats(0.5, 20.0))
+@settings(**SETTINGS)
+def test_winner_never_violates_hard_constraints(key, max_unplaced, max_wait):
+    obj = ObjectiveSpec(w_gco2_kg=1.0, w_unplaced=5.0,
+                        max_unplaced_jobs=max_unplaced,
+                        max_mean_wait_bins=max_wait)
+    try:
+        res = _opt(key, obj)
+    except ValueError as e:
+        assert "no feasible candidate" in str(e)
+        return
+    assert res.best.breakdown["unplaced_jobs"] <= max_unplaced
+    assert res.best.breakdown["mean_wait_bins"] <= max_wait
+    for c in res.history:
+        if not c.feasible:
+            assert c.objective == np.inf
+
+
+@given(key=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_search_bit_reproducible_for_fixed_key(key):
+    obj = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.1, w_unplaced=10.0)
+    a, b = _opt(key, obj), _opt(key, obj)
+    assert [c.scenario for c in a.history] == [c.scenario for c in b.history]
+    assert [c.objective for c in a.history] == [c.objective for c in b.history]
+    assert [c.feasible for c in a.history] == [c.feasible for c in b.history]
+    np.testing.assert_array_equal(a.incumbent_objective,
+                                  b.incumbent_objective)
+    assert a.best.scenario == b.best.scenario
+    assert a.best.breakdown == b.best.breakdown

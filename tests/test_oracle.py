@@ -1,0 +1,193 @@
+"""Masked DES read-out vs the pure-Python oracle: caps, shifts, carbon.
+
+``tests/reference.py`` models the whole per-scenario pipeline — deferrable
+time-shifting, FCFS placement, the OpenDC power model, *enforced* static and
+carbon-aware power caps with linear throttling, energy and gCO2 — in plain
+float64 loops.  These tests drive randomized small cases through the real
+batched engine (``evaluate_scenarios``) and demand agreement on every
+readout the operator consumes: schedules exactly, float fields to f32
+tolerance, throttle flags and wait statistics exactly.
+
+Before this suite only *placement* was oracle-checked (test_policies.py);
+the cap/shift/carbon readout path had no independent model.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from reference import apply_shift, reference_readout, reference_scenario
+
+from repro.core.power import PowerParams
+from repro.core.scenarios import Scenario, build_scenario_set, evaluate_scenarios
+from repro.traces.schema import SAMPLE_SECONDS, DatacenterConfig, Workload
+
+
+def _random_case(seed, j=20, hosts=3, cores_per_host=8, t_bins=40):
+    """A contended small trace with a random deferrable subset."""
+    rng = np.random.default_rng(seed)
+    submit = np.sort(rng.integers(0, t_bins // 2, j)).astype(np.int32)
+    dur = rng.integers(1, 8, j).astype(np.int32)
+    cores = rng.integers(1, cores_per_host + 1, j).astype(np.int32)
+    util = rng.uniform(0.1, 1.0, (j, 3)).astype(np.float32)
+    defer = rng.random(j) < 0.6
+    w = Workload(jnp.asarray(submit), jnp.asarray(dur), jnp.asarray(cores),
+                 jnp.asarray(util), jnp.ones((j,), bool),
+                 deferrable=jnp.asarray(defer))
+    dc = DatacenterConfig(num_hosts=hosts, cores_per_host=cores_per_host)
+    intensity = rng.uniform(80.0, 600.0, t_bins).astype(np.float32)
+    return w, dc, t_bins, intensity
+
+
+def _workload_dict(w: Workload) -> dict:
+    return dict(
+        submit=np.asarray(w.submit_bin).tolist(),
+        dur=np.asarray(w.duration_bins).tolist(),
+        cores=np.asarray(w.cores).tolist(),
+        util=np.asarray(w.util_levels).tolist(),
+        valid=np.asarray(w.valid).tolist(),
+        deferrable=(None if w.deferrable is None
+                    else np.asarray(w.deferrable).tolist()),
+    )
+
+
+#: cap/shift/carbon scenario mix the readout oracle must reproduce.  Caps are
+#: deliberately tight enough to throttle some (not all) bins on these traces.
+def _scenarios(hosts, cores_per_host):
+    watts = hosts * 120.0
+    return [
+        Scenario(name="base"),
+        Scenario(name="shift", shift_bins=7),
+        Scenario(name="shift-neg", shift_bins=-4),
+        Scenario(name="cap", power_cap_w=watts * 1.5),
+        Scenario(name="cc", carbon_cap_base_w=watts * 2.2,
+                 carbon_cap_slope=-hosts * 0.4),
+        Scenario(name="cap-cc-shift", power_cap_w=watts * 1.6,
+                 carbon_cap_base_w=watts * 2.0,
+                 carbon_cap_slope=-hosts * 0.3, shift_bins=5),
+        Scenario(name="bf-cap", policy="best_fit", backfill_depth=3,
+                 power_cap_w=watts * 1.4),
+    ]
+
+
+@pytest.mark.parametrize("seed", [3, 11, 29])
+def test_readout_matches_oracle(seed):
+    w, dc, t_bins, intensity = _random_case(seed)
+    params = PowerParams(p_idle=63.0, p_max=341.0, r=2.3)
+    scs = _scenarios(dc.num_hosts, dc.cores_per_host)
+    ss, sim, pred, summaries = evaluate_scenarios(
+        w, dc, scs, t_bins=t_bins, base_params=params,
+        carbon_intensity=intensity)
+    wd = _workload_dict(w)
+    for i, sc in enumerate(scs):
+        ref = reference_scenario(
+            wd, dc, sc, t_bins=t_bins, p_idle=63.0, p_max=341.0, r=2.3,
+            intensity=[float(v) for v in intensity])
+        # schedule and post-shift submission order: exact
+        assert np.asarray(sim.job_start[i]).tolist() == ref["job_start"], sc.name
+        assert np.asarray(sim.job_host[i]).tolist() == ref["job_host"], sc.name
+        assert np.asarray(ss.workload.submit_bin[i]).tolist() == ref["submit"]
+        # utilization field and power readouts: f32 engine vs f64 oracle
+        np.testing.assert_allclose(
+            np.asarray(sim.u_th[i], np.float64), np.asarray(ref["u_th"]),
+            rtol=2e-5, atol=1e-6, err_msg=f"{sc.name}: u_th")
+        np.testing.assert_allclose(
+            np.asarray(pred.power_demand_w[i], np.float64),
+            np.asarray(ref["demand"]), rtol=1e-4, err_msg=f"{sc.name}: demand")
+        np.testing.assert_allclose(
+            np.asarray(pred.power_w[i], np.float64),
+            np.asarray(ref["power"]), rtol=1e-4,
+            err_msg=f"{sc.name}: delivered power")
+        np.testing.assert_allclose(
+            np.asarray(pred.gco2[i], np.float64), np.asarray(ref["gco2"]),
+            rtol=2e-4, err_msg=f"{sc.name}: gco2")
+        np.testing.assert_allclose(
+            np.asarray(pred.utilization[i], np.float64),
+            np.asarray(ref["util"]), rtol=1e-4, atol=1e-6,
+            err_msg=f"{sc.name}: throttled utilization")
+        # throttle flags: the engine's delivered < demand exactly where the
+        # oracle says the cap binds
+        flags = (np.asarray(pred.power_demand_w[i])
+                 > np.asarray(pred.power_w[i]))
+        assert flags.tolist() == ref["throttled"], f"{sc.name}: throttle flags"
+        assert summaries[i].cap_exceeded_bins == sum(ref["throttled"]), sc.name
+        # wait statistics flow from the exact schedule
+        if ref["waits"]:
+            assert summaries[i].mean_wait_bins == pytest.approx(
+                sum(ref["waits"]) / len(ref["waits"]))
+        else:
+            assert math.isnan(summaries[i].mean_wait_bins)
+        # energy totals (f64 reduction of the delivered trace)
+        assert summaries[i].energy_kwh == pytest.approx(
+            sum(ref["energy_kwh"]), rel=1e-4)
+        assert summaries[i].gco2 == pytest.approx(sum(ref["gco2"]), rel=2e-4)
+
+
+@pytest.mark.parametrize("seed", [5, 17])
+def test_uncapped_no_shift_oracle_without_carbon(seed):
+    """The oracle also covers the pre-carbon path: no intensity trace, no
+    caps — demand equals delivered and gCO2 is NaN on both sides."""
+    w, dc, t_bins, _ = _random_case(seed)
+    params = PowerParams(p_idle=70.0, p_max=350.0, r=2.0)
+    scs = [Scenario(name="base"), Scenario(name="h2", num_hosts=2)]
+    ss, sim, pred, summaries = evaluate_scenarios(
+        w, dc, scs, t_bins=t_bins, base_params=params)
+    wd = _workload_dict(w)
+    for i, sc in enumerate(scs):
+        ref = reference_scenario(wd, dc, sc, t_bins=t_bins, p_idle=70.0,
+                                 p_max=350.0, r=2.0, intensity=None)
+        assert np.asarray(sim.job_start[i]).tolist() == ref["job_start"]
+        np.testing.assert_allclose(
+            np.asarray(pred.power_w[i], np.float64),
+            np.asarray(ref["power"]), rtol=1e-4)
+        assert not any(ref["throttled"])
+        assert math.isnan(summaries[i].gco2)
+
+
+def test_shift_moves_only_deferrable_jobs():
+    """Time-shifting at the oracle level: deferrable valid jobs move by
+    exactly shift_bins (clipped at 0), others stay, and the axis re-sorts
+    stably — matching the engine's stacked workload bit for bit."""
+    w, dc, t_bins, intensity = _random_case(7)
+    wd = _workload_dict(w)
+    shifted = apply_shift(wd["submit"], wd["dur"], wd["util"], wd["cores"],
+                          wd["valid"], wd["deferrable"], 9)
+    new_submit, _, _, _, _, new_defer = shifted
+    assert new_submit == sorted(new_submit)
+    # multiset of (submit, deferrable): deferrables moved by +9, rest fixed
+    want = sorted((s + 9 if d else s, d)
+                  for s, d in zip(wd["submit"], wd["deferrable"]))
+    assert sorted(zip(new_submit, new_defer)) == want
+    ss = build_scenario_set(w, dc, [Scenario(name="s9", shift_bins=9)])
+    assert np.asarray(ss.workload.submit_bin[0]).tolist() == new_submit
+
+
+def test_oracle_throttle_fraction_is_linear():
+    """Hand-built check of the linear-throttle model: one host at full load,
+    cap halfway between idle and demand -> delivered power equals the cap
+    and utilization halves its above-idle share."""
+    p_idle, p_max, r = 100.0, 300.0, 2.0
+    u = [[1.0]]                                     # one bin, one host
+    demand = p_max                                  # P(1) = p_max
+    cap = (p_idle + demand) / 2.0
+    ref = reference_readout(u, p_idle=p_idle, p_max=p_max, r=r,
+                            power_cap_w=cap)
+    assert ref["throttled"] == [True]
+    assert ref["power"][0] == pytest.approx(cap)
+    assert ref["util"][0] == pytest.approx(0.5)
+    # the engine agrees on the same one-bin case
+    w = Workload(jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32),
+                 jnp.asarray([4], jnp.int32),
+                 jnp.ones((1, 2), jnp.float32), jnp.ones((1,), bool))
+    dc = DatacenterConfig(num_hosts=1, cores_per_host=4)
+    _, _, pred, _ = evaluate_scenarios(
+        w, dc, [Scenario(name="cap", power_cap_w=cap)], t_bins=1,
+        base_params=PowerParams(p_idle=p_idle, p_max=p_max, r=r))
+    assert float(pred.power_w[0, 0]) == pytest.approx(cap)
+    assert float(pred.utilization[0, 0]) == pytest.approx(0.5)
+    assert float(pred.power_demand_w[0, 0]) == pytest.approx(demand)
+    # energy prices the *delivered* watts
+    assert float(pred.energy_kwh[0, 0]) == pytest.approx(
+        cap * SAMPLE_SECONDS / 3600.0 / 1000.0)

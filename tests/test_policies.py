@@ -1,8 +1,10 @@
-"""Placement-policy kernels vs a plain-Python reference scheduler.
+"""Placement-policy kernels vs the plain-Python reference scheduler.
 
 Two layers of defense:
-  * every (policy, backfill_depth) combination must match an easily-audited
-    pure-Python FCFS scheduler on hand-built and randomized small traces;
+  * every (policy, backfill_depth) combination must match the easily-audited
+    pure-Python FCFS oracle (``tests/reference.py`` — shared with the
+    cap/shift readout cross-checks in ``test_oracle.py``) on hand-built and
+    randomized small traces;
   * the default scheduler (worst-fit, no backfill) must be bit-for-bit
     identical to the *pre-refactor* DES — golden job_start/job_host arrays
     captured from the seed implementation before the policy kernel landed.
@@ -12,6 +14,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from reference import reference_schedule
+
 from repro.core.desim import (
     PLACEMENT_POLICIES,
     simulate_utilization,
@@ -19,86 +23,6 @@ from repro.core.desim import (
 from repro.core.feedback import ProposalKind, propose_from_scenario
 from repro.core.scenarios import Scenario, ScenarioSummary, evaluate_scenarios
 from repro.traces.schema import DatacenterConfig, Workload
-
-
-# -- reference implementation -------------------------------------------------
-
-def _rand_score(host: int, t: int, salt: int) -> int:
-    """Python replica of desim._hash_scores (uint32 mix, masked to 23 bits)."""
-    m = 0xFFFFFFFF
-    x = ((host * 0x9E3779B1) ^ (t * 0x85EBCA77) ^ (salt * 0xC2B2AE3D)) & m
-    x = ((x ^ (x >> 16)) * 0x7FEB352D) & m
-    x = ((x ^ (x >> 15)) * 0x846CA68B) & m
-    x = x ^ (x >> 16)
-    return x & 0x7FFFFF
-
-
-def _pick_host(free, need, policy, t, salt):
-    """Argmax-of-score host choice; ties break to the lowest host index."""
-    fits = [h for h in range(len(free)) if free[h] >= need]
-    if not fits:
-        return None
-    if policy == "first_fit":
-        return fits[0]
-    if policy == "best_fit":
-        return min(fits, key=lambda h: (free[h], h))
-    if policy == "worst_fit":
-        return max(fits, key=lambda h: (free[h], -h))
-    if policy == "random_fit":
-        return max(fits, key=lambda h: (_rand_score(h, t, salt), -h))
-    raise ValueError(policy)
-
-
-def reference_schedule(submit, dur, cores, valid, *, num_hosts,
-                       cores_per_host, t_bins, policy="worst_fit",
-                       backfill_depth=0, max_starts_per_bin=64):
-    """Event-semantics FCFS scheduler the vectorized kernel must reproduce.
-
-    Per bin: release finished jobs' cores, then repeatedly (a) place the
-    queue head if it is submitted and fits anywhere, else (b) let the first
-    of its next `backfill_depth` submitted successors that fits jump ahead,
-    else (c) block the bin.  Host choice per `_pick_host`.
-    """
-    j = len(submit)
-    free = [cores_per_host] * num_hosts
-    release = [[0] * num_hosts for _ in range(t_bins + 1)]
-    job_start = [-1] * j
-    job_host = [-1] * j
-    next_job = 0
-
-    for t in range(t_bins):
-        for h in range(num_hosts):
-            free[h] += release[t][h]
-        n = 0
-        while n < max_starts_per_bin:
-            while next_job < j and job_start[next_job] >= 0:
-                next_job += 1
-            if (next_job >= j or submit[next_job] > t
-                    or not valid[next_job]):
-                break
-            jid = next_job
-            if _pick_host(free, cores[jid], policy, t, n) is None:
-                jid = None
-                for d in range(1, backfill_depth + 1):
-                    c = next_job + d
-                    if c >= j:
-                        break
-                    if (job_start[c] >= 0 or not valid[c]
-                            or submit[c] > t):
-                        continue
-                    if any(f >= cores[c] for f in free):
-                        jid = c
-                        break
-                if jid is None:
-                    break
-            host = _pick_host(free, cores[jid], policy, t, n)
-            free[host] -= cores[jid]
-            job_start[jid] = t
-            job_host[jid] = host
-            end = min(t + max(dur[jid], 1), t_bins)
-            release[end][host] += cores[jid]
-            n += 1
-    return job_start, job_host
 
 
 # -- traces -------------------------------------------------------------------

@@ -352,6 +352,50 @@ def test_per_host_params_scalar_override_replaces_row(workload):
                                   np.full(DC.num_hosts, 400.0, np.float32))
 
 
+def test_scenario_knob_validation_at_construction():
+    """ISSUE-5 satellite: the remaining unchecked knobs are validated at the
+    concrete Scenario boundary, not only inside build_scenario_set."""
+    # backfill_depth beyond the uint32 skip-mask width, and negative depths
+    # (previously silently clamped to 0), both raise at construction
+    with pytest.raises(ValueError, match=r"\[0, 31\]"):
+        Scenario(backfill_depth=32)
+    with pytest.raises(ValueError, match=r"\[0, 31\]"):
+        Scenario(backfill_depth=-1)
+    Scenario(backfill_depth=31)                     # boundary value is fine
+    # a non-finite carbon_cap_slope would poison the per-bin effective cap
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        with pytest.raises(ValueError, match="carbon_cap_slope"):
+            Scenario(carbon_cap_base_w=1000.0, carbon_cap_slope=bad)
+    Scenario(carbon_cap_base_w=1000.0, carbon_cap_slope=-60.0)
+
+
+def test_build_scenario_set_max_backfill_pins_shape(workload):
+    """An explicit max_backfill pins the compile-time backfill window across
+    batches with different depth mixes (the optimizer's generation loop);
+    depths beyond it are rejected loudly."""
+    ss0 = build_scenario_set(workload, DC, [Scenario(name="d0")],
+                             max_backfill=4)
+    ss2 = build_scenario_set(
+        workload, DC, [Scenario(name="d2", backfill_depth=2)],
+        max_backfill=4)
+    assert ss0.max_backfill == ss2.max_backfill == 4
+    with pytest.raises(ValueError, match="max_backfill=1"):
+        build_scenario_set(
+            workload, DC, [Scenario(name="d2", backfill_depth=2)],
+            max_backfill=1)
+    with pytest.raises(ValueError, match=r"\[0, 31\]"):
+        build_scenario_set(workload, DC, [Scenario(name="d0")],
+                           max_backfill=40)
+    # same (S, max_hosts, J, max_backfill) shape -> same compiled program
+    if run_scenarios._cache_size is not None:
+        run_scenarios(ss0, max_hosts=ss0.max_hosts,
+                      t_bins=T_BINS)[0].u_th.block_until_ready()
+        before = run_scenarios._cache_size()
+        run_scenarios(ss2, max_hosts=ss2.max_hosts,
+                      t_bins=T_BINS)[0].u_th.block_until_ready()
+        assert run_scenarios._cache_size() == before
+
+
 def test_per_host_params_scaled_up_topology_uses_fleet_mean(workload):
     base = PowerParams(p_idle=jnp.asarray([60.0, 80.0] * 32, jnp.float32),
                        p_max=350.0, r=2.0)

@@ -120,3 +120,37 @@ def test_multidevice_actually_shards(workload):
     # the result is a concrete, fully-addressable array of the true S
     assert sim.u_th.shape[0] == 4
     assert np.isfinite(np.asarray(sim.u_th)).all()
+
+
+def test_optimize_sharded_matches_unsharded(workload):
+    """Optimizer smoke on the sharded evaluator: ``optimize(shard=True)``
+    must reproduce the unsharded search bit for bit — every candidate's
+    objective, the incumbent trace, and the winning operating point (the
+    ``tier1-multidevice`` CI job runs this on a forced 4-CPU-device mesh)."""
+    from repro.core.optimize import (
+        ObjectiveSpec,
+        OptimizerConfig,
+        SearchSpace,
+        optimize,
+    )
+
+    ci = make_diurnal_carbon(T_BINS, seed=1)
+    space = SearchSpace(
+        structures=(Scenario(name="wf"),
+                    Scenario(name="bf", policy="best_fit", backfill_depth=2)),
+        carbon_cap_base_w=(1500.0, 4000.0),
+        shift_bins=(0, 8))
+    obj = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.1, w_unplaced=10.0)
+    cfg = OptimizerConfig(batch_size=8, generations=2, init="grid",
+                          init_levels=2)
+    kw = dict(t_bins=T_BINS, carbon_intensity=ci, key=3, config=cfg)
+    ref = optimize(workload, DC, space, obj, **kw)
+    sh = optimize(workload, DC, space, obj, **kw, shard=True)
+    assert [c.scenario for c in ref.history] == [c.scenario for c in sh.history]
+    assert [c.objective for c in ref.history] == \
+        [c.objective for c in sh.history]
+    np.testing.assert_array_equal(ref.incumbent_objective,
+                                  sh.incumbent_objective)
+    assert ref.best.scenario == sh.best.scenario
+    assert ref.best.breakdown == sh.best.breakdown
+    assert ref.best_summary == sh.best_summary

@@ -1,0 +1,100 @@
+"""Capture a deterministic optimizer trajectory as a golden npz.
+
+Pins the scenario optimizer's full evaluation stream — every candidate's
+objective, feasibility flag, generation and lane, the incumbent convergence
+curve, and the winning operating point's knobs — bit-for-bit, so any change
+to the sampling, halving schedule, scoring, or the underlying evaluator
+shows up as a golden diff instead of a silent behavior drift.
+
+Regenerate (only) on an intentional change to optimizer numerics:
+
+    PYTHONPATH=src python tools/capture_optimize_golden.py
+
+Same pattern as ``capture_orchestrator_golden.py``: the test
+(``tests/test_optimize.py::test_trajectory_matches_golden``) re-runs this
+exact configuration and compares arrays with ``assert_array_equal``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.core.optimize import (
+    ObjectiveSpec,
+    OptimizerConfig,
+    SearchSpace,
+    optimize,
+)
+from repro.core.scenarios import Scenario
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import SurfTraceSpec, make_surf22_like
+
+OUT = (pathlib.Path(__file__).resolve().parent.parent
+       / "tests" / "golden" / "optimize_trajectory.npz")
+
+#: the pinned configuration — the golden test mirrors these exactly
+T_BINS = 72
+DC = DatacenterConfig(num_hosts=24, cores_per_host=16)
+KEY = 7
+
+
+def search_inputs():
+    """The exact (workload, intensity, space, objective, config) the golden
+    run and the golden test share."""
+    w = make_surf22_like(SurfTraceSpec(days=0.25, seed=13), DC)
+    ci = make_diurnal_carbon(T_BINS, seed=3)
+    space = SearchSpace(
+        structures=(
+            Scenario(name="wf"),
+            Scenario(name="bf", policy="best_fit", backfill_depth=4),
+            Scenario(name="h16", num_hosts=16),
+        ),
+        carbon_cap_base_w=(2_000.0, 6_000.0),
+        carbon_cap_slope=(-8.0, 0.0),
+        shift_bins=(0, 24),
+    )
+    objective = ObjectiveSpec(w_gco2_kg=1.0, w_energy_kwh=0.05, w_wait=0.2,
+                              w_unplaced=25.0, w_throttled=0.05,
+                              max_unplaced_jobs=5)
+    config = OptimizerConfig(batch_size=8, generations=3, init="grid",
+                             init_levels=2)
+    return w, ci, space, objective, config
+
+
+def run():
+    w, ci, space, objective, config = search_inputs()
+    return optimize(w, DC, space, objective, t_bins=T_BINS,
+                    carbon_intensity=ci, key=KEY, config=config)
+
+
+def main() -> None:
+    res = run()
+    np.savez(
+        OUT,
+        objective=np.array([c.objective for c in res.history], np.float64),
+        feasible=np.array([c.feasible for c in res.history], np.bool_),
+        generation=np.array([c.generation for c in res.history], np.int64),
+        lane=np.array([c.lane for c in res.history], np.int64),
+        incumbent_objective=res.incumbent_objective,
+        best_objective=np.float64(res.best.objective),
+        baseline_objective=np.float64(res.baseline.objective),
+        best_gco2_kg=np.float64(res.best.breakdown["gco2_kg"]),
+        best_num_hosts=np.int64(res.best_summary.num_hosts),
+        best_policy=np.str_(res.best_summary.policy),
+        best_backfill=np.int64(res.best_summary.backfill_depth),
+        best_shift_bins=np.int64(res.best_summary.shift_bins),
+        best_carbon_cap_base_w=np.float64(
+            np.nan if res.best_summary.carbon_cap_base_w is None
+            else res.best_summary.carbon_cap_base_w),
+        best_carbon_cap_slope=np.float64(res.best_summary.carbon_cap_slope),
+    )
+    print(f"wrote {OUT}: {res.evaluations} evaluations, "
+          f"{res.batches} batches, best objective {res.best.objective:.6f} "
+          f"(baseline {res.baseline.objective:.6f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ MARKDOWN = ["README.md", "ROADMAP.md", *sorted(
 #: modules whose docstring examples must execute
 DOCTEST_MODULES = [
     "repro.core.desim",
+    "repro.core.optimize",
     "repro.core.scenarios",
     "repro.core.codec",
     "repro.core.state",
