@@ -10,15 +10,16 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import run_surf_experiment
 from repro.core.calibrate import CalibrationSpec, calibrate_window
-from repro.core.desim import simulate_utilization
+from repro.core.desim import simulate_utilization, simulate_utilization_masked
 from repro.core.power import PowerParams
 from repro.kernels import ops
-from repro.traces.schema import DatacenterConfig
+from repro.traces.schema import DatacenterConfig, host_mask
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
 
 
@@ -28,6 +29,48 @@ def _time(fn, n=5):
     for _ in range(n):
         fn()
     return (time.time() - t0) / n
+
+
+def des_hot_path(days: float = 2.0, dc: DatacenterConfig | None = None) -> dict:
+    """Split the masked DES wall time into its two real phases.
+
+    The hot path every scenario lane pays is (a) the **placement scan** —
+    the sequential ``lax.scan`` over bins running the policy kernel and the
+    failure mask — and (b) the **post-scan readout** that expands placements
+    into the dense ``[T, H]`` utilization grid.  The split is measured with
+    XLA's own dead-code elimination: a jitted wrapper returning only
+    ``job_start`` (pure scan state) compiles the readout away, so
+
+        scan_s    = time(scan-only program)
+        readout_s = time(full program) - scan_s
+
+    This is the denominator the single-compile refactors optimize for, and
+    the baseline :mod:`analysis.roofline` prices against the hardware.
+    """
+    dc = dc or DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    mask = host_mask(dc.num_hosts, dc.num_hosts)
+    cores = jnp.asarray(dc.cores_per_host, jnp.int32)
+    kw = dict(max_hosts=dc.num_hosts, t_bins=t_bins)
+
+    # scan only: the readout never feeds job_start, so XLA DCEs it entirely
+    scan_only = jax.jit(lambda wl: simulate_utilization_masked(
+        wl, mask, cores, **kw).job_start)
+    full = jax.jit(lambda wl: simulate_utilization_masked(
+        wl, mask, cores, **kw).u_th)
+
+    scan_s = _time(lambda: scan_only(w).block_until_ready())
+    total_s = _time(lambda: full(w).block_until_ready())
+    return {
+        "days": days,
+        "t_bins": t_bins,
+        "num_hosts": dc.num_hosts,
+        "scan_s": scan_s,
+        "readout_s": max(total_s - scan_s, 0.0),
+        "total_s": total_s,
+        "scan_fraction": min(scan_s / total_s, 1.0) if total_s > 0 else None,
+    }
 
 
 def run(days: float = 7.0) -> dict:
@@ -54,7 +97,10 @@ def run(days: float = 7.0) -> dict:
     cal_s = _time(lambda: calibrate_window(u, real, spec, base), n=10)
     cand_per_s = 64 / cal_s
 
+    hot = des_hot_path()                  # scan vs readout split, 2-day trace
+
     return {
+        "des_hot_path": hot,
         "days_twinned": days,
         "closed_loop_wall_s": loop_wall,
         "paper_wall_s": 46 * 60.0,

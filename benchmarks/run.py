@@ -23,6 +23,72 @@ import m3sa_metamodel  # noqa: E402
 import e2_calibration  # noqa: E402
 import nfr2_speed  # noqa: E402
 import roofline  # noqa: E402
+import whatif_batch  # noqa: E402
+
+#: committed what-if/scenario-engine performance snapshot (regenerate with
+#: ``PYTHONPATH=src python benchmarks/run.py whatif``)
+BENCH_WHATIF = os.path.join(os.path.dirname(__file__), "BENCH_whatif.json")
+
+
+def whatif_snapshot(days: float = 0.5) -> dict:
+    """Write the scenario-engine performance snapshot to BENCH_whatif.json.
+
+    Captures the steady-state numbers the what-if refactors are judged by:
+    optimizer warm candidates/s (single compiled evaluator, asserted inside
+    :func:`whatif_batch.run_optimizer`), the mixed new-axes grid's compile
+    count (failure x PUE x price x cap — one program, asserted), mean
+    closed-loop window-step seconds, and the DES hot-path scan/readout wall
+    split that :mod:`analysis.roofline` prices against the hardware.
+
+    Wall-clock numbers are machine-dependent — the committed snapshot is a
+    reference point (backend/device count recorded alongside), not a gate;
+    the compile counts are the invariants.
+    """
+    import jax
+
+    from repro.core import run_surf_experiment
+    from repro.traces.schema import DatacenterConfig
+    from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+
+    opt = whatif_batch.run_optimizer(days=days)
+    axes = whatif_batch.run_new_axes_grid(days=days)
+    hot = nfr2_speed.des_hot_path()
+
+    # mean window-step seconds: a 1-day calibrated closed loop, per-window
+    # fused twin_step timings from the orchestrator's own records.
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=1.0), dc)
+    res = run_surf_experiment(w, dc, int(1.0 * BINS_PER_DAY), calibrate=True)
+    steps = [r.sim_seconds for r in res.records]
+
+    snap = {
+        "regenerate_with": "PYTHONPATH=src python benchmarks/run.py whatif",
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "optimizer": {
+            "days": days,
+            "candidates": opt["candidates"],
+            "compiles": opt["compiles"],
+            "warm_s": opt["warm_s"],
+            "warm_candidates_per_s": opt["cand_per_s_warm"],
+        },
+        "new_axes_grid": axes,
+        "window_step": {
+            "windows": len(steps),
+            "mean_seconds": float(np_mean(steps)),
+            "max_seconds": float(max(steps)) if steps else None,
+        },
+        "des_hot_path": hot,
+    }
+    with open(BENCH_WHATIF, "w") as f:
+        json.dump(snap, f, indent=2)
+        f.write("\n")
+    return snap
+
+
+def np_mean(xs: list) -> float:
+    return sum(xs) / len(xs) if xs else float("nan")
 
 
 def main() -> None:
@@ -75,6 +141,16 @@ def main() -> None:
         f";weights={m3['weights']}",
     ))
 
+    wi = whatif_snapshot()
+    rows.append((
+        "whatif_snapshot",
+        wi["window_step"]["mean_seconds"] * 1e6,
+        f"cand_per_s={wi['optimizer']['warm_candidates_per_s']:.1f}"
+        f";opt_compiles={wi['optimizer']['compiles']}"
+        f";axes_compiles={wi['new_axes_grid']['compiles']}"
+        f";scan_frac={wi['des_hot_path']['scan_fraction']:.2f}",
+    ))
+
     cells = roofline.load_cells()
     summ = roofline.summarize(cells)
     rows.append((
@@ -101,7 +177,12 @@ def main() -> None:
     print("\n=== Roofline (results/dryrun) ===")
     print(roofline.table(cells))
     print(json.dumps(summ, indent=2))
+    print(f"\n=== What-if snapshot (written to {BENCH_WHATIF}) ===")
+    print(json.dumps(wi, indent=2))
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) > 1 and sys.argv[1] == "whatif":
+        print(json.dumps(whatif_snapshot(), indent=2))
+    else:
+        main()

@@ -32,6 +32,13 @@ fixed-shape candidate batches must all ride ONE compiled evaluator —
 compiles for a second search after warmup.  Reports candidates/sec and the
 objective reached vs an exhaustive grid of equal candidate budget.
 
+A sixth case sweeps the *newest axes* together: a (host-failure schedules x
+dynamic-PUE models x power caps) grid against carbon, ambient and spot-price
+traces — single-compile **asserted** (failure windows are traced ``[S, H]``
+schedules, PUE parameters traced ``[S]`` scalars), including across
+re-parameterized grids, plus bit-for-bit shard_map equality when the
+runtime has >= 2 devices.
+
     PYTHONPATH=src python benchmarks/whatif_batch.py
 """
 
@@ -52,9 +59,12 @@ from repro.core.optimize import (
     score_batch,
 )
 from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
+from repro.runtime.fault import DEGRADED, OUTAGE, HostFailure
 from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.price import make_diurnal_price
 from repro.traces.schema import DatacenterConfig, host_mask
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+from repro.traces.thermal import make_diurnal_ambient
 
 
 def run(days: float = 2.0, num_scenarios: int = 16) -> dict:
@@ -217,6 +227,90 @@ def run_carbon_grid(days: float = 1.0) -> dict:
         "compiles": compiles,
         "gco2_min_kg": float(gco2.min() / 1e3),
         "gco2_max_kg": float(gco2.max() / 1e3),
+    }
+
+
+def run_new_axes_grid(days: float = 1.0) -> dict:
+    """(failure x dynamic-PUE x spot-price x power-cap) grid, ONE program.
+
+    The PR-6 axes ride the same traced lanes as caps/shifts/policies: failure
+    windows are ``[S, max_hosts]`` int32 schedules, the PUE model is four
+    ``[S]`` scalars, and the ambient/price traces are shared ``[T]`` operands
+    next to grid carbon.  Single-compile is **asserted**, including for a
+    re-parameterized grid of the same shape (different windows, coefficients
+    and caps — no retrace).  With >= 2 devices the same mixed batch is also
+    pushed through ``run_scenarios(shard=True)`` and checked bit for bit
+    against the vmap path.
+    """
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    intensity = make_diurnal_carbon(t_bins)
+    ambient = make_diurnal_ambient(t_bins, seed=2)
+    price = make_diurnal_price(t_bins, seed=3)
+
+    def grid(shift: int) -> list[Scenario]:
+        # 2 failure sets x 2 PUE models x 2 caps = S=8; `shift` re-seeds the
+        # windows/coefficients for the no-retrace check (same shapes).
+        scs = []
+        for fi in (0, 1):
+            fails = () if fi == 0 else (
+                HostFailure(host=4 + shift, start_bin=20 + shift,
+                            end_bin=80 + shift, kind=OUTAGE),
+                HostFailure(host=40, start_bin=60, end_bin=160 + shift,
+                            kind=DEGRADED))
+            for pb, plc in ((1.0, 0.0), (1.12 + 0.01 * shift, 0.08)):
+                for cap in (45_000.0, 70_000.0 + 100.0 * shift):
+                    scs.append(Scenario(
+                        name=f"f{fi}-p{pb:.2f}-c{cap:.0f}",
+                        failures=fails, pue_base=pb, pue_load_coeff=plc,
+                        pue_amb_coeff=0.004 if plc else 0.0,
+                        power_cap_w=cap))
+        return scs
+
+    jax.clear_caches()
+    cache = run_scenarios._cache_size
+    kw = dict(t_bins=t_bins, carbon_intensity=intensity,
+              ambient_c=ambient, price=price)
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, grid(0))
+    sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, **kw)
+    pred.energy_cost.block_until_ready()
+    grid_s = time.time() - t0
+    compiles = cache() if cache is not None else None
+
+    ss2 = build_scenario_set(w, dc, grid(3))
+    _, pred2 = run_scenarios(ss2, max_hosts=ss2.max_hosts, **kw)
+    pred2.energy_cost.block_until_ready()
+    compiles_after = cache() if cache is not None else None
+    if compiles is not None:
+        # the acceptance gate: failures/PUE/price are traced axes — the whole
+        # mixed grid is ONE compiled program and re-parameterizing it (new
+        # outage windows, coefficients, caps) does not retrace.
+        assert compiles == 1, f"new-axes grid compiled {compiles}x, want 1"
+        assert compiles_after == compiles, "re-parameterized grid retraced"
+
+    sharded_exact = None
+    if len(jax.devices()) >= 2:
+        sh_sim, sh_pred = run_scenarios(ss, max_hosts=ss.max_hosts, **kw,
+                                        shard=True)
+        sharded_exact = all(
+            bool((np.asarray(a) == np.asarray(b)).all())
+            for a, b in zip(jax.tree.leaves((sim, pred)),
+                            jax.tree.leaves((sh_sim, sh_pred))))
+        assert sharded_exact, "sharded new-axes grid diverged from vmap"
+
+    cost = np.asarray(pred.energy_cost, np.float64).sum(axis=1)
+    pue = np.asarray(pred.pue)
+    return {
+        "grid": len(ss.names),
+        "t_bins": t_bins,
+        "grid_s": grid_s,
+        "compiles": compiles,
+        "cost_min_usd": float(cost.min()),
+        "cost_max_usd": float(cost.max()),
+        "mean_pue_max": float(pue.mean(axis=1).max()),
+        "sharded_bitwise_equal": sharded_exact,
     }
 
 
@@ -386,6 +480,19 @@ def main() -> None:
               "asserted incl. re-parameterization)")
     print(f"  per-scenario gCO2 spread: {c['gco2_min_kg']:.1f} - "
           f"{c['gco2_max_kg']:.1f} kgCO2")
+
+    a = run_new_axes_grid()
+    print(f"\nnew-axes grid: (2 failure sets x 2 PUE models x 2 caps) = "
+          f"S={a['grid']} + price/carbon/ambient traces, {a['t_bins']} bins: "
+          f"{a['grid_s']:.2f} s")
+    if a["compiles"] is not None:
+        print(f"  compiled programs: {a['compiles']} (PASS: single compile, "
+              "asserted incl. re-parameterization)")
+    print(f"  per-scenario energy cost spread: ${a['cost_min_usd']:.2f} - "
+          f"${a['cost_max_usd']:.2f}; worst mean PUE {a['mean_pue_max']:.3f}")
+    if a["sharded_bitwise_equal"] is not None:
+        print(f"  sharded bit-for-bit vs vmap: "
+              f"{'PASS' if a['sharded_bitwise_equal'] else 'FAIL'}")
 
     o = run_optimizer()
     print(f"\nscenario optimizer: {o['candidates']} fresh candidates "

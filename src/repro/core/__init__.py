@@ -81,7 +81,9 @@ from repro.core.state import (
     twin_step_jit,
 )
 from repro.core.telemetry import (
+    AMBIENT_KEY,
     CARBON_INTENSITY_KEY,
+    PRICE_KEY,
     TelemetryStore,
     TelemetryWindow,
     clip_to_window,
@@ -118,8 +120,8 @@ __all__ = [
     "SimSlice", "TelemetrySlice", "TwinConfig", "TwinState", "WindowOutput",
     "empty_telemetry", "init_twin_state", "load_state", "make_telemetry",
     "save_state", "twin_step", "twin_step_jit",
-    "CARBON_INTENSITY_KEY", "TelemetryStore", "TelemetryWindow",
-    "clip_to_window",
+    "AMBIENT_KEY", "CARBON_INTENSITY_KEY", "PRICE_KEY", "TelemetryStore",
+    "TelemetryWindow", "clip_to_window",
     "DigitalTwin", "TraceGroundTruth", "TwinRunResult", "run_surf_experiment",
     "fleet_step", "index_twin_state", "run_fleet", "stack_twin_states",
 ]

@@ -183,6 +183,9 @@ def simulate_utilization_masked(
     backfill_depth: "Array | int | None" = None,
     max_backfill: int = 0,
     force_chunked_readout: bool = False,
+    fail_start: "Array | None" = None,
+    fail_end: "Array | None" = None,
+    fail_kill: "Array | None" = None,
 ) -> SimOutput:
     """Masked-host-axis DES core (trace-level; callers jit/vmap it).
 
@@ -213,6 +216,20 @@ def simulate_utilization_masked(
     leaving it 0 compiles the backfill machinery out entirely, making the
     default path structurally identical to the pre-policy-kernel scheduler.
 
+    Failure schedules (``fail_start`` / ``fail_end`` / ``fail_kill``, all
+    ``[max_hosts]``, together or not at all) add a *time-varying* layer to
+    the host mask: during ``[fail_start[h], fail_end[h])`` host ``h``
+    accepts no new placements, and if ``fail_kill[h]`` its running jobs
+    are killed at the window start (cores return when the host does, at
+    ``fail_end``; killed jobs are not re-queued) — a hard outage.  With
+    ``fail_kill[h]`` false the host merely drains (running jobs finish
+    normally).  Hosts that never fail carry the sentinel start
+    ``np.iinfo(int32).max`` (see :func:`repro.runtime.fault.failure_arrays`),
+    making every window comparison false — a disabled lane in a mixed
+    batch computes bit-for-bit the no-failure schedule.  Presence of the
+    arrays is *structural* (a Python-level ``is not None``), so the
+    default program is unchanged when the axis is off.
+
     Placement (the event-driven part) is a bounded policy-kernel loop inside
     the scan body; utilization accumulation is a segment-sum scatter over
     host assignments.  Utilization is *independent of power-model
@@ -230,6 +247,14 @@ def simulate_utilization_masked(
     backfill_depth = jnp.asarray(
         0 if backfill_depth is None else backfill_depth, jnp.int32)
     depth = jnp.minimum(backfill_depth, max_backfill)
+    if (fail_start is None) != (fail_end is None) or \
+            (fail_start is None) != (fail_kill is None):
+        raise ValueError(
+            "fail_start/fail_end/fail_kill must be supplied together")
+    if fail_start is not None:
+        fail_start = jnp.asarray(fail_start, jnp.int32)
+        fail_end = jnp.asarray(fail_end, jnp.int32)
+        fail_kill = jnp.asarray(fail_kill, jnp.bool_)
 
     submit = w.submit_bin
     dur = jnp.maximum(w.duration_bins, 1)
@@ -282,10 +307,17 @@ def simulate_utilization_masked(
     # max_starts_per_bin placements.
     def place_one(carry):
         free, next_job, skip, blocked, t, n, buf_jid, buf_host = carry
+        # failed hosts (outage or drain) accept no new placements during
+        # their window; sentinel starts make this the plain mask.
+        if fail_start is not None:
+            online = host_mask & jnp.logical_not(
+                (fail_start <= t) & (t < fail_end))
+        else:
+            online = host_mask
         jid_h = jnp.minimum(next_job, j - 1)
         # re-checked inside the body: finished vmap lanes degrade to no-ops.
         eligible = head_ready(next_job, blocked, t)
-        head_fits = jnp.any((free >= cores[jid_h]) & host_mask)
+        head_fits = jnp.any((free >= cores[jid_h]) & online)
         place_head = eligible & head_fits
 
         if max_backfill > 0:
@@ -298,7 +330,7 @@ def simulate_utilization_masked(
             elig_c = ((cand < j) & (submit[jid_c] <= t) & valid[jid_c]
                       & jnp.logical_not(already) & (d_off <= depth))
             fits_c = ((free[None, :] >= cores[jid_c][:, None])
-                      & host_mask[None, :])                          # [K, H]
+                      & online[None, :])                             # [K, H]
             startable = elig_c & jnp.any(fits_c, axis=1)             # [K]
             any_bf = jnp.any(startable)
             d_sel = jnp.argmax(startable)        # first startable offset - 1
@@ -309,7 +341,7 @@ def simulate_utilization_masked(
             jid = jid_h
 
         need = cores[jid]
-        fits = (free >= need) & host_mask
+        fits = (free >= need) & online
         host = _policy_host(free, fits, policy_id, t,
                             jnp.asarray(n, jnp.int32), max_hosts)
         do_place = place_head | place_bf
@@ -362,7 +394,19 @@ def simulate_utilization_masked(
         placed = buf_jid < j
         job_host = state["job_host"].at[buf_jid].set(buf_host, mode="drop")
         job_start = state["job_start"].at[buf_jid].set(t, mode="drop")
-        end_bin = jnp.minimum(t + dur[jj], t_bins)
+        end_nom = t + dur[jj]
+        if fail_start is not None:
+            # kill rule, applied at placement time: a job landing on a
+            # kill-host *before* its outage and running into it dies at
+            # fail_start, and its cores come back with the host at
+            # fail_end.  The `t < fail_start` guard keeps post-recovery
+            # placements alive (for them t >= fail_end > fail_start).
+            killed = (fail_kill[buf_host] & (t < fail_start[buf_host])
+                      & (end_nom > fail_start[buf_host]))
+            end_bin = jnp.minimum(
+                jnp.where(killed, fail_end[buf_host], end_nom), t_bins)
+        else:
+            end_bin = jnp.minimum(end_nom, t_bins)
         release = state["release"].at[end_bin, buf_host].add(
             jnp.where(placed, cores[jj], 0))
 
@@ -387,10 +431,21 @@ def simulate_utilization_masked(
     st = job_start[:, None]                            # [J, 1]
     du = dur[:, None]
     seg = jnp.where(started, job_host, max_hosts)      # sentinel bucket
+    if fail_start is not None:
+        # per-job effective end: killed jobs (placed pre-outage on a
+        # kill-host, overlapping its window) stop at fail_start.  Mirrors
+        # the release-table kill rule above.
+        h_j = jnp.where(started, job_host, 0)
+        fs_j = fail_start[h_j][:, None]                # [J, 1]
+        kill_j = (fail_kill[h_j] & started)[:, None]
+        killed_j = kill_j & (st < fs_j) & (st + du > fs_j)
+        end_eff = jnp.where(killed_j, fs_j, st + du)
+    else:
+        end_eff = st + du
 
     def readout_block(tt):
         # tt [B] with -1 padding past the horizon (matches nothing below)
-        running = started[:, None] & (tt >= st) & (tt < st + du)   # [J, B]
+        running = started[:, None] & (tt >= st) & (tt < end_eff)   # [J, B]
         phase = jnp.clip((tt - st) * u_phases // jnp.maximum(du, 1),
                          0, u_phases - 1)
         u_job = jnp.take_along_axis(w.util_levels, phase, axis=1)  # [J, B]
@@ -485,12 +540,15 @@ class Prediction:
     efficiency: Array     # [T] TFLOPs per kWh (paper Fig. 5C)
     gco2: Array | None = None           # [T] per-bin carbon (sust. #3)
     power_demand_w: Array | None = None  # [T] pre-cap demand (cap analysis)
+    pue: Array | None = None            # [T] dynamic PUE (facility/IT ratio)
+    energy_cost: Array | None = None    # [T] per-bin cost ($, spot price)
 
 
 jax.tree_util.register_pytree_node(
     Prediction,
     lambda p: ((p.power_w, p.energy_kwh, p.tflops, p.utilization,
-                p.efficiency, p.gco2, p.power_demand_w), None),
+                p.efficiency, p.gco2, p.power_demand_w, p.pue,
+                p.energy_cost), None),
     lambda _, c: Prediction(*c),
 )
 
@@ -501,23 +559,47 @@ def predict_metrics(
     dc: DatacenterConfig,
     model: str = "opendc",
     carbon_intensity: Array | None = None,
+    ambient_c: Array | None = None,
+    price: Array | None = None,
+    pue: "object | None" = None,
 ) -> Prediction:
     """Map a utilization field to the paper's metric set (Fig. 5A/B/C).
 
     ``carbon_intensity`` (``[T]`` gCO2/kWh, broadcastable against the power
     trace) additionally fills the per-bin ``gco2`` leaf; without it the
     prediction is bit-for-bit the pre-carbon output with ``gco2=None``.
+
+    ``pue`` (a :class:`repro.traces.thermal.PUEParams`) turns on the
+    dynamic cooling model: the power trace becomes *facility* watts
+    (IT power x PUE, with PUE a traced function of mean utilization and
+    the optional ``ambient_c`` °C trace) and the per-bin PUE fills the
+    ``pue`` leaf.  ``price`` (``[T]`` $/kWh) fills ``energy_cost`` from
+    the (facility) energy.  All three default off, leaving the legacy
+    structure untouched.
     """
+    from repro.traces.thermal import dynamic_pue
+
     power = datacenter_power(u_th, params, model=model)
-    e = energy_kwh(power, SAMPLE_SECONDS)
     util = jnp.mean(u_th, axis=-1)
+    pue_t = None
+    if pue is not None:
+        pue_t = dynamic_pue(
+            util,
+            None if ambient_c is None else jnp.asarray(ambient_c),
+            pue)
+        power = power * pue_t
+    e = energy_kwh(power, SAMPLE_SECONDS)
     tflops = util * dc.peak_tflops
     eff = tflops / jnp.maximum(e, 1e-9)
     gco2 = None
     if carbon_intensity is not None:
         gco2 = carbon_gco2(e, jnp.asarray(carbon_intensity))
+    cost = None
+    if price is not None:
+        cost = e * jnp.asarray(price, e.dtype)
     return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
-                      utilization=util, efficiency=eff, gco2=gco2)
+                      utilization=util, efficiency=eff, gco2=gco2,
+                      pue=pue_t, energy_cost=cost)
 
 
 def simulate(

@@ -27,6 +27,8 @@ class ProposalKind(enum.Enum):
     REBALANCE = "rebalance"                # major
     SCHEDULER_CHANGE = "scheduler_change"  # major: swap placement policy
     CARBON_REDUCTION = "carbon_reduction"  # major: cap/shift for lower gCO2
+    COST_REDUCTION = "cost_reduction"      # major: cap/shift for lower $ cost
+    RESILIENCE = "resilience"              # major: config rides out failures
 
 
 #: proposal kinds the orchestrator may apply without a human (minor changes)
@@ -128,6 +130,7 @@ def propose_from_scenario(
     min_wait_improvement_frac: float = 0.10,
     max_energy_regression_frac: float = 0.02,
     min_carbon_saving_frac: float = 0.02,
+    min_cost_saving_frac: float = 0.02,
 ) -> list[Proposal]:
     """Map a batched what-if candidate's summary to operator proposals.
 
@@ -149,6 +152,17 @@ def propose_from_scenario(
     CARBON_REDUCTION proposal naming the knob that did it (time shift,
     carbon-aware cap, or topology) — the carbon-driven action the HITL gate
     exists to approve.
+
+    Cost: when the sweep ran against an electricity spot-price trace (both
+    ``energy_cost`` fields set), a candidate that cuts the bill by at least
+    ``min_cost_saving_frac`` without breaking SLOs becomes a COST_REDUCTION
+    proposal — cost and carbon rules fire independently, so a candidate
+    that wins on both surfaces twice, each with its own evidence.
+
+    Resilience: a candidate evaluated *under failure windows*
+    (``failure_events > 0``) that still meets the baseline's SLOs becomes a
+    RESILIENCE proposal — evidence the current configuration rides out the
+    modeled outages/drains without operator action.
     """
     out: list[Proposal] = []
     slo_ok = (
@@ -235,6 +249,46 @@ def propose_from_scenario(
                     "shift_bins": summary.shift_bins,
                     "carbon_cap_base_w": summary.carbon_cap_base_w,
                     "energy_kwh": summary.energy_kwh}))
+    # cost-driven actions: only comparable when both lanes were priced
+    c_base, c_cand = baseline.energy_cost, summary.energy_cost
+    if (c_base is not None and c_cand is not None
+            and math.isfinite(c_base) and math.isfinite(c_cand) and slo_ok
+            and c_base - c_cand > min_cost_saving_frac * max(abs(c_base), 1e-9)):
+        knobs = []
+        if summary.shift_bins != baseline.shift_bins:
+            knobs.append(f"shift deferrable jobs by {summary.shift_bins} bins")
+        if summary.power_cap_w is not None:
+            knobs.append(f"cap {summary.power_cap_w/1e3:.1f} kW")
+        if summary.carbon_cap_base_w is not None:
+            knobs.append(
+                f"carbon-aware cap {summary.carbon_cap_base_w/1e3:.1f} kW "
+                f"{summary.carbon_cap_slope:+.1f} W/(gCO2/kWh)")
+        if summary.num_hosts != baseline.num_hosts:
+            knobs.append(f"{summary.num_hosts} hosts")
+        out.append(Proposal(
+            ProposalKind.COST_REDUCTION, window,
+            f"what-if '{summary.name}': {', '.join(knobs) or 'candidate'} "
+            f"cuts energy cost to ${c_cand:.2f} (vs ${c_base:.2f}, "
+            f"-{(c_base - c_cand)/max(abs(c_base), 1e-9):.1%}) at "
+            f"{summary.energy_kwh:.1f} kWh (vs {baseline.energy_kwh:.1f})",
+            impact={"scenario": summary.name,
+                    "energy_cost": c_cand,
+                    "cost_saving": c_base - c_cand,
+                    "shift_bins": summary.shift_bins,
+                    "energy_kwh": summary.energy_kwh}))
+    # resilience: the candidate was stress-tested under failure windows and
+    # still meets the baseline's SLOs — worth surfacing to the operator.
+    if summary.failure_events > 0 and slo_ok:
+        out.append(Proposal(
+            ProposalKind.RESILIENCE, window,
+            f"what-if '{summary.name}' rides out {summary.failure_events} "
+            f"host failure window(s): {summary.unplaced_jobs} unplaced "
+            f"(baseline {baseline.unplaced_jobs}), p99 queue "
+            f"{summary.p99_queue:.0f} (baseline {baseline.p99_queue:.0f})",
+            impact={"scenario": summary.name,
+                    "failure_events": summary.failure_events,
+                    "unplaced_jobs": summary.unplaced_jobs,
+                    "p99_queue": summary.p99_queue}))
     cap = summary.power_cap_w
     carbon_capped = summary.carbon_cap_base_w is not None
     if ((carbon_capped or (cap is not None and math.isfinite(cap)))
@@ -292,7 +346,8 @@ def propose_from_optimum(
         and summary.shift_bins == baseline.shift_bins
         and summary.power_cap_w == baseline.power_cap_w
         and summary.carbon_cap_base_w == baseline.carbon_cap_base_w
-        and summary.carbon_cap_slope == baseline.carbon_cap_slope)
+        and summary.carbon_cap_slope == baseline.carbon_cap_slope
+        and summary.failure_events == baseline.failure_events)
     if not out and improved and not same_config:
         knobs = []
         if summary.policy != baseline.policy or \
@@ -311,8 +366,23 @@ def propose_from_optimum(
             knobs.append(
                 f"carbon-aware cap {summary.carbon_cap_base_w/1e3:.1f} kW "
                 f"{summary.carbon_cap_slope:+.1f} W/(gCO2/kWh)")
+        # pick the kind from the breakdown: a winner whose gain is dollars
+        # (cost down, carbon flat or worse) is a COST_REDUCTION; everything
+        # else keeps the historical CARBON_REDUCTION label.
+        def _gain(key):
+            try:
+                return (float(baseline_breakdown.get(key))
+                        - float(breakdown.get(key)))
+            except (TypeError, ValueError):
+                return math.nan
+        cost_gain = _gain("energy_cost")
+        carbon_gain = _gain("gco2_kg")
+        kind = (ProposalKind.COST_REDUCTION
+                if math.isfinite(cost_gain) and cost_gain > 0
+                and (not math.isfinite(carbon_gain) or carbon_gain <= 0)
+                else ProposalKind.CARBON_REDUCTION)
         out.append(Proposal(
-            ProposalKind.CARBON_REDUCTION, window,
+            kind, window,
             f"searched optimum '{summary.name}': "
             f"{', '.join(knobs) or 'candidate'} "
             f"improves the operating objective to {objective:.3f} "

@@ -86,6 +86,7 @@ class ObjectiveSpec:
     """Scalarized operator objective the search minimizes.
 
     ``total = w_gco2_kg * gCO2[kg] + w_energy_kwh * energy[kWh]
+    + w_cost * energy_cost[$]
     + w_wait * max(0, mean_wait - wait_target_bins)
     + w_makespan * max(0, makespan - makespan_target_bins)
     + w_unplaced * unplaced_jobs + w_throttled * cap_exceeded_bins``
@@ -97,7 +98,11 @@ class ObjectiveSpec:
     them is masked infeasible (objective ``+inf``) and can never become the
     incumbent, no matter its score.  Weights must be finite and >= 0 (this
     is a cost, not a reward), and at least one must be positive.  A non-zero
-    ``w_gco2_kg`` requires a carbon-intensity trace at :func:`optimize` time.
+    ``w_gco2_kg`` requires a carbon-intensity trace at :func:`optimize`
+    time; a non-zero ``w_cost`` (or a ``max_energy_cost`` bound) requires a
+    spot-price trace the same way — ``w_cost`` weights *dollars*, so with
+    both carbon and cost active the search trades them at the chosen
+    exchange rate.
     """
 
     w_gco2_kg: float = 1.0          # per kg CO2
@@ -106,15 +111,17 @@ class ObjectiveSpec:
     w_makespan: float = 0.0         # per makespan bin above target
     w_unplaced: float = 100.0       # per valid job never started
     w_throttled: float = 0.0        # per bin where the cap throttled demand
+    w_cost: float = 0.0             # per $ of spot-priced energy
     wait_target_bins: float = 0.0
     makespan_target_bins: float = 0.0
     max_unplaced_jobs: int | None = None
     max_mean_wait_bins: float | None = None
     max_p99_wait_bins: float | None = None
     max_peak_power_w: float | None = None
+    max_energy_cost: float | None = None
 
     _WEIGHTS = ("w_gco2_kg", "w_energy_kwh", "w_wait", "w_makespan",
-                "w_unplaced", "w_throttled")
+                "w_unplaced", "w_throttled", "w_cost")
 
     def __post_init__(self):
         for k in (*self._WEIGHTS, "wait_target_bins", "makespan_target_bins"):
@@ -129,6 +136,10 @@ class ObjectiveSpec:
             v = getattr(self, k)
             if v is not None and (math.isnan(v) or v < 0):
                 raise ValueError(f"objective {k} must be >= 0, got {v}")
+        # cost may legitimately be negative (spot markets pay consumers),
+        # so its bound is only required to be non-NaN
+        if self.max_energy_cost is not None and math.isnan(self.max_energy_cost):
+            raise ValueError("objective max_energy_cost must not be NaN")
 
 
 #: per-candidate fields :func:`score_batch` reports (all ``[S]`` float64)
@@ -136,7 +147,7 @@ BREAKDOWN_FIELDS = (
     "gco2_kg", "energy_kwh", "mean_wait_bins", "p99_wait_bins",
     "makespan_bins", "unplaced_jobs", "peak_power_w", "cap_exceeded_bins",
     "penalty_wait", "penalty_makespan", "penalty_unplaced",
-    "penalty_throttled", "total",
+    "penalty_throttled", "energy_cost", "total",
 )
 
 
@@ -184,6 +195,15 @@ def score_batch(spec: ObjectiveSpec, ss, sim, pred, *,
             "gCO2/kWh or set w_gco2_kg=0")
     else:
         gco2_kg = np.full(s_n, np.nan)
+    if pred.energy_cost is not None:
+        cost = np.asarray(pred.energy_cost, np.float64).sum(axis=1)
+    elif spec.w_cost > 0 or spec.max_energy_cost is not None:
+        raise ValueError(
+            "objective prices energy cost (w_cost/max_energy_cost) but the "
+            "sweep ran without a price trace — pass price=[t_bins] $/kWh "
+            "or drop the cost terms")
+    else:
+        cost = np.full(s_n, np.nan)
 
     pen_wait = spec.w_wait * np.maximum(mean_wait - spec.wait_target_bins, 0.0)
     pen_mk = spec.w_makespan * np.maximum(
@@ -194,6 +214,8 @@ def score_batch(spec: ObjectiveSpec, ss, sim, pred, *,
              + spec.w_energy_kwh * energy)
     if spec.w_gco2_kg > 0:
         total = total + spec.w_gco2_kg * gco2_kg
+    if spec.w_cost > 0:
+        total = total + spec.w_cost * cost
 
     feasible = np.isfinite(total)
     if spec.max_unplaced_jobs is not None:
@@ -204,6 +226,8 @@ def score_batch(spec: ObjectiveSpec, ss, sim, pred, *,
         feasible &= p99_wait <= spec.max_p99_wait_bins
     if spec.max_peak_power_w is not None:
         feasible &= peak_power <= spec.max_peak_power_w
+    if spec.max_energy_cost is not None:
+        feasible &= cost <= spec.max_energy_cost
 
     return {
         "gco2_kg": gco2_kg, "energy_kwh": energy,
@@ -212,6 +236,7 @@ def score_batch(spec: ObjectiveSpec, ss, sim, pred, *,
         "peak_power_w": peak_power, "cap_exceeded_bins": cap_exceeded,
         "penalty_wait": pen_wait, "penalty_makespan": pen_mk,
         "penalty_unplaced": pen_unp, "penalty_throttled": pen_thr,
+        "energy_cost": cost,
         "total": total, "feasible": feasible,
         "objective": np.where(feasible, total, np.inf),
     }
@@ -396,7 +421,17 @@ class OptimizeResult:
 
 
 def _scenario_from_knobs(space: SearchSpace, kn: _Knobs, name: str) -> Scenario:
-    tmpl = Scenario() if kn.struct < 0 else space.structures[kn.struct]
+    if kn.struct < 0:
+        # the reserved baseline lane: the PUE model describes the *facility*
+        # (same building for every candidate), not an intervention knob — a
+        # bare-IT baseline would beat every facility-priced candidate on
+        # energy by construction.  Inherit structures[0]'s PUE model.
+        t0 = space.structures[0]
+        tmpl = Scenario(pue_base=t0.pue_base, pue_amb_coeff=t0.pue_amb_coeff,
+                        pue_amb_ref=t0.pue_amb_ref,
+                        pue_load_coeff=t0.pue_load_coeff)
+    else:
+        tmpl = space.structures[kn.struct]
     over: dict = {}
     # a None knob value on an active axis means "inherit the template" —
     # the baseline lane carries no sampled values by construction
@@ -501,6 +536,8 @@ def optimize(
     t_bins: int,
     base_params: PowerParams = PowerParams(),
     carbon_intensity: "np.ndarray | Array | None" = None,
+    ambient_c: "np.ndarray | Array | None" = None,
+    price: "np.ndarray | Array | None" = None,
     key: "int | Array" = 0,
     config: OptimizerConfig = OptimizerConfig(),
     model: str = "opendc",
@@ -532,9 +569,25 @@ def optimize(
         raise ValueError(
             "objective weights gCO2 (w_gco2_kg > 0) but no carbon_intensity "
             "trace was supplied — pass one or set w_gco2_kg=0")
+    if price is None and (objective.w_cost > 0
+                          or objective.max_energy_cost is not None):
+        raise ValueError(
+            "objective prices energy cost (w_cost/max_energy_cost) but no "
+            "price trace was supplied — pass price=[t_bins] $/kWh or drop "
+            "the cost terms")
+    if ambient_c is None and any(s.pue_amb_coeff != 0.0
+                                 for s in space.structures):
+        raise ValueError(
+            "search-space structure(s) set pue_amb_coeff but no ambient_c "
+            "trace was supplied — pass ambient_c=[t_bins] °C")
 
     mh = space.max_hosts(dc)
     mb = space.max_backfill()
+    # axis-presence flags are jit cache-key aux on the ScenarioSet: pin them
+    # from the *space* (not per batch) so a generation whose mutations happen
+    # to drop every failure/PUE lane cannot flip the flag and recompile
+    has_failures = any(s.failures for s in space.structures)
+    pue_on = any(s.pue_base is not None for s in space.structures)
     s_lanes = config.batch_size
     per_batch = s_lanes - 2              # lanes 0/1 = baseline/incumbent
     baseline_kn = _Knobs(struct=-1)
@@ -567,18 +620,28 @@ def optimize(
                 "incumbent" if i == 1 else f"g{gen}b{batch}-l{i}"))
             for i, kn in enumerate(lanes)]
         ss = build_scenario_set(workload, dc, scenarios, base_params,
-                                max_hosts=mh, max_backfill=mb)
+                                max_hosts=mh, max_backfill=mb,
+                                has_failures=has_failures, pue_on=pue_on)
         sim, pred = run_scenarios(
             ss, max_hosts=mh, t_bins=t_bins,
             max_starts_per_bin=max_starts_per_bin, model=model,
-            carbon_intensity=carbon_intensity, shard=shard, mesh=mesh)
+            carbon_intensity=carbon_intensity, ambient_c=ambient_c,
+            price=price, shard=shard, mesh=mesh)
         scores = score_batch(objective, ss, sim, pred, t_bins=t_bins)
         for i, kn in enumerate(lanes):
             cand = Candidate(
                 scenario=scenarios[i],
                 objective=float(scores["objective"][i]),
                 feasible=bool(scores["feasible"][i]),
-                breakdown={f: float(scores[f][i]) for f in BREAKDOWN_FIELDS},
+                # no-price sweeps mark cost absent with None, not NaN —
+                # candidates are compared with == and NaN != NaN would make
+                # otherwise-identical breakdowns unequal (gco2_kg keeps its
+                # historical NaN-when-absent convention).
+                breakdown={
+                    f: (None if f == "energy_cost"
+                        and not np.isfinite(scores[f][i])
+                        else float(scores[f][i]))
+                    for f in BREAKDOWN_FIELDS},
                 generation=gen, lane=i)
             history.append(cand)
             history_kn.append(kn)

@@ -60,9 +60,13 @@ from repro.core.state import (
     twin_step_jit,
 )
 from repro.traces.carbon import validate_carbon_intensity
+from repro.traces.price import validate_price
+from repro.traces.thermal import PUEParams, validate_ambient
 from repro.core.slo import NFR1, BiasTracker, SLOMonitor
 from repro.core.telemetry import (
+    AMBIENT_KEY,
     CARBON_INTENSITY_KEY,
+    PRICE_KEY,
     TelemetryStore,
     TelemetryWindow,
 )
@@ -79,6 +83,10 @@ class OrchestratorConfig:
     power_cap_w: float | None = None
     power_model: str = "opendc"
     kernel_backend: str = "xla"          # "pallas" on TPU deployments
+    #: facility PUE model: window predictions and what-if sweeps report
+    #: facility power (IT x PUE(load, ambient)) instead of bare IT draw.
+    #: Scenarios that set their own ``pue_base`` override this default.
+    pue: PUEParams | None = None
 
 
 @dataclasses.dataclass
@@ -100,6 +108,7 @@ class WindowRecord:
     prediction: Prediction
     mape: float | None = None        # filled when telemetry lands
     gco2: float | None = None        # window carbon (needs intensity trace)
+    energy_cost: float | None = None  # window cost in $ (needs price trace)
     proposals: int = 0
 
 
@@ -156,21 +165,37 @@ class Orchestrator:
         base_params: PowerParams = PowerParams(),
         gate: HITLGate | None = None,
         carbon_intensity: "np.ndarray | None" = None,
+        ambient_c: "np.ndarray | None" = None,
+        price: "np.ndarray | None" = None,
     ):
         self.workload = workload
         self.dc = dc
         self.t_bins = int(t_bins)
         self.cfg = cfg
         self.base_params = base_params
-        # full-horizon grid carbon-intensity forecast ([t_bins] gCO2/kWh);
-        # window predictions gain gCO2 and what-if sweeps become carbon-aware.
-        # Per-window *measured* intensity in telemetry extras
-        # (telemetry.CARBON_INTENSITY_KEY) overrides this forecast when
-        # scoring a window.
+        # full-horizon forecasts ([t_bins] each): grid carbon intensity
+        # (gCO2/kWh), outside-air temperature (deg C, feeds the dynamic-PUE
+        # model) and electricity spot price ($/kWh).  Window predictions
+        # gain gCO2 / facility PUE / energy cost and what-if sweeps become
+        # carbon-, cooling- and cost-aware.  Per-window *measured* values in
+        # telemetry extras (telemetry.CARBON_INTENSITY_KEY / AMBIENT_KEY /
+        # PRICE_KEY) override these forecasts when scoring a window.
         if carbon_intensity is not None:
             carbon_intensity = validate_carbon_intensity(
                 np.asarray(carbon_intensity), self.t_bins)
         self.carbon_intensity = carbon_intensity
+        if ambient_c is not None:
+            ambient_c = validate_ambient(np.asarray(ambient_c), self.t_bins)
+        self.ambient_c = ambient_c
+        if price is not None:
+            price = validate_price(np.asarray(price), self.t_bins)
+        self.price = price
+        if (cfg.pue is not None and cfg.pue.amb_coeff > 0.0
+                and ambient_c is None):
+            raise ValueError(
+                "OrchestratorConfig.pue has amb_coeff > 0 but no ambient_c "
+                "trace was supplied — pass ambient_c=[t_bins] deg C or use "
+                "a load-only PUE model (amb_coeff=0)")
         self.store = TelemetryStore(cfg.bins_per_window)
         self.gate = gate or HITLGate()
         self.records: list[WindowRecord] = []
@@ -183,6 +208,7 @@ class Orchestrator:
             power_model=cfg.power_model,
             kernel_backend=cfg.kernel_backend,
             slos=(NFR1,),
+            pue=cfg.pue,
         )
         self.state: TwinState = init_twin_state(self.twin_cfg, base_params)
         self._sim: SimOutput | None = None
@@ -269,8 +295,32 @@ class Orchestrator:
             # of the sustainability record.
             ci_meas = validate_carbon_intensity(np.asarray(ci_meas))
 
+        # measured spot price / ambient from telemetry extras, same
+        # shape-check fallback and loud validation as carbon above.
+        w_bins = sl.stop - sl.start
+        pr_meas = tw.extras.get(PRICE_KEY) if tw is not None else None
+        if pr_meas is not None and np.asarray(pr_meas).shape[0] != w_bins:
+            pr_meas = None
+        if pr_meas is not None:
+            pr_meas = validate_price(np.asarray(pr_meas))
+        amb_meas = tw.extras.get(AMBIENT_KEY) if tw is not None else None
+        if amb_meas is not None and np.asarray(amb_meas).shape[0] != w_bins:
+            amb_meas = None
+        if amb_meas is not None:
+            amb_meas = validate_ambient(np.asarray(amb_meas))
+
         ci_w = (jnp.asarray(self.carbon_intensity[sl], jnp.float32)
                 if self.carbon_intensity is not None else None)
+        # ambient feeds the *prediction* itself (PUE multiplies power), so a
+        # measured trace replaces the forecast slice before the step runs —
+        # a value-level swap, same shapes, no retrace.
+        amb_host = (amb_meas if amb_meas is not None
+                    else (self.ambient_c[sl]
+                          if self.ambient_c is not None else None))
+        amb_w = (jnp.asarray(amb_host, jnp.float32)
+                 if amb_host is not None else None)
+        pr_w = (jnp.asarray(self.price[sl], jnp.float32)
+                if self.price is not None else None)
         telem = (make_telemetry(tw.u_th, tw.power_w) if tw is not None
                  else empty_telemetry(self.cfg.bins_per_window,
                                       self.dc.num_hosts))
@@ -279,7 +329,9 @@ class Orchestrator:
         t0 = time.time()
         self.state, out = twin_step_jit(
             self.state, telem, SimSlice(u_th=sim.u_th[sl],
-                                        carbon_intensity=ci_w))
+                                        carbon_intensity=ci_w,
+                                        ambient_c=amb_w,
+                                        price=pr_w))
         pred = out.prediction
         pred.power_w.block_until_ready()
         sim_seconds = time.time() - t0
@@ -296,6 +348,16 @@ class Orchestrator:
                 * np.asarray(ci_meas, np.float64)))
         elif pred.gco2 is not None:
             rec.gco2 = float(np.sum(np.asarray(pred.gco2, np.float64)))
+
+        # float64 energy-cost record: measured spot price wins over the
+        # forecast the traced lane priced with.
+        if pr_meas is not None:
+            rec.energy_cost = float(np.sum(
+                np.asarray(pred.energy_kwh, np.float64)
+                * np.asarray(pr_meas, np.float64)))
+        elif pred.energy_cost is not None:
+            rec.energy_cost = float(np.sum(
+                np.asarray(pred.energy_cost, np.float64)))
 
         if tw is not None:
             rec.mape = float(out.mape)
@@ -353,7 +415,8 @@ class Orchestrator:
         must fit the baseline; per-lane outputs are unaffected).
         """
         params = self.state.params
-        scs = [Scenario(name="baseline")] + list(scenarios)
+        scs = [self._with_pue(s)
+               for s in [Scenario(name="baseline")] + list(scenarios)]
         if max_hosts is not None:
             max_hosts = max(int(max_hosts), self.dc.num_hosts)
         _, sim, pred, summaries = evaluate_scenarios(
@@ -361,6 +424,8 @@ class Orchestrator:
             t_bins=self.t_bins, base_params=params, max_hosts=max_hosts,
             model=self.cfg.power_model,
             carbon_intensity=self.carbon_intensity,
+            ambient_c=self.ambient_c,
+            price=self.price,
         )
         window = len(self.records)
         baseline = summaries[0]
@@ -374,6 +439,21 @@ class Orchestrator:
             summaries = summaries[1:]
         return WhatIfResult(summaries=summaries, proposals=proposals,
                             sim=sim, prediction=pred)
+
+    def _with_pue(self, s: Scenario) -> Scenario:
+        """Apply the orchestrator's facility PUE model to a scenario.
+
+        Scenarios that set their own ``pue_base`` keep it; with
+        ``cfg.pue=None`` this is the identity.  Applying the default to
+        *every* lane (baseline included) keeps what-if comparisons
+        facility-vs-facility, never facility-vs-bare-IT.
+        """
+        p = self.cfg.pue
+        if p is None or s.pue_base is not None:
+            return s
+        return dataclasses.replace(
+            s, pue_base=p.base, pue_amb_coeff=p.amb_coeff,
+            pue_amb_ref=p.amb_ref, pue_load_coeff=p.load_coeff)
 
     # -- searched what-if: optimize over the scenario space ------------------
     def default_search_space(self) -> SearchSpace:
@@ -417,6 +497,10 @@ class Orchestrator:
         """
         if space is None:
             space = self.default_search_space()
+        if self.cfg.pue is not None:
+            space = dataclasses.replace(
+                space,
+                structures=tuple(self._with_pue(s) for s in space.structures))
         if objective is None:
             # no carbon forecast -> optimize energy instead of gCO2 (the
             # gCO2 weight would otherwise demand a trace we don't have)
@@ -425,7 +509,9 @@ class Orchestrator:
         res = optimize(
             self.workload, self.dc, space, objective,
             t_bins=self.t_bins, base_params=self.state.params,
-            carbon_intensity=self.carbon_intensity, key=key, config=config,
+            carbon_intensity=self.carbon_intensity,
+            ambient_c=self.ambient_c, price=self.price,
+            key=key, config=config,
             model=self.cfg.power_model, shard=shard, mesh=mesh,
         )
         window = len(self.records)

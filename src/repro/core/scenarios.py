@@ -98,10 +98,25 @@ class Scenario:
         ``shift_bins`` time-shifts *deferrable* jobs (see
         ``Workload.deferrable``; default: all jobs) by that many 5-minute
         bins — positive delays work into later (e.g. cleaner-grid) bins.
+      * **Failures** — ``failures`` is a tuple of
+        :class:`repro.runtime.fault.HostFailure` windows: during
+        ``[start_bin, end_bin)`` the host accepts no placements; an
+        ``"outage"`` additionally kills its running jobs (cores return at
+        ``end_bin``) and draws no power, a ``"degraded"`` host drains.
+        One window per host; windows must start inside the horizon
+        (checked at :func:`run_scenarios`, where ``t_bins`` is known).
+      * **Dynamic PUE** — ``pue_base`` (>= 1) switches the cooling model
+        on: facility power becomes IT power times
+        ``pue_base + pue_amb_coeff * max(ambient_t - pue_amb_ref, 0)
+        + pue_load_coeff * (1 - util_t)`` (see
+        :func:`repro.traces.thermal.dynamic_pue`).  Caps, energy, gCO2
+        and cost then price the cooling overhead.  Coefficients without
+        ``pue_base`` are rejected — a silent half-enabled axis.
 
-    All knobs stack into ``[S]`` tensors or per-scenario workload copies of
-    identical shape, so a (caps × shifts × topologies) grid still compiles
-    **once** (see :func:`run_scenarios`).
+    All knobs stack into ``[S]`` (or ``[S, H]``) tensors or per-scenario
+    workload copies of identical shape, so a (failures × PUE × caps ×
+    shifts × topologies) grid still compiles **once** (see
+    :func:`run_scenarios`).
 
     >>> Scenario(name="bf", policy="best_fit", backfill_depth=4).policy
     'best_fit'
@@ -115,6 +130,14 @@ class Scenario:
     Traceback (most recent call last):
         ...
     ValueError: scenario '': backfill_depth must be in [0, 31] (uint32 skip-mask width), got 40
+    >>> Scenario(pue_base=0.9)
+    Traceback (most recent call last):
+        ...
+    ValueError: scenario '': pue_base must be finite and >= 1 (facility/IT power ratio), got 0.9
+    >>> Scenario(pue_load_coeff=0.2)
+    Traceback (most recent call last):
+        ...
+    ValueError: scenario '': PUE coefficients set without pue_base — set pue_base (>= 1) to enable the dynamic-PUE axis
     """
 
     name: str = ""
@@ -132,6 +155,11 @@ class Scenario:
     duration_scale: float = 1.0
     util_scale: float = 1.0
     shift_bins: int = 0
+    failures: tuple = ()
+    pue_base: float | None = None
+    pue_amb_coeff: float = 0.0
+    pue_amb_ref: float = 18.0
+    pue_load_coeff: float = 0.0
 
     def __post_init__(self):
         # the Scenario boundary is host-side and concrete: bad power-model
@@ -185,6 +213,37 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: util_scale must be >= 0, "
                 f"got {self.util_scale}")
+        if not isinstance(self.failures, tuple):
+            object.__setattr__(self, "failures", tuple(self.failures))
+        for f in self.failures:
+            # duck-typed so constructing a Scenario never has to import the
+            # runtime layer; HostFailure validates its own invariants
+            for attr in ("host", "start_bin", "end_bin", "kind"):
+                if not hasattr(f, attr):
+                    raise ValueError(
+                        f"scenario {self.name!r}: failures must be "
+                        f"HostFailure windows, got {f!r}")
+        if self.pue_base is not None and not (
+                math.isfinite(self.pue_base) and self.pue_base >= 1.0):
+            raise ValueError(
+                f"scenario {self.name!r}: pue_base must be finite and >= 1 "
+                f"(facility/IT power ratio), got {self.pue_base}")
+        for knob in ("pue_amb_coeff", "pue_load_coeff"):
+            v = getattr(self, knob)
+            if not (math.isfinite(v) and v >= 0):
+                raise ValueError(
+                    f"scenario {self.name!r}: {knob} must be finite and "
+                    f">= 0, got {v}")
+        if not math.isfinite(self.pue_amb_ref):
+            raise ValueError(
+                f"scenario {self.name!r}: pue_amb_ref must be finite °C, "
+                f"got {self.pue_amb_ref}")
+        if self.pue_base is None and (self.pue_amb_coeff != 0.0
+                                      or self.pue_load_coeff != 0.0):
+            raise ValueError(
+                f"scenario {self.name!r}: PUE coefficients set without "
+                "pue_base — set pue_base (>= 1) to enable the dynamic-PUE "
+                "axis")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,12 +283,28 @@ class ScenarioSet:
     ``shift_bins``          ``[S]`` int32               applied time shift
                                                         (provenance)
     ``peak_tflops``         ``[S]`` float32             topology peak
+    ``fail_start``          ``[S, H]`` int32            failure-window start
+                                                        bin (int32 max = the
+                                                        host never fails)
+    ``fail_end``            ``[S, H]`` int32            failure-window end bin
+    ``fail_kill``           ``[S, H]`` bool             outage (kill jobs, no
+                                                        power) vs drain
+    ``pue_base``            ``[S]`` float32             dynamic-PUE base
+                                                        (1.0 = identity)
+    ``pue_amb_coeff``       ``[S]`` float32             PUE per °C above ref
+    ``pue_amb_ref``         ``[S]`` float32             free-cooling ref °C
+    ``pue_load_coeff``      ``[S]`` float32             partial-load penalty
     ======================  ==========================  =====================
 
-    ``names`` (tuple of str) and ``max_backfill`` (static int: the compile-
-    time backfill window all traced depths are clipped to) are pytree *aux
-    data* — part of the jit cache key, not device arrays.  ``max_hosts`` is
-    implied by ``host_mask_s.shape[-1]``.
+    ``names`` (tuple of str), ``max_backfill`` (static int: the compile-
+    time backfill window all traced depths are clipped to) and the axis
+    flags ``has_failures`` / ``pue_on`` (static bools: whether the failure /
+    dynamic-PUE machinery is compiled in at all) are pytree *aux data* —
+    part of the jit cache key, not device arrays.  With a flag off the
+    compiled program is *structurally* the pre-axis program; with it on,
+    disabled lanes carry exact-identity sentinels (never-fail windows,
+    PUE 1.0) and stay bit-for-bit equal to axis-off runs.  ``max_hosts``
+    is implied by ``host_mask_s.shape[-1]``.
     """
 
     workload: Workload        # leaves [S, J, ...]
@@ -244,8 +319,17 @@ class ScenarioSet:
     carbon_cap_slope: Array   # [S] float32 (W per gCO2/kWh)
     shift_bins: Array         # [S] int32 (provenance; already applied)
     peak_tflops: Array        # [S] float32
+    fail_start: Array         # [S, max_hosts] int32 (int32 max = never)
+    fail_end: Array           # [S, max_hosts] int32
+    fail_kill: Array          # [S, max_hosts] bool
+    pue_base: Array           # [S] float32 (1.0 = identity)
+    pue_amb_coeff: Array      # [S] float32
+    pue_amb_ref: Array        # [S] float32
+    pue_load_coeff: Array     # [S] float32
     names: tuple[str, ...]
     max_backfill: int = 0
+    has_failures: bool = False
+    pue_on: bool = False
 
     @property
     def num_scenarios(self) -> int:
@@ -261,8 +345,12 @@ jax.tree_util.register_pytree_node(
     lambda s: ((s.workload, s.host_mask_s, s.num_hosts, s.cores_per_host,
                 s.policy_id, s.backfill_depth, s.params, s.power_cap_w,
                 s.carbon_cap_base_w, s.carbon_cap_slope, s.shift_bins,
-                s.peak_tflops), (s.names, s.max_backfill)),
-    lambda aux, c: ScenarioSet(*c, names=aux[0], max_backfill=aux[1]),
+                s.peak_tflops, s.fail_start, s.fail_end, s.fail_kill,
+                s.pue_base, s.pue_amb_coeff, s.pue_amb_ref,
+                s.pue_load_coeff),
+               (s.names, s.max_backfill, s.has_failures, s.pue_on)),
+    lambda aux, c: ScenarioSet(*c, names=aux[0], max_backfill=aux[1],
+                               has_failures=aux[2], pue_on=aux[3]),
 )
 
 
@@ -346,6 +434,8 @@ def build_scenario_set(
     base_params: PowerParams = PowerParams(),
     max_hosts: int | None = None,
     max_backfill: int | None = None,
+    has_failures: bool | None = None,
+    pue_on: bool | None = None,
 ) -> ScenarioSet:
     """Stack S candidate configurations against one base trace/topology.
 
@@ -369,8 +459,18 @@ def build_scenario_set(
     across batches whose depth mixes differ — the optimizer's generation
     loop (:mod:`repro.core.optimize`) relies on exactly this.
 
+    The static axis flags ``has_failures`` / ``pue_on`` follow the same
+    pinning convention: they default to "derived from this batch" (any
+    scenario with failure windows / a ``pue_base``), and like
+    ``max_hosts``/``max_backfill`` they are jit cache-key aux — pass them
+    explicitly when successive batches may mix axis presence (again, the
+    optimizer's generation loop).  Forcing a flag on for an axis no
+    scenario uses is sound (sentinel lanes compute identical results);
+    forcing one *off* while a scenario uses the axis is rejected.
+
     Raises ``ValueError`` on an empty scenario list, a candidate wanting
-    more hosts than ``max_hosts``, or a depth beyond ``max_backfill``.
+    more hosts than ``max_hosts``, a depth beyond ``max_backfill``, or a
+    failure window on a host the scenario's topology does not have.
     """
     if not scenarios:
         raise ValueError("need at least one scenario")
@@ -431,6 +531,49 @@ def build_scenario_set(
          else math.inf for sc in scenarios], jnp.float32)
     carbon_slope = jnp.asarray(
         [sc.carbon_cap_slope for sc in scenarios], jnp.float32)
+
+    # failure axis: dense [S, mh] window arrays with never-fail sentinels.
+    # fault.py is imported locally — it reaches repro.core via the
+    # checkpoint layer, and a module-level import here would close an
+    # import cycle through repro.core.__init__ (same pattern as
+    # scenario_mesh's local sharding import).
+    from repro.runtime.fault import failure_arrays
+
+    any_fail = any(sc.failures for sc in scenarios)
+    if has_failures is None:
+        has_failures = any_fail
+    elif any_fail and not has_failures:
+        raise ValueError(
+            "has_failures=False but scenario(s) carry failure windows")
+    fs_rows, fe_rows, fk_rows = [], [], []
+    for sc, h in zip(scenarios, hosts):
+        for f in sc.failures:
+            if f.host >= h:
+                raise ValueError(
+                    f"scenario {sc.name!r}: failure host {f.host} out of "
+                    f"range for its {h}-host topology")
+        fs, fe, fk = failure_arrays(sc.failures, mh)
+        fs_rows.append(fs)
+        fe_rows.append(fe)
+        fk_rows.append(fk)
+
+    # dynamic-PUE axis: per-scenario model params with identity sentinels
+    # (base 1.0, coeffs 0) on lanes that leave it off.
+    any_pue = any(sc.pue_base is not None for sc in scenarios)
+    if pue_on is None:
+        pue_on = any_pue
+    elif any_pue and not pue_on:
+        raise ValueError("pue_on=False but scenario(s) set pue_base")
+    pue_base = jnp.asarray(
+        [1.0 if sc.pue_base is None else sc.pue_base for sc in scenarios],
+        jnp.float32)
+    pue_amb_coeff = jnp.asarray(
+        [sc.pue_amb_coeff for sc in scenarios], jnp.float32)
+    pue_amb_ref = jnp.asarray(
+        [sc.pue_amb_ref for sc in scenarios], jnp.float32)
+    pue_load_coeff = jnp.asarray(
+        [sc.pue_load_coeff for sc in scenarios], jnp.float32)
+
     return ScenarioSet(
         workload=wl,
         host_mask_s=host_mask(hosts_a, mh),
@@ -446,14 +589,28 @@ def build_scenario_set(
         shift_bins=jnp.asarray([int(sc.shift_bins) for sc in scenarios],
                                jnp.int32),
         peak_tflops=peak,
+        fail_start=jnp.asarray(np.stack(fs_rows)),
+        fail_end=jnp.asarray(np.stack(fe_rows)),
+        fail_kill=jnp.asarray(np.stack(fk_rows)),
+        pue_base=pue_base,
+        pue_amb_coeff=pue_amb_coeff,
+        pue_amb_ref=pue_amb_ref,
+        pue_load_coeff=pue_load_coeff,
         names=names,
         max_backfill=mb,
+        has_failures=bool(has_failures),
+        pue_on=bool(pue_on),
     )
 
 
 def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
                     peak_tflops: Array, model: str,
-                    cap_t: Array, intensity: Array | None) -> Prediction:
+                    cap_t: Array, intensity: Array | None,
+                    *,
+                    online_th: Array | None = None,
+                    pue=None,
+                    ambient: Array | None = None,
+                    price: Array | None = None) -> Prediction:
     """Mask-aware :func:`repro.core.desim.predict_metrics` for one scenario.
 
     Padded (inactive) hosts must not dilute mean utilization or draw idle
@@ -468,31 +625,66 @@ def _predict_masked(u_th: Array, params: PowerParams, mask: Array,
     (``cap_t = +inf``) stays bit-for-bit the pre-enforcement output:
     ``min(x, inf) == x`` and the throttle select falls through to the raw
     utilization.
+
+    New-axis hooks (all default off, leaving the body above unchanged):
+
+    ``online_th`` (``[T, H]`` bool)
+        Time-varying host availability from the failure axis — hosts in an
+        *outage* window draw no power (not even idle) and drop out of the
+        utilization denominator.  Degraded (drain) hosts stay online here.
+    ``pue`` / ``ambient``
+        Dynamic cooling: per-bin PUE from the **unthrottled** mean
+        utilization and the °C trace (:func:`repro.traces.thermal.dynamic_pue`).
+        Demand, cap enforcement, the idle floor, energy, gCO2 and cost all
+        move to *facility* watts — the cap constrains what the meter sees.
+    ``price`` (``[T]`` $/kWh)
+        Fills ``energy_cost`` from delivered (facility) energy.
     """
     maskf = mask.astype(u_th.dtype)
-    demand = datacenter_power(u_th, params, model=model, online_mask=maskf)
+    if online_th is None:
+        it_demand = datacenter_power(u_th, params, model=model,
+                                     online_mask=maskf)
+        idle_floor = jnp.sum(jnp.asarray(params.p_idle, u_th.dtype) * maskf)
+        util_raw = jnp.sum(u_th * maskf, axis=-1) / jnp.maximum(
+            jnp.sum(maskf), 1.0)
+    else:
+        onf = online_th.astype(u_th.dtype) * maskf               # [T, H]
+        it_demand = datacenter_power(u_th, params, model=model,
+                                     online_mask=onf)
+        # per-bin idle floor and utilization denominator: offline hosts
+        # contribute neither idle watts nor zero-util dilution
+        idle_floor = jnp.sum(
+            jnp.asarray(params.p_idle, u_th.dtype) * onf, axis=-1)
+        util_raw = jnp.sum(u_th * onf, axis=-1) / jnp.maximum(
+            jnp.sum(onf, axis=-1), 1.0)
+    pue_t = None
+    demand = it_demand
+    if pue is not None:
+        from repro.traces.thermal import dynamic_pue
+        pue_t = dynamic_pue(util_raw, ambient, pue)
+        demand = it_demand * pue_t
+        idle_floor = idle_floor * pue_t
     exceeded = demand > cap_t
     power = jnp.minimum(demand, cap_t)
-    # params are per-host [H] rows; the idle floor is the active hosts' sum
-    idle_floor = jnp.sum(jnp.asarray(params.p_idle, u_th.dtype) * maskf)
     throttle = jnp.clip(
         (cap_t - idle_floor) / jnp.maximum(demand - idle_floor, 1e-9),
         0.0, 1.0)
     e = energy_kwh(power, SAMPLE_SECONDS)
-    util_raw = jnp.sum(u_th * maskf, axis=-1) / jnp.maximum(
-        jnp.sum(maskf), 1.0)
     util = jnp.where(exceeded, util_raw * throttle, util_raw)
     tflops = util * peak_tflops
     eff = tflops / jnp.maximum(e, 1e-9)
     gco2 = None if intensity is None else carbon_gco2(e, intensity)
+    cost = None if price is None else e * jnp.asarray(price, e.dtype)
     return Prediction(power_w=power, energy_kwh=e, tflops=tflops,
                       utilization=util, efficiency=eff, gco2=gco2,
-                      power_demand_w=demand)
+                      power_demand_w=demand, pue=pue_t, energy_cost=cost)
 
 
 def _scenario_lanes(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
+    ambient_c: Array | None,
+    price: Array | None,
     *,
     max_hosts: int,
     t_bins: int,
@@ -506,11 +698,17 @@ def _scenario_lanes(
     over the full S axis, the sharded path runs it per device over the local
     S shard (``chunk`` is resolved from the *global* batch in both cases, so
     every lane compiles the same readout program and the two paths agree bit
-    for bit).
+    for bit).  The ``[t_bins]`` traces (carbon, ambient, price) are shared
+    closure constants under the vmap; everything per-scenario rides the S
+    axis, and the static ``has_failures``/``pue_on`` aux flags decide
+    whether the failure/PUE machinery is compiled in at all.
     """
 
     def one(w, mask, cores, policy_id, backfill_depth, params,
-            cap_w, carbon_base, carbon_slope, peak):
+            cap_w, carbon_base, carbon_slope, peak,
+            fail_start, fail_end, fail_kill,
+            pue_base, pue_amb_coeff, pue_amb_ref, pue_load_coeff):
+        use_fail = ss.has_failures
         sim = simulate_utilization_masked(
             w, mask, cores,
             max_hosts=max_hosts, t_bins=t_bins,
@@ -518,6 +716,9 @@ def _scenario_lanes(
             policy_id=policy_id, backfill_depth=backfill_depth,
             max_backfill=ss.max_backfill,   # static aux, uniform over S
             force_chunked_readout=chunk,
+            fail_start=fail_start if use_fail else None,
+            fail_end=fail_end if use_fail else None,
+            fail_kill=fail_kill if use_fail else None,
         )
         # effective per-bin cap: min(static facility cap, carbon-aware cap).
         # The intensity trace is shared across scenarios (closure constant
@@ -529,14 +730,32 @@ def _scenario_lanes(
                 cap_t,
                 jnp.maximum(carbon_base + carbon_slope * carbon_intensity,
                             0.0))
+        online_th = None
+        if use_fail:
+            # power-side availability: only *outage* hosts stop drawing
+            # power during their window (degraded hosts drain but burn)
+            tt = jnp.arange(t_bins, dtype=jnp.int32)[:, None]     # [T, 1]
+            offline = (fail_kill[None, :] & (tt >= fail_start[None, :])
+                       & (tt < fail_end[None, :]))                # [T, H]
+            online_th = mask[None, :] & jnp.logical_not(offline)
+        pue = None
+        if ss.pue_on:
+            from repro.traces.thermal import PUEParams
+            pue = PUEParams(base=pue_base, amb_coeff=pue_amb_coeff,
+                            amb_ref=pue_amb_ref, load_coeff=pue_load_coeff)
         pred = _predict_masked(sim.u_th, params, mask, peak, model,
-                               cap_t, carbon_intensity)
+                               cap_t, carbon_intensity,
+                               online_th=online_th, pue=pue,
+                               ambient=ambient_c, price=price)
         return sim, pred
 
     return jax.vmap(one)(ss.workload, ss.host_mask_s, ss.cores_per_host,
                          ss.policy_id, ss.backfill_depth, ss.params,
                          ss.power_cap_w, ss.carbon_cap_base_w,
-                         ss.carbon_cap_slope, ss.peak_tflops)
+                         ss.carbon_cap_slope, ss.peak_tflops,
+                         ss.fail_start, ss.fail_end, ss.fail_kill,
+                         ss.pue_base, ss.pue_amb_coeff, ss.pue_amb_ref,
+                         ss.pue_load_coeff)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
@@ -544,6 +763,8 @@ def _scenario_lanes(
 def _run_scenarios_jit(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
+    ambient_c: Array | None,
+    price: Array | None,
     *,
     max_hosts: int,
     t_bins: int,
@@ -556,7 +777,8 @@ def _run_scenarios_jit(
     n_jobs = int(ss.workload.submit_bin.shape[-1])
     chunk = ss.num_scenarios * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
     return _scenario_lanes(
-        ss, carbon_intensity, max_hosts=max_hosts, t_bins=t_bins,
+        ss, carbon_intensity, ambient_c, price,
+        max_hosts=max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
 
 
@@ -585,6 +807,8 @@ def scenario_mesh(num_devices: int | None = None):
 def _run_scenarios_sharded_jit(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
+    ambient_c: Array | None,
+    price: Array | None,
     *,
     mesh,
     max_hosts: int,
@@ -596,17 +820,20 @@ def _run_scenarios_sharded_jit(
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def body(ss_local: ScenarioSet, ci_local: Array | None):
+    def body(ss_local: ScenarioSet, ci_local: Array | None,
+             amb_local: Array | None, price_local: Array | None):
         return _scenario_lanes(
-            ss_local, ci_local, max_hosts=max_hosts, t_bins=t_bins,
+            ss_local, ci_local, amb_local, price_local,
+            max_hosts=max_hosts, t_bins=t_bins,
             max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
 
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(SCENARIO_AXIS), P()),      # S-axis sharded; trace replicated
+        # S-axis sharded; the [T] traces replicated on every device
+        in_specs=(P(SCENARIO_AXIS), P(), P(), P()),
         out_specs=P(SCENARIO_AXIS),
         check_rep=False,
-    )(ss, carbon_intensity)
+    )(ss, carbon_intensity, ambient_c, price)
 
 
 def _pad_scenario_axis(ss: ScenarioSet, pad: int) -> ScenarioSet:
@@ -632,6 +859,8 @@ def run_scenarios(
     max_starts_per_bin: int = 64,
     model: str = "opendc",
     carbon_intensity: "Array | np.ndarray | None" = None,
+    ambient_c: "Array | np.ndarray | None" = None,
+    price: "Array | np.ndarray | None" = None,
     shard: bool = False,
     mesh=None,
 ) -> tuple[SimOutput, Prediction]:
@@ -650,6 +879,16 @@ def run_scenarios(
     every output leaf bit-for-bit identical to the pre-carbon engine
     (``gco2=None``); scenarios that *request* a carbon-aware cap without a
     trace are rejected loudly rather than silently uncapped.
+
+    ``ambient_c`` (``[t_bins]`` °C, see :mod:`repro.traces.thermal`) feeds
+    the dynamic-PUE axis of lanes that set ``Scenario.pue_base``; lanes
+    whose ``pue_amb_coeff`` is nonzero *require* it (rejected loudly,
+    mirroring the carbon-cap rule).  ``price`` (``[t_bins]`` $/kWh, see
+    :mod:`repro.traces.price`) fills ``Prediction.energy_cost`` for every
+    lane from delivered (facility) energy.  Failure windows
+    (``Scenario.failures``) need no trace but must *start* inside the
+    horizon — a window opening at or past ``t_bins`` can never fire and is
+    rejected as a mis-specified what-if.
 
     One compilation covers any scenario batch with the same
     ``(S, max_hosts, t_bins, J, max_backfill)`` shape (per intensity
@@ -683,11 +922,37 @@ def run_scenarios(
         ci = jnp.asarray(
             validate_carbon_intensity(np.asarray(carbon_intensity), t_bins),
             jnp.float32)
+    if ss.has_failures:
+        fs = np.asarray(ss.fail_start)
+        bad = (fs < np.iinfo(np.int32).max) & (fs >= t_bins)
+        if bad.any():
+            s_bad, h_bad = map(int, np.argwhere(bad)[0])
+            raise ValueError(
+                f"scenario {s_bad} host {h_bad}: failure window starts at "
+                f"bin {int(fs[s_bad, h_bad])}, at/past the {t_bins}-bin "
+                "horizon — it can never fire")
+    if ambient_c is None:
+        if ss.pue_on and np.asarray(ss.pue_amb_coeff).any():
+            raise ValueError(
+                "scenario(s) set pue_amb_coeff but no ambient_c trace was "
+                "supplied — the ambient-driven PUE term cannot be computed "
+                "without one (pass ambient_c=[t_bins] °C)")
+        amb = None
+    else:
+        from repro.traces.thermal import validate_ambient
+        amb = jnp.asarray(
+            validate_ambient(np.asarray(ambient_c), t_bins), jnp.float32)
+    if price is None:
+        pr = None
+    else:
+        from repro.traces.price import validate_price
+        pr = jnp.asarray(
+            validate_price(np.asarray(price), t_bins), jnp.float32)
     s = ss.num_scenarios
     anon = dataclasses.replace(ss, names=("",) * s)
     if not shard:
         return _run_scenarios_jit(
-            anon, ci, max_hosts=max_hosts, t_bins=t_bins,
+            anon, ci, amb, pr, max_hosts=max_hosts, t_bins=t_bins,
             max_starts_per_bin=max_starts_per_bin, model=model,
         )
     mesh = scenario_mesh() if mesh is None else mesh
@@ -705,7 +970,7 @@ def run_scenarios(
     n_jobs = int(ss.workload.submit_bin.shape[-1])
     chunk = s * n_jobs * t_bins > _BATCH_READOUT_THRESHOLD
     out = _run_scenarios_sharded_jit(
-        padded, ci, mesh=mesh, max_hosts=max_hosts, t_bins=t_bins,
+        padded, ci, amb, pr, mesh=mesh, max_hosts=max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk,
     )
     return jax.tree.map(lambda x: x[:s], out)
@@ -741,6 +1006,13 @@ class ScenarioSummary:
     workload wanted, and ``cap_exceeded_bins`` counts bins where demand ran
     into the effective (static ∧ carbon-aware) cap.  ``shift_bins`` records
     the applied deferrable-job time shift.
+
+    New-axis fields (``None``/0 when the axis is off — ``None`` rather
+    than NaN so dataclass equality keeps working in the shard-equivalence
+    tests): ``mean_pue`` is the energy-unweighted mean dynamic PUE,
+    ``energy_cost`` the total electricity cost ($, against the spot-price
+    trace; power fields are *facility*-level when PUE is on) and
+    ``failure_events`` the number of failure windows the scenario injects.
     """
 
     name: str
@@ -768,6 +1040,9 @@ class ScenarioSummary:
     carbon_cap_base_w: float | None
     carbon_cap_slope: float
     cap_exceeded_bins: int
+    mean_pue: float | None = None
+    energy_cost: float | None = None
+    failure_events: int = 0
 
 
 def summarize_scenarios(
@@ -797,6 +1072,12 @@ def summarize_scenarios(
     shifts = np.asarray(ss.shift_bins)         # [S]
     policy = np.asarray(ss.policy_id)          # [S]
     depth = np.asarray(ss.backfill_depth)      # [S]
+    pue = (np.asarray(pred.pue)                # [S, T] or None
+           if pred.pue is not None else None)
+    cost = (np.asarray(pred.energy_cost, np.float64)  # [S, T] or None
+            if pred.energy_cost is not None else None)
+    fail_ct = (np.asarray(ss.fail_start)       # [S] windows per scenario
+               < np.iinfo(np.int32).max).sum(axis=-1)
     ci = (None if carbon_intensity is None
           else np.asarray(carbon_intensity, np.float64))
     cpu_h = np.asarray(
@@ -843,6 +1124,9 @@ def summarize_scenarios(
                                else float(cbase[s])),
             carbon_cap_slope=float(cslope[s]),
             cap_exceeded_bins=int((demand[s] > cap_t).sum()),
+            mean_pue=(float(pue[s].mean()) if pue is not None else None),
+            energy_cost=(float(cost[s].sum()) if cost is not None else None),
+            failure_events=int(fail_ct[s]),
         ))
     return out
 
@@ -858,6 +1142,8 @@ def evaluate_scenarios(
     model: str = "opendc",
     max_starts_per_bin: int = 64,
     carbon_intensity: "Array | np.ndarray | None" = None,
+    ambient_c: "Array | np.ndarray | None" = None,
+    price: "Array | np.ndarray | None" = None,
     shard: bool = False,
     mesh=None,
 ) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
@@ -880,7 +1166,8 @@ def evaluate_scenarios(
     sim, pred = run_scenarios(
         ss, max_hosts=ss.max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model,
-        carbon_intensity=carbon_intensity, shard=shard, mesh=mesh,
+        carbon_intensity=carbon_intensity, ambient_c=ambient_c, price=price,
+        shard=shard, mesh=mesh,
     )
     return ss, sim, pred, summarize_scenarios(
         ss, sim, pred, carbon_intensity=carbon_intensity)

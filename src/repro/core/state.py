@@ -61,6 +61,7 @@ from repro.core.desim import Prediction, predict_metrics
 from repro.core.power import PowerParams, mape
 from repro.core.slo import NFR1, SLO, observe_bias, observe_slos
 from repro.traces.schema import DatacenterConfig
+from repro.traces.thermal import PUEParams
 
 Array = jax.Array
 
@@ -86,6 +87,10 @@ class TwinConfig:
     power_model: str = "opendc"
     kernel_backend: str = "xla"
     slos: tuple[SLO, ...] = (NFR1,)
+    #: dynamic-PUE model: when set, window predictions report *facility*
+    #: power (IT draw x PUE(load, ambient)) — frozen/hashable, so it rides
+    #: the jit cache key like every other static knob.
+    pue: PUEParams | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,16 +198,20 @@ class SimSlice:
     ``u_th`` is the window's ``[Tw, H]`` slice of the full-horizon DES
     utilization field (the DES itself is power-parameter independent and
     stays outside the per-window step — see ``Orchestrator._ensure_sim``);
-    ``carbon_intensity`` is the optional ``[Tw]`` gCO2/kWh forecast slice.
+    ``carbon_intensity`` / ``ambient_c`` / ``price`` are the optional
+    ``[Tw]`` forecast slices (gCO2/kWh, deg C, $/kWh) the read-out folds
+    into gCO2, dynamic PUE and energy cost.
     """
 
     u_th: Array
     carbon_intensity: Array | None = None
+    ambient_c: Array | None = None
+    price: Array | None = None
 
 
 jax.tree_util.register_pytree_node(
     SimSlice,
-    lambda s: ((s.u_th, s.carbon_intensity), None),
+    lambda s: ((s.u_th, s.carbon_intensity, s.ambient_c, s.price), None),
     lambda _, c: SimSlice(*c),
 )
 
@@ -309,7 +318,10 @@ def twin_step(state: TwinState, telemetry: TelemetrySlice,
     # S_k — prediction with the pipelined parameters.
     pred = predict_metrics(sim_slice.u_th, params, cfg.dc,
                            model=cfg.power_model,
-                           carbon_intensity=sim_slice.carbon_intensity)
+                           carbon_intensity=sim_slice.carbon_intensity,
+                           ambient_c=sim_slice.ambient_c,
+                           price=sim_slice.price,
+                           pue=cfg.pue)
 
     # Scoring: window MAPE against measured power (NaN without telemetry).
     valid = telemetry.valid
@@ -401,6 +413,10 @@ def save_state(state: TwinState, path: str) -> None:
             "power_model": cfg.power_model,
             "kernel_backend": cfg.kernel_backend,
             "slos": [dataclasses.asdict(s) for s in cfg.slos],
+            # None when dynamic PUE is off; old readers ignore the key,
+            # old files load with pue=None (tolerant .get on load).
+            "pue": (dataclasses.asdict(cfg.pue)
+                    if cfg.pue is not None else None),
         },
         "leaves": [_pack_array(x) for x in leaves],
     }
@@ -432,6 +448,7 @@ def load_state(path: str) -> TwinState:
         power_model=c["power_model"],
         kernel_backend=c["kernel_backend"],
         slos=tuple(SLO(**s) for s in c["slos"]),
+        pue=(PUEParams(**c["pue"]) if c.get("pue") is not None else None),
     )
     template = init_twin_state(cfg)
     treedef = jax.tree_util.tree_structure(template)

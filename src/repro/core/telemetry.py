@@ -38,6 +38,16 @@ from repro.traces.schema import SAMPLE_SECONDS
 #: (same precedence reality takes over the model everywhere else).
 CARBON_INTENSITY_KEY = "carbon_intensity"
 
+#: well-known extras column: measured electricity spot price ``[Tw]``
+#: ($/kWh).  Overrides the orchestrator's configured price forecast when
+#: scoring a window's energy cost.
+PRICE_KEY = "price"
+
+#: well-known extras column: measured outside-air temperature ``[Tw]``
+#: (deg C).  Overrides the configured ambient forecast feeding the
+#: dynamic-PUE model when scoring a window.
+AMBIENT_KEY = "ambient_c"
+
 
 @dataclasses.dataclass(frozen=True)
 class TelemetryWindow:

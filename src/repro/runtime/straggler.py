@@ -58,3 +58,27 @@ class StragglerDetector:
             ))
             self.slow_streak[h] = 0               # proposal in flight
         return out
+
+
+def degradation_from_stragglers(proposals, *, start_bin: int,
+                                duration_bins: int):
+    """Straggler proposals -> DEGRADED failure windows for the what-if DES.
+
+    Bridges runtime detection into the scenario engine's failure axis: each
+    RESTART_STRAGGLER proposal becomes a drain window (no new placements,
+    running jobs finish, power still drawn) starting at ``start_bin`` —
+    i.e. "what if we drained the flagged hosts for the next N bins".
+    Duplicate hosts collapse to one window (the DES carries one per host).
+    """
+    from repro.runtime.fault import DEGRADED, HostFailure
+
+    hosts = []
+    for p in proposals:
+        if p.kind is not ProposalKind.RESTART_STRAGGLER:
+            continue
+        h = int(p.impact["host"])
+        if h not in hosts:
+            hosts.append(h)
+    return tuple(
+        HostFailure(h, start_bin, start_bin + duration_bins, kind=DEGRADED)
+        for h in hosts)

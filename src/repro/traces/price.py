@@ -1,0 +1,134 @@
+"""Electricity spot-price traces ($/kWh at the 5-minute granularity).
+
+Same shape machinery as :mod:`repro.traces.carbon`: a ``[T]`` float32
+trace validated once on the host, then consumed as a traced operand by
+the scenario engine — ``cost_t = energy_kwh_t * price_t`` threads into
+:class:`~repro.core.desim.Prediction` and the optimizer's objective, so
+`optimize_whatif` can trade energy cost against carbon and SLOs.
+
+Spot markets clear *negative* on windy/sunny low-demand days (being paid
+to consume), so unlike carbon intensity the trace is not constrained to
+be non-negative — only finite.  :func:`make_diurnal_price` is shaped
+deliberately *opposite* to the carbon generator's midday solar dip
+(cheap night, expensive evening ramp): on the same horizon the
+cost-optimal shift differs from the carbon-optimal one, which is exactly
+the trade-off the optimizer test pins.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from repro.traces.schema import SAMPLE_SECONDS
+
+#: day length in 5-min bins (see repro.traces.thermal for why this is
+#: derived from the schema instead of imported from surf/carbon).
+BINS_PER_DAY = int(24 * 3600 / SAMPLE_SECONDS)  # 288
+
+#: plausible retail/spot band, $/kWh: values above trigger a sanity
+#: *warning* ($/MWh fed as $/kWh), not a rejection.
+TYPICAL_MAX = 5.0
+
+
+def validate_price(price: np.ndarray, t_bins: int | None = None) -> np.ndarray:
+    """Validate a price trace: 1-D, finite, length T; contiguous f32.
+
+    Negative prices are allowed (spot markets clear below zero), NaN/inf
+    are not — a non-finite price would silently poison every cost total
+    downstream.
+
+    >>> validate_price([0.12, -0.03]).dtype
+    dtype('float32')
+    >>> validate_price([float("nan")])
+    Traceback (most recent call last):
+        ...
+    ValueError: price trace contains non-finite values
+    """
+    arr = np.asarray(price, np.float32)
+    if arr.ndim != 1:
+        raise ValueError(f"price trace must be [T], got shape {arr.shape}")
+    if arr.size == 0:
+        raise ValueError("price trace is empty")
+    if not np.isfinite(arr).all():
+        raise ValueError("price trace contains non-finite values")
+    if t_bins is not None and arr.shape[0] != t_bins:
+        raise ValueError(
+            f"price trace has {arr.shape[0]} bins, horizon needs {t_bins}"
+            " (use load_price_trace(..., t_bins=...) to resample)")
+    if float(arr.max()) > TYPICAL_MAX:
+        warnings.warn(
+            f"price trace peaks at {arr.max():.2f} $/kWh, above the "
+            f"plausible band (<= {TYPICAL_MAX}) — check the input units "
+            "($/MWh?)", stacklevel=2)
+    return np.ascontiguousarray(arr)
+
+
+def load_price_trace(path: str, t_bins: int | None = None) -> np.ndarray:
+    """Load a ``[T]`` $/kWh spot-price trace from a CSV-ish file.
+
+    Same accepted layouts as :func:`repro.traces.carbon.load_carbon_intensity`
+    (one value per line, or ``timestamp,value`` — last column wins; ``#``
+    comments and one non-numeric header row are skipped).  With ``t_bins``
+    the trace is tiled/truncated to the horizon.
+    """
+    vals: list[float] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            cell = line.split(",")[-1].strip()
+            try:
+                vals.append(float(cell))
+            except ValueError:
+                if vals:
+                    raise ValueError(
+                        f"{path}: non-numeric row {line!r} after data rows")
+                continue  # header row
+    arr = validate_price(np.asarray(vals, np.float32))
+    if t_bins is not None:
+        # local import: carbon pulls in repro.core at module scope
+        from repro.traces.carbon import _resample
+        arr = _resample(arr, t_bins)
+    return arr
+
+
+def make_diurnal_price(
+    t_bins: int,
+    *,
+    base: float = 0.10,
+    night_discount: float = 0.06,
+    evening_peak: float = 0.15,
+    wander_daily_sigma: float = 0.05,
+    seed: int | None = 0,
+) -> np.ndarray:
+    """Synthetic diurnal spot-price trace ``[t_bins]`` ($/kWh).
+
+    Cheap overnight (a gaussian valley centred ~03:00), an expensive
+    evening demand ramp (~19:00) — deliberately the *opposite* shape to
+    :func:`repro.traces.carbon.make_diurnal_carbon`'s midday solar dip,
+    so cost-optimal and carbon-optimal schedules disagree on the same
+    horizon.  A per-day lognormal wander (``seed=None`` disables it)
+    models day-to-day market spread.
+
+    >>> p = make_diurnal_price(288, seed=None)
+    >>> p.shape
+    (288,)
+    >>> int(p.argmin()) < 288 // 2 < int(p.argmax())  # cheap night, dear eve
+    True
+    """
+    if t_bins <= 0:
+        raise ValueError(f"t_bins must be positive, got {t_bins}")
+    tod = (np.arange(t_bins) % BINS_PER_DAY) / BINS_PER_DAY  # [0, 1) day phase
+    hours = tod * 24.0
+    night = np.exp(-0.5 * ((hours - 3.0) / 2.5) ** 2)
+    evening = np.exp(-0.5 * ((hours - 19.0) / 2.0) ** 2)
+    out = base - night_discount * night + evening_peak * evening
+    if seed is not None and wander_daily_sigma > 0:
+        rng = np.random.default_rng(seed)
+        n_days = -(-t_bins // BINS_PER_DAY)
+        daily = rng.lognormal(0.0, wander_daily_sigma, n_days)
+        out = out * np.repeat(daily, BINS_PER_DAY)[:t_bins]
+    return validate_price(out.astype(np.float32), t_bins)

@@ -1,0 +1,223 @@
+"""Ambient-temperature traces and a dynamic PUE/cooling model.
+
+The paper's energy numbers assume a fixed facility overhead; real
+datacenters don't — cooling power tracks the weather and the IT load
+(HPC-digital-twin studies of scheduling vs power *and cooling* make the
+same point).  This module supplies the two pieces the scenario engine
+needs to make PUE a *traced* axis:
+
+  * ambient-temperature traces (``[T]`` °C at the 5-minute sampling
+    granularity): a loader (:func:`load_ambient`) with the same CSV/
+    resampling machinery as :mod:`repro.traces.carbon`, a synthetic
+    diurnal generator (:func:`make_diurnal_ambient`) and shared
+    validation (:func:`validate_ambient`);
+  * :class:`PUEParams` + :func:`dynamic_pue` — PUE as a function of the
+    ambient trace and the instantaneous IT load:
+
+        pue_t = base + amb_coeff * max(ambient_t - amb_ref, 0)
+                     + load_coeff * (1 - load_frac_t)
+
+    Hotter-than-reference air costs cooling power (chillers work
+    harder); *low* IT load costs relative overhead (fans/CRACs don't
+    scale down linearly — the classic partially-loaded-facility PUE
+    penalty).  ``base >= 1`` by definition of PUE; with zero
+    coefficients the model degrades to a constant overhead, and
+    ``PUEParams()`` is the exact identity (facility power == IT power).
+
+Downstream, the scenario engine multiplies the per-bin PUE into the
+delivered-power readout (facility watts), so energy, gCO2 and energy
+cost all price the cooling overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.traces.schema import SAMPLE_SECONDS
+
+Array = jax.Array
+
+#: same day length as repro.traces.surf.BINS_PER_DAY, derived here from
+#: the schema directly — importing surf (or carbon) at module scope would
+#: pull in repro.core and close an import cycle back to the trace layer.
+BINS_PER_DAY = int(24 * 3600 / SAMPLE_SECONDS)  # 288
+
+#: plausible outdoor-air band, °C: values outside trigger a sanity
+#: *warning* (Kelvin or Fahrenheit fed as Celsius), not a rejection.
+TYPICAL_RANGE = (-40.0, 60.0)
+
+
+def validate_ambient(ambient: np.ndarray,
+                     t_bins: int | None = None) -> np.ndarray:
+    """Validate an ambient trace: 1-D, finite, length T; contiguous f32.
+
+    >>> validate_ambient([20.0, 22.0]).dtype
+    dtype('float32')
+    >>> validate_ambient([[20.0]])
+    Traceback (most recent call last):
+        ...
+    ValueError: ambient trace must be [T], got shape (1, 1)
+    """
+    arr = np.asarray(ambient, np.float32)
+    if arr.ndim != 1:
+        raise ValueError(f"ambient trace must be [T], got shape {arr.shape}")
+    if arr.size == 0:
+        raise ValueError("ambient trace is empty")
+    if not np.isfinite(arr).all():
+        raise ValueError("ambient trace contains non-finite values")
+    if t_bins is not None and arr.shape[0] != t_bins:
+        raise ValueError(
+            f"ambient trace has {arr.shape[0]} bins, horizon needs {t_bins}"
+            " (use load_ambient(..., t_bins=...) to resample)")
+    if float(arr.min()) < TYPICAL_RANGE[0] or float(arr.max()) > TYPICAL_RANGE[1]:
+        warnings.warn(
+            f"ambient trace spans [{arr.min():.0f}, {arr.max():.0f}] °C, "
+            f"outside the plausible outdoor band {TYPICAL_RANGE} — "
+            "check the input units (Kelvin/Fahrenheit?)",
+            stacklevel=2)
+    return np.ascontiguousarray(arr)
+
+
+def load_ambient(path: str, t_bins: int | None = None) -> np.ndarray:
+    """Load a ``[T]`` °C ambient trace from a CSV-ish file.
+
+    Same accepted layouts as :func:`repro.traces.carbon.load_carbon_intensity`
+    (one value per line, or ``timestamp,value`` — last column wins; ``#``
+    comments and one non-numeric header row are skipped).  With ``t_bins``
+    the trace is tiled/truncated to the horizon (weather is
+    diurnal-periodic at day length, like grid carbon).
+    """
+    vals: list[float] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            cell = line.split(",")[-1].strip()
+            try:
+                vals.append(float(cell))
+            except ValueError:
+                if vals:
+                    raise ValueError(
+                        f"{path}: non-numeric row {line!r} after data rows")
+                continue  # header row
+    arr = validate_ambient(np.asarray(vals, np.float32))
+    if t_bins is not None:
+        # local import: carbon pulls in repro.core at module scope
+        from repro.traces.carbon import _resample
+        arr = _resample(arr, t_bins)
+    return arr
+
+
+def make_diurnal_ambient(
+    t_bins: int,
+    *,
+    base: float = 16.0,
+    amplitude: float = 8.0,
+    wander_daily_sigma: float = 0.5,
+    seed: int | None = 0,
+) -> np.ndarray:
+    """Synthetic diurnal ambient-temperature trace ``[t_bins]`` (°C).
+
+    A sinusoid peaking mid-afternoon (~15:00, thermal lag behind solar
+    noon) and bottoming out pre-dawn, plus an optional per-day additive
+    wander (°C, weather fronts).  ``seed=None`` disables the wander.
+
+    >>> a = make_diurnal_ambient(288, seed=None)
+    >>> a.shape
+    (288,)
+    >>> bool(a.max() <= 16.0 + 8.0 + 1e-5)
+    True
+    """
+    if t_bins <= 0:
+        raise ValueError(f"t_bins must be positive, got {t_bins}")
+    tod = (np.arange(t_bins) % BINS_PER_DAY) / BINS_PER_DAY  # [0, 1) day phase
+    out = base + amplitude * np.sin(2.0 * np.pi * (tod * 24.0 - 9.0) / 24.0)
+    if seed is not None and wander_daily_sigma > 0:
+        rng = np.random.default_rng(seed)
+        n_days = -(-t_bins // BINS_PER_DAY)
+        daily = rng.normal(0.0, wander_daily_sigma, n_days)
+        out = out + np.repeat(daily, BINS_PER_DAY)[:t_bins]
+    return validate_ambient(out.astype(np.float32), t_bins)
+
+
+def _concrete(x) -> np.ndarray | None:
+    """Concrete value or None for tracers (see power._concrete)."""
+    if isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return np.asarray(x)
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class PUEParams:
+    """Parameters of the dynamic PUE model (pytree; scalars or ``[S]``).
+
+    ``base`` is the best-case facility overhead (>= 1 by the definition
+    of PUE: facility power / IT power), ``amb_coeff`` the cooling
+    penalty per °C above ``amb_ref``, ``load_coeff`` the partial-load
+    penalty at zero IT utilization (both >= 0).  The default is the
+    exact identity — multiplying by ``dynamic_pue`` with ``PUEParams()``
+    leaves every watt bit-for-bit unchanged.
+
+    >>> PUEParams().base
+    1.0
+    >>> PUEParams(base=0.8)
+    Traceback (most recent call last):
+        ...
+    ValueError: PUE base must be >= 1 (facility/IT power ratio), got 0.8
+    """
+
+    base: Array | float = 1.0        # dimensionless, >= 1
+    amb_coeff: Array | float = 0.0   # PUE per °C above amb_ref
+    amb_ref: Array | float = 18.0    # °C free-cooling reference
+    load_coeff: Array | float = 0.0  # PUE penalty at zero IT load
+
+    def __post_init__(self):
+        b = _concrete(self.base)
+        if b is not None and b.size and (~np.isfinite(b) | (b < 1.0)).any():
+            raise ValueError(
+                f"PUE base must be >= 1 (facility/IT power ratio), "
+                f"got {float(np.min(b))}")
+        for name in ("amb_coeff", "load_coeff"):
+            v = _concrete(getattr(self, name))
+            if v is not None and v.size and (~np.isfinite(v) | (v < 0)).any():
+                raise ValueError(
+                    f"PUE {name} must be finite and >= 0, "
+                    f"got {float(np.min(v))}")
+        ar = _concrete(self.amb_ref)
+        if ar is not None and ar.size and (~np.isfinite(ar)).any():
+            raise ValueError("PUE amb_ref must be finite °C")
+
+
+jax.tree_util.register_pytree_node(
+    PUEParams,
+    lambda p: ((p.base, p.amb_coeff, p.amb_ref, p.load_coeff), None),
+    lambda _, c: PUEParams(*c),
+)
+
+
+def dynamic_pue(load_frac: Array, ambient_c: Array | None,
+                params: PUEParams) -> Array:
+    """Per-bin PUE from IT load and (optionally) the ambient trace.
+
+    ``load_frac`` is the ``[T]`` mean IT utilization (clipped to [0, 1]);
+    ``ambient_c`` the ``[T]`` °C trace or ``None`` (ambient term off).
+    Returns ``[T]`` PUE >= base.  With ``PUEParams()`` the result is
+    exactly 1.0 everywhere — an IEEE-exact identity multiplier.
+    """
+    load = jnp.clip(jnp.asarray(load_frac), 0.0, 1.0)
+    pue = jnp.asarray(params.base, load.dtype) + jnp.asarray(
+        params.load_coeff, load.dtype) * (1.0 - load)
+    if ambient_c is not None:
+        amb = jnp.asarray(ambient_c, load.dtype)
+        pue = pue + jnp.asarray(params.amb_coeff, load.dtype) * jnp.maximum(
+            amb - jnp.asarray(params.amb_ref, load.dtype), 0.0)
+    return pue

@@ -30,9 +30,15 @@ def _rand_score(host: int, t: int, salt: int) -> int:
     return x & 0x7FFFFF
 
 
-def _pick_host(free, need, policy, t, salt):
-    """Argmax-of-score host choice; ties break to the lowest host index."""
-    fits = [h for h in range(len(free)) if free[h] >= need]
+def _pick_host(free, need, policy, t, salt, online=None):
+    """Argmax-of-score host choice; ties break to the lowest host index.
+
+    ``online`` filters placement-eligible hosts (failure windows — both
+    outages and drains accept no *new* placements); scores still key on the
+    raw free-core counts, matching the engine's masked argmax.
+    """
+    fits = [h for h in range(len(free)) if free[h] >= need
+            and (online is None or online[h])]
     if not fits:
         return None
     if policy == "first_fit":
@@ -48,13 +54,20 @@ def _pick_host(free, need, policy, t, salt):
 
 def reference_schedule(submit, dur, cores, valid, *, num_hosts,
                        cores_per_host, t_bins, policy="worst_fit",
-                       backfill_depth=0, max_starts_per_bin=64):
+                       backfill_depth=0, max_starts_per_bin=64,
+                       fail_start=None, fail_end=None, fail_kill=None):
     """Event-semantics FCFS scheduler the vectorized kernel must reproduce.
 
     Per bin: release finished jobs' cores, then repeatedly (a) place the
     queue head if it is submitted and fits anywhere, else (b) let the first
     of its next `backfill_depth` submitted successors that fits jump ahead,
     else (c) block the bin.  Host choice per `_pick_host`.
+
+    Failure schedules (``fail_start``/``fail_end``/``fail_kill``, per-host
+    lists): during ``[fail_start[h], fail_end[h])`` host ``h`` accepts no
+    new placements; when ``fail_kill[h]``, a job placed before the window
+    that would run into it dies at ``fail_start[h]`` and its cores return
+    with the host at ``fail_end[h]``.
     """
     j = len(submit)
     free = [cores_per_host] * num_hosts
@@ -66,6 +79,9 @@ def reference_schedule(submit, dur, cores, valid, *, num_hosts,
     for t in range(t_bins):
         for h in range(num_hosts):
             free[h] += release[t][h]
+        online = (None if fail_start is None else
+                  [not (fail_start[h] <= t < fail_end[h])
+                   for h in range(num_hosts)])
         n = 0
         while n < max_starts_per_bin:
             while next_job < j and job_start[next_job] >= 0:
@@ -74,7 +90,7 @@ def reference_schedule(submit, dur, cores, valid, *, num_hosts,
                     or not valid[next_job]):
                 break
             jid = next_job
-            if _pick_host(free, cores[jid], policy, t, n) is None:
+            if _pick_host(free, cores[jid], policy, t, n, online) is None:
                 jid = None
                 for d in range(1, backfill_depth + 1):
                     c = next_job + d
@@ -83,16 +99,22 @@ def reference_schedule(submit, dur, cores, valid, *, num_hosts,
                     if (job_start[c] >= 0 or not valid[c]
                             or submit[c] > t):
                         continue
-                    if any(f >= cores[c] for f in free):
+                    if any(free[h] >= cores[c]
+                           and (online is None or online[h])
+                           for h in range(num_hosts)):
                         jid = c
                         break
                 if jid is None:
                     break
-            host = _pick_host(free, cores[jid], policy, t, n)
+            host = _pick_host(free, cores[jid], policy, t, n, online)
             free[host] -= cores[jid]
             job_start[jid] = t
             job_host[jid] = host
             end = min(t + max(dur[jid], 1), t_bins)
+            if fail_start is not None and fail_kill[host] \
+                    and t < fail_start[host] < t + max(dur[jid], 1):
+                # killed at the outage; cores come back with the host
+                end = min(fail_end[host], t_bins)
             release[end][host] += cores[jid]
             n += 1
     return job_start, job_host
@@ -123,13 +145,17 @@ def apply_shift(submit, dur, util, cores, valid, deferrable, shift_bins):
 # -- utilization field --------------------------------------------------------
 
 def reference_u_th(job_start, submit, dur, cores, util_levels, job_host, *,
-                   num_hosts, cores_per_host, t_bins):
+                   num_hosts, cores_per_host, t_bins,
+                   fail_start=None, fail_kill=None):
     """``[t_bins][num_hosts]`` per-host utilization from a schedule.
 
     Replicates the engine's post-scan read-out: a job runs in bins
     ``[start, start + max(dur, 1))``, contributing phase
     ``clip((t - start) * U // max(dur, 1), 0, U - 1)`` of its piecewise
     profile times its core count, normalized by the host's core capacity.
+    Killed jobs (pre-outage placements on a ``fail_kill`` host that run
+    into its window) stop at ``fail_start`` — phase indexing keeps the
+    *original* duration, exactly like the engine's ``end_eff`` clamp.
     """
     j = len(job_start)
     u = [[0.0] * num_hosts for _ in range(t_bins)]
@@ -138,7 +164,11 @@ def reference_u_th(job_start, submit, dur, cores, util_levels, job_host, *,
         if job_start[i] < 0:
             continue
         d = max(dur[i], 1)
-        for t in range(job_start[i], min(job_start[i] + d, t_bins)):
+        end = job_start[i] + d
+        if (fail_start is not None and fail_kill[job_host[i]]
+                and job_start[i] < fail_start[job_host[i]] < end):
+            end = fail_start[job_host[i]]
+        for t in range(job_start[i], min(end, t_bins)):
             ph = min(max((t - job_start[i]) * phases // d, 0), phases - 1)
             u[t][job_host[i]] += util_levels[i][ph] * cores[i] / cores_per_host
     return u
@@ -168,9 +198,24 @@ def effective_cap(power_cap_w, carbon_cap_base_w, carbon_cap_slope,
     return cap
 
 
+def reference_pue(util_raw, ambient_t, pue):
+    """Scalar replica of ``repro.traces.thermal.dynamic_pue``.
+
+    ``pue`` is a ``(base, amb_coeff, amb_ref, load_coeff)`` tuple; the
+    ambient term only applies when a temperature is supplied.
+    """
+    base, amb_coeff, amb_ref, load_coeff = pue
+    load = min(max(util_raw, 0.0), 1.0)
+    p = base + load_coeff * (1.0 - load)
+    if ambient_t is not None:
+        p += amb_coeff * max(ambient_t - amb_ref, 0.0)
+    return p
+
+
 def reference_readout(u_th, *, p_idle, p_max, r, power_cap_w=None,
                       carbon_cap_base_w=None, carbon_cap_slope=0.0,
-                      intensity=None, sample_seconds=300.0):
+                      intensity=None, sample_seconds=300.0,
+                      online=None, pue=None, ambient=None, price=None):
     """Masked-readout oracle: demand, enforced cap, throttle, energy, gCO2.
 
     Mirrors ``scenarios._predict_masked`` in plain float64:
@@ -183,23 +228,41 @@ def reference_readout(u_th, *, p_idle, p_max, r, power_cap_w=None,
     * ``util_t``     — mean active-host utilization, linearly throttled by
       the above-idle fraction the cap removed when throttled;
     * ``energy_t`` / ``gco2_t`` — delivered energy (kWh) and carbon (g).
+
+    New axes (all default off, reproducing the old read-out exactly):
+
+    * ``online``  — ``[T][H]`` bool; offline (outage) hosts draw no power,
+      not even idle, and leave the utilization denominator;
+    * ``pue`` / ``ambient`` — ``(base, amb_coeff, amb_ref, load_coeff)``
+      tuple + °C list: demand, idle floor and hence cap enforcement move
+      to facility watts (PUE from the *unthrottled* utilization);
+    * ``price``   — ``[T]`` $/kWh: adds ``cost_t = energy_t * price_t``.
     """
     t_bins = len(u_th)
     num_hosts = len(u_th[0]) if t_bins else 0
-    idle_floor = p_idle * num_hosts
     out = {k: [] for k in ("demand", "cap", "power", "throttled", "util",
-                           "energy_kwh", "gco2")}
+                           "energy_kwh", "gco2", "pue", "cost")}
     for t in range(t_bins):
         i_t = intensity[t] if intensity is not None else None
+        on = online[t] if online is not None else [True] * num_hosts
+        n_on = sum(1 for h in range(num_hosts) if on[h])
         demand = sum(opendc_power(u_th[t][h], p_idle, p_max, r)
-                     for h in range(num_hosts))
+                     for h in range(num_hosts) if on[h])
+        idle_floor = p_idle * n_on
+        util_raw = (sum(u_th[t][h] for h in range(num_hosts) if on[h])
+                    / max(n_on, 1))
+        pue_t = math.nan
+        if pue is not None:
+            pue_t = reference_pue(
+                util_raw, ambient[t] if ambient is not None else None, pue)
+            demand *= pue_t
+            idle_floor *= pue_t
         cap = effective_cap(power_cap_w, carbon_cap_base_w,
                             carbon_cap_slope, i_t)
         throttled = demand > cap
         power = min(demand, cap)
         throttle = min(max((cap - idle_floor)
                            / max(demand - idle_floor, 1e-9), 0.0), 1.0)
-        util_raw = (sum(u_th[t]) / num_hosts) if num_hosts else 0.0
         util = util_raw * throttle if throttled else util_raw
         energy = power * sample_seconds / 3600.0 / 1000.0
         out["demand"].append(demand)
@@ -209,11 +272,15 @@ def reference_readout(u_th, *, p_idle, p_max, r, power_cap_w=None,
         out["util"].append(util)
         out["energy_kwh"].append(energy)
         out["gco2"].append(energy * i_t if i_t is not None else math.nan)
+        out["pue"].append(pue_t)
+        out["cost"].append(energy * price[t] if price is not None
+                           else math.nan)
     return out
 
 
 def reference_scenario(workload, dc, scenario, *, t_bins, p_idle, p_max, r,
-                       intensity=None, max_starts_per_bin=64):
+                       intensity=None, ambient=None, price=None,
+                       max_starts_per_bin=64):
     """Full single-scenario oracle: perturb -> schedule -> readout.
 
     ``workload`` is a dict of plain lists (``submit``, ``dur``, ``cores``,
@@ -223,6 +290,10 @@ def reference_scenario(workload, dc, scenario, *, t_bins, p_idle, p_max, r,
     caller, or the base).  Returns the readout dict plus the schedule and
     post-perturbation submit times (``job_start``, ``job_host``,
     ``submit``, ``waits`` over started valid jobs).
+
+    The scenario's failure windows, PUE fields and the ``ambient``/``price``
+    traces are threaded through schedule, utilization and read-out exactly
+    like the engine's traced lanes.
     """
     submit = list(workload["submit"])
     dur = list(workload["dur"])
@@ -252,19 +323,43 @@ def reference_scenario(workload, dc, scenario, *, t_bins, p_idle, p_max, r,
                       if scenario.cores_per_host is not None
                       else dc.cores_per_host)
     policy = scenario.policy if scenario.policy is not None else "worst_fit"
+
+    fs = fe = fk = None
+    if scenario.failures:
+        fs = [t_bins + 10 ** 6] * num_hosts  # sentinel: never fails
+        fe = [0] * num_hosts
+        fk = [False] * num_hosts
+        for f in scenario.failures:
+            fs[f.host] = int(f.start_bin)
+            fe[f.host] = int(f.end_bin)
+            fk[f.host] = f.kind == "outage"
+
     job_start, job_host = reference_schedule(
         submit, dur, cores, valid, num_hosts=num_hosts,
         cores_per_host=cores_per_host, t_bins=t_bins, policy=policy,
         backfill_depth=int(scenario.backfill_depth),
-        max_starts_per_bin=max_starts_per_bin)
+        max_starts_per_bin=max_starts_per_bin,
+        fail_start=fs, fail_end=fe, fail_kill=fk)
     u_th = reference_u_th(
         job_start, submit, dur, cores, util, job_host,
-        num_hosts=num_hosts, cores_per_host=cores_per_host, t_bins=t_bins)
+        num_hosts=num_hosts, cores_per_host=cores_per_host, t_bins=t_bins,
+        fail_start=fs, fail_kill=fk)
+    online = None
+    if fs is not None:
+        # power-side availability: only *outage* hosts go dark (drained
+        # hosts keep drawing power), matching scenarios._scenario_lanes
+        online = [[not (fk[h] and fs[h] <= t < fe[h])
+                   for h in range(num_hosts)] for t in range(t_bins)]
+    pue = None
+    if scenario.pue_base is not None:
+        pue = (float(scenario.pue_base), float(scenario.pue_amb_coeff),
+               float(scenario.pue_amb_ref), float(scenario.pue_load_coeff))
     out = reference_readout(
         u_th, p_idle=p_idle, p_max=p_max, r=r,
         power_cap_w=scenario.power_cap_w,
         carbon_cap_base_w=scenario.carbon_cap_base_w,
-        carbon_cap_slope=scenario.carbon_cap_slope, intensity=intensity)
+        carbon_cap_slope=scenario.carbon_cap_slope, intensity=intensity,
+        online=online, pue=pue, ambient=ambient, price=price)
     out.update(
         job_start=job_start, job_host=job_host, submit=submit, u_th=u_th,
         waits=[job_start[i] - submit[i] for i in range(len(submit))

@@ -20,9 +20,12 @@ from repro.core.scenarios import (
     scenario_mesh,
     summarize_scenarios,
 )
+from repro.runtime.fault import DEGRADED, OUTAGE, HostFailure
 from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.price import make_diurnal_price
 from repro.traces.schema import DatacenterConfig
 from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+from repro.traces.thermal import make_diurnal_ambient
 
 T_BINS = int(0.25 * BINS_PER_DAY)
 DC = DatacenterConfig(num_hosts=32, cores_per_host=16)
@@ -92,6 +95,46 @@ def test_explicit_mesh_and_padding(workload):
                                       t_bins=T_BINS)
     _assert_trees_equal(ref_sim, sim)
     _assert_trees_equal(ref_pred, pred)
+
+
+def test_sharded_matches_vmap_new_axes(workload):
+    """The three newest axes — failure windows, dynamic PUE and spot
+    price — through the shard path: the ``[T]`` ambient/price traces ride
+    as replicated operands next to carbon, the per-host failure arrays and
+    per-scenario PUE fields shard over S, and the mixed batch (including
+    an axis-free lane) must match the vmap path bit for bit."""
+    ci = make_diurnal_carbon(T_BINS, seed=1)
+    amb = make_diurnal_ambient(T_BINS, seed=2)
+    pr = make_diurnal_price(T_BINS, seed=3)
+    scs = [
+        Scenario(name="base"),                  # all new axes off
+        Scenario(name="outage", failures=(
+            HostFailure(host=3, start_bin=4, end_bin=24, kind=OUTAGE),
+            HostFailure(host=7, start_bin=10, end_bin=40, kind=DEGRADED))),
+        Scenario(name="pue", pue_base=1.2, pue_amb_coeff=0.02,
+                 pue_load_coeff=0.15),
+        Scenario(name="mix", power_cap_w=6000.0, shift_bins=4,
+                 backfill_depth=2, pue_base=1.1, pue_load_coeff=0.05,
+                 failures=(HostFailure(host=0, start_bin=8, end_bin=16,
+                                       kind=OUTAGE),)),
+        Scenario(name="cc-pue", carbon_cap_base_w=7000.0,
+                 carbon_cap_slope=-5.0, pue_base=1.3),
+    ]
+    ss = build_scenario_set(workload, DC, scs)
+    kw = dict(max_hosts=ss.max_hosts, t_bins=T_BINS, carbon_intensity=ci,
+              ambient_c=amb, price=pr)
+    ref_sim, ref_pred = run_scenarios(ss, **kw)
+    sh_sim, sh_pred = run_scenarios(ss, **kw, shard=True)
+    _assert_trees_equal(ref_sim, sh_sim)
+    _assert_trees_equal(ref_pred, sh_pred)
+    ref_sum = summarize_scenarios(ss, ref_sim, ref_pred, carbon_intensity=ci)
+    sh_sum = summarize_scenarios(ss, sh_sim, sh_pred, carbon_intensity=ci)
+    assert ref_sum == sh_sum
+    # the batch really exercised the axes (not silently disabled lanes)
+    assert ref_sum[1].failure_events == 2
+    assert ref_sum[2].mean_pue is not None and ref_sum[2].mean_pue > 1.0
+    assert all(s.energy_cost is not None and s.energy_cost > 0
+               for s in ref_sum)
 
 
 def test_one_lane_per_device_with_backfill(workload):

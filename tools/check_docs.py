@@ -29,6 +29,8 @@ DOCTEST_MODULES = [
     "repro.core.codec",
     "repro.core.state",
     "repro.traces.schema",
+    "repro.traces.thermal",
+    "repro.traces.price",
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
