@@ -1,0 +1,137 @@
+"""Fused DES readout benchmark: legacy vs fused-XLA vs Pallas (PR 7).
+
+Three measurements, tightest scope first:
+
+* **readout microbench** — the per-bin readout alone (utilization ->
+  power shape -> PUE -> cap/throttle -> energy/gCO2/cost) on a dense
+  ``[T, H]`` grid with every axis on, as three warm jitted programs: the
+  legacy unfused composition (``scenarios._predict_masked``), the fused
+  single-pass XLA reference (``des_readout_ref``), and the Pallas kernel.
+  On CPU runtimes the Pallas program runs in *interpret mode* — a
+  correctness emulation, not a performance path — so its wall time is
+  recorded honestly next to the ``backend`` field rather than sold as a
+  speedup; on TPU the compiled kernel is the number that matters.
+
+* **engine sweep** — ``run_scenarios`` end-to-end on a mixed
+  (failures x PUE x price x cap) grid, legacy vs ``use_pallas=True``:
+  warm wall and the single-compile guarantee for both paths.
+
+* **optimizer** — warm candidates/s of the donated single-program search
+  (``whatif_batch.run_optimizer``), the steady-state number the what-if
+  loop is judged by.
+
+    PYTHONPATH=src python benchmarks/run.py des
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import nfr2_speed
+import whatif_batch
+from nfr2_speed import _time
+
+from repro.core.power import PowerParams
+from repro.core.scenarios import Scenario, _predict_masked, build_scenario_set, run_scenarios
+from repro.kernels.des_readout import des_readout_pallas, des_readout_ref
+from repro.runtime.fault import DEGRADED, OUTAGE, HostFailure
+from repro.traces.carbon import make_diurnal_carbon
+from repro.traces.price import make_diurnal_price
+from repro.traces.schema import DatacenterConfig
+from repro.traces.surf import BINS_PER_DAY, SurfTraceSpec, make_surf22_like
+from repro.traces.thermal import make_diurnal_ambient
+
+
+def readout_microbench(t_bins: int = 2 * 288, hosts: int = 277) -> dict:
+    """Warm per-call wall of the three readout programs on one [T, H] grid."""
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.uniform(0, 1, (t_bins, hosts)).astype(np.float32))
+    params = PowerParams()
+    mask = jnp.ones((hosts,), bool)
+    cap_t = jnp.asarray(
+        rng.uniform(15_000.0, 30_000.0, t_bins).astype(np.float32))
+    intensity = jnp.asarray(make_diurnal_carbon(t_bins))
+    ambient = jnp.asarray(make_diurnal_ambient(t_bins, seed=2))
+    price = jnp.asarray(make_diurnal_price(t_bins, seed=3))
+    from repro.traces.thermal import PUEParams
+    pue = PUEParams(base=1.12, amb_coeff=0.004, amb_ref=18.0,
+                    load_coeff=0.08)
+    peak = jnp.float32(100.0)
+
+    legacy = jax.jit(lambda x: _predict_masked(
+        x, params, mask, peak, "opendc", cap_t, intensity,
+        pue=pue, ambient=ambient, price=price).power_w)
+    kw = dict(p_idle=params.p_idle, p_max=params.p_max, r=params.r,
+              cap_t=cap_t, intensity=intensity, ambient=ambient, price=price,
+              peak_tflops=100.0, pue_base=1.12, pue_amb_coeff=0.004,
+              pue_amb_ref=18.0, pue_load_coeff=0.08)
+    fused = jax.jit(lambda x: des_readout_ref(x, **kw)["power_w"])
+    interpret = jax.default_backend() != "tpu"
+    pallas = jax.jit(
+        lambda x: des_readout_pallas(x, **kw, interpret=interpret)["power_w"])
+
+    legacy_s = _time(lambda: legacy(u).block_until_ready())
+    fused_s = _time(lambda: fused(u).block_until_ready())
+    pallas_s = _time(lambda: pallas(u).block_until_ready(),
+                     n=2 if interpret else 5)
+    return {
+        "t_bins": t_bins,
+        "hosts": hosts,
+        "legacy_unfused_s": legacy_s,
+        "fused_xla_s": fused_s,
+        "pallas_s": pallas_s,
+        "pallas_mode": "interpret" if interpret else "compiled",
+        "fused_vs_legacy_speedup": legacy_s / fused_s,
+        "pallas_vs_xla_speedup": fused_s / pallas_s,
+    }
+
+
+def engine_sweep(days: float = 0.5) -> dict:
+    """run_scenarios on a mixed-axes grid: legacy vs fused readout path."""
+    dc = DatacenterConfig()
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    scs = []
+    for fi in (0, 1):
+        fails = () if fi == 0 else (
+            HostFailure(host=4, start_bin=10, end_bin=60, kind=OUTAGE),
+            HostFailure(host=40, start_bin=30, end_bin=90, kind=DEGRADED))
+        for pb, plc in ((1.0, 0.0), (1.12, 0.08)):
+            for cap in (45_000.0, 70_000.0):
+                scs.append(Scenario(name=f"f{fi}-p{pb:.2f}-c{cap:.0f}",
+                                    failures=fails, pue_base=pb,
+                                    pue_load_coeff=plc,
+                                    pue_amb_coeff=0.004 if plc else 0.0,
+                                    power_cap_w=cap))
+    kw = dict(t_bins=t_bins,
+              carbon_intensity=make_diurnal_carbon(t_bins),
+              ambient_c=make_diurnal_ambient(t_bins, seed=2),
+              price=make_diurnal_price(t_bins, seed=3))
+    ss = build_scenario_set(w, dc, scs)
+
+    out = {"grid": len(scs), "t_bins": t_bins}
+    for label, use_pallas in (("legacy", False), ("pallas", True)):
+        jax.clear_caches()
+        cache = run_scenarios._cache_size
+
+        def sweep():
+            _, pred = run_scenarios(ss, max_hosts=ss.max_hosts, **kw,
+                                    use_pallas=use_pallas)
+            pred.energy_cost.block_until_ready()
+
+        warm_s = _time(sweep, n=3)
+        out[f"{label}_warm_s"] = warm_s
+        out[f"{label}_compiles"] = cache() if cache is not None else None
+    out["pallas_vs_legacy_warm"] = out["legacy_warm_s"] / out["pallas_warm_s"]
+    return out
+
+
+def run(days: float = 0.5) -> dict:
+    return {
+        "des_hot_path": nfr2_speed.des_hot_path(),
+        "readout_microbench": readout_microbench(),
+        "engine_sweep": engine_sweep(days),
+        "optimizer": whatif_batch.run_optimizer(days=days),
+    }

@@ -18,6 +18,7 @@ import sys
 sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import des_readout_bench  # noqa: E402
 import e1_footprinter  # noqa: E402
 import m3sa_metamodel  # noqa: E402
 import e2_calibration  # noqa: E402
@@ -28,6 +29,10 @@ import whatif_batch  # noqa: E402
 #: committed what-if/scenario-engine performance snapshot (regenerate with
 #: ``PYTHONPATH=src python benchmarks/run.py whatif``)
 BENCH_WHATIF = os.path.join(os.path.dirname(__file__), "BENCH_whatif.json")
+
+#: committed DES readout-kernel performance snapshot (regenerate with
+#: ``PYTHONPATH=src python benchmarks/run.py des``)
+BENCH_DES = os.path.join(os.path.dirname(__file__), "BENCH_des.json")
 
 
 def whatif_snapshot(days: float = 0.5) -> dict:
@@ -82,6 +87,34 @@ def whatif_snapshot(days: float = 0.5) -> dict:
         "des_hot_path": hot,
     }
     with open(BENCH_WHATIF, "w") as f:
+        json.dump(snap, f, indent=2)
+        f.write("\n")
+    return snap
+
+
+def des_snapshot(days: float = 0.5) -> dict:
+    """Write the DES readout-kernel performance snapshot to BENCH_des.json.
+
+    The PR-7 trajectory entry (ROADMAP open item 2): the DES hot path's
+    scan/readout wall split, the readout microbench (legacy unfused vs
+    fused-XLA vs Pallas, the latter interpret-mode on CPU and recorded as
+    such), the end-to-end engine sweep on both readout paths, and the
+    donated optimizer's warm candidates/s.  The compile counts are the
+    gated invariants (``tools/check_bench.py --compare``); wall-clock
+    numbers are machine-dependent reference points with the backend and
+    device count recorded alongside.
+    """
+    import jax
+
+    d = des_readout_bench.run(days=days)
+    snap = {
+        "regenerate_with": "PYTHONPATH=src python benchmarks/run.py des",
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        **d,
+    }
+    with open(BENCH_DES, "w") as f:
         json.dump(snap, f, indent=2)
         f.write("\n")
     return snap
@@ -151,6 +184,17 @@ def main() -> None:
         f";scan_frac={wi['des_hot_path']['scan_fraction']:.2f}",
     ))
 
+    de = des_snapshot()
+    rows.append((
+        "des_snapshot",
+        de["readout_microbench"]["fused_xla_s"] * 1e6,
+        f"fused_vs_legacy="
+        f"{de['readout_microbench']['fused_vs_legacy_speedup']:.2f}x"
+        f";pallas_mode={de['readout_microbench']['pallas_mode']}"
+        f";sweep_compiles={de['engine_sweep']['pallas_compiles']}"
+        f";cand_per_s={de['optimizer']['cand_per_s_warm']:.1f}",
+    ))
+
     cells = roofline.load_cells()
     summ = roofline.summarize(cells)
     rows.append((
@@ -179,10 +223,14 @@ def main() -> None:
     print(json.dumps(summ, indent=2))
     print(f"\n=== What-if snapshot (written to {BENCH_WHATIF}) ===")
     print(json.dumps(wi, indent=2))
+    print(f"\n=== DES readout snapshot (written to {BENCH_DES}) ===")
+    print(json.dumps(de, indent=2))
 
 
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "whatif":
         print(json.dumps(whatif_snapshot(), indent=2))
+    elif len(sys.argv) > 1 and sys.argv[1] == "des":
+        print(json.dumps(des_snapshot(), indent=2))
     else:
         main()

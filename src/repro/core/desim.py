@@ -562,6 +562,7 @@ def predict_metrics(
     ambient_c: Array | None = None,
     price: Array | None = None,
     pue: "object | None" = None,
+    backend: str = "xla",
 ) -> Prediction:
     """Map a utilization field to the paper's metric set (Fig. 5A/B/C).
 
@@ -576,8 +577,37 @@ def predict_metrics(
     ``pue`` leaf.  ``price`` (``[T]`` $/kWh) fills ``energy_cost`` from
     the (facility) energy.  All three default off, leaving the legacy
     structure untouched.
+
+    ``backend`` selects the readout implementation: ``"xla"`` (and
+    ``"auto"`` off TPU) is the unfused pipeline below, bit-for-bit the
+    historical output; ``"pallas"``/``"pallas_interpret"`` route through
+    the fused one-pass kernel (:mod:`repro.kernels.des_readout`), within
+    oracle tolerance of the unfused path but not bitwise (padded-lane
+    summation).  ``TwinConfig.kernel_backend`` threads this through
+    ``twin_step``, mirroring the calibration kernel switch.
     """
+    from repro.kernels.ops import resolve_backend
     from repro.traces.thermal import dynamic_pue
+
+    if resolve_backend(backend) != "xla":
+        from repro.kernels.ops import des_readout
+
+        kw = {}
+        if pue is not None:
+            kw = dict(pue_base=pue.base, pue_amb_coeff=pue.amb_coeff,
+                      pue_amb_ref=pue.amb_ref, pue_load_coeff=pue.load_coeff)
+        rd = des_readout(
+            u_th, backend=backend, p_idle=params.p_idle,
+            p_max=params.p_max, r=params.r, intensity=carbon_intensity,
+            ambient=ambient_c, price=price, peak_tflops=dc.peak_tflops,
+            model=model, dt_seconds=SAMPLE_SECONDS, **kw)
+        return Prediction(
+            power_w=rd["power_w"], energy_kwh=rd["energy_kwh"],
+            tflops=rd["tflops"], utilization=rd["utilization"],
+            efficiency=rd["efficiency"],
+            gco2=None if carbon_intensity is None else rd["gco2"],
+            pue=None if pue is None else rd["pue"],
+            energy_cost=None if price is None else rd["energy_cost"])
 
     power = datacenter_power(u_th, params, model=model)
     util = jnp.mean(u_th, axis=-1)

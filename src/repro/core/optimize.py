@@ -544,6 +544,7 @@ def optimize(
     max_starts_per_bin: int = 64,
     shard: bool = False,
     mesh=None,
+    use_pallas: bool = False,
 ) -> OptimizeResult:
     """Search the scenario space for the best feasible operating point.
 
@@ -553,6 +554,14 @@ def optimize(
     guarantee as the evaluator itself), scores every lane against
     ``objective`` (:func:`score_batch`), and refines around survivors.
     Deterministic given ``key`` (an int seed or a ``jax.random`` key).
+    ``use_pallas`` selects the fused readout kernel inside the evaluator
+    (see :func:`run_scenarios`).
+
+    On the single-device path every generation *donates* its
+    ``ScenarioSet`` buffers to the evaluator (``run_scenarios(donate=True)``
+    — the set is rebuilt per batch, so the device copies are dead weight
+    after the call); the host-side leaves that scoring and the final
+    summaries read are snapshotted first.
 
     Raises ``ValueError`` when the space needs a carbon trace that was not
     supplied, or when *no* evaluated candidate (baseline included) satisfies
@@ -622,12 +631,16 @@ def optimize(
         ss = build_scenario_set(workload, dc, scenarios, base_params,
                                 max_hosts=mh, max_backfill=mb,
                                 has_failures=has_failures, pue_on=pue_on)
+        # the donating call below invalidates ss's device buffers, so the
+        # leaves scoring + the final summaries read live on as a host copy
+        ss_host = jax.tree.map(np.asarray, ss)
         sim, pred = run_scenarios(
             ss, max_hosts=mh, t_bins=t_bins,
             max_starts_per_bin=max_starts_per_bin, model=model,
             carbon_intensity=carbon_intensity, ambient_c=ambient_c,
-            price=price, shard=shard, mesh=mesh)
-        scores = score_batch(objective, ss, sim, pred, t_bins=t_bins)
+            price=price, shard=shard, mesh=mesh, use_pallas=use_pallas,
+            donate=not shard)
+        scores = score_batch(objective, ss_host, sim, pred, t_bins=t_bins)
         for i, kn in enumerate(lanes):
             cand = Candidate(
                 scenario=scenarios[i],
@@ -652,7 +665,7 @@ def optimize(
                 incumbent, incumbent_kn = cand, kn
         incumbent_trace.append(
             incumbent.objective if incumbent is not None else math.inf)
-        final_artifacts, final_lanes = (ss, sim, pred), lanes
+        final_artifacts, final_lanes = (ss_host, sim, pred), lanes
 
     # generation 0: seed the search
     if config.init == "grid":

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -691,6 +692,8 @@ def _scenario_lanes(
     max_starts_per_bin: int,
     model: str,
     chunk: bool,
+    use_pallas: bool = False,
+    precision: str = "f32",
 ) -> tuple[SimOutput, Prediction]:
     """vmap of the per-lane DES + prediction — the shared trace-level body.
 
@@ -702,7 +705,19 @@ def _scenario_lanes(
     closure constants under the vmap; everything per-scenario rides the S
     axis, and the static ``has_failures``/``pue_on`` aux flags decide
     whether the failure/PUE machinery is compiled in at all.
+
+    ``use_pallas`` swaps the unfused readout (:func:`_predict_masked`) for
+    the fused kernel (:mod:`repro.kernels.des_readout` — interpret mode off
+    TPU), which rebuilds the per-bin online mask in-kernel instead of
+    materializing the ``[T, H]`` availability tensor; ``precision`` is its
+    bf16-where-tolerable policy knob.  The kernel path is within the
+    ``tests/reference.py`` oracle tolerance of the unfused one but not
+    bitwise (padded-lane summation), so it is opt-in per call.
     """
+    if use_pallas:
+        from repro.kernels.ops import des_readout
+        pallas_backend = ("pallas" if jax.devices()[0].platform == "tpu"
+                          else "pallas_interpret")
 
     def one(w, mask, cores, policy_id, backfill_depth, params,
             cap_w, carbon_base, carbon_slope, peak,
@@ -730,6 +745,32 @@ def _scenario_lanes(
                 cap_t,
                 jnp.maximum(carbon_base + carbon_slope * carbon_intensity,
                             0.0))
+        if use_pallas:
+            # fused readout: failure windows become kernel operands (the
+            # online mask is rebuilt per tile from iota time ids) and the
+            # identity-PUE sentinels make the PUE multiply an exact no-op
+            # on lanes that leave the axis off.
+            rd = des_readout(
+                sim.u_th, backend=pallas_backend,
+                p_idle=params.p_idle, p_max=params.p_max, r=params.r,
+                mask=mask, cap_t=cap_t, intensity=carbon_intensity,
+                ambient=ambient_c, price=price, peak_tflops=peak,
+                pue_base=pue_base, pue_amb_coeff=pue_amb_coeff,
+                pue_amb_ref=pue_amb_ref, pue_load_coeff=pue_load_coeff,
+                fail_start=fail_start if use_fail else None,
+                fail_end=fail_end if use_fail else None,
+                fail_kill=fail_kill if use_fail else None,
+                model=model, precision=precision,
+                dt_seconds=SAMPLE_SECONDS)
+            pred = Prediction(
+                power_w=rd["power_w"], energy_kwh=rd["energy_kwh"],
+                tflops=rd["tflops"], utilization=rd["utilization"],
+                efficiency=rd["efficiency"],
+                gco2=None if carbon_intensity is None else rd["gco2"],
+                power_demand_w=rd["power_demand_w"],
+                pue=rd["pue"] if ss.pue_on else None,
+                energy_cost=None if price is None else rd["energy_cost"])
+            return sim, pred
         online_th = None
         if use_fail:
             # power-side availability: only *outage* hosts stop drawing
@@ -758,9 +799,7 @@ def _scenario_lanes(
                          ss.pue_load_coeff)
 
 
-@functools.partial(jax.jit, static_argnames=("max_hosts", "t_bins",
-                                             "max_starts_per_bin", "model"))
-def _run_scenarios_jit(
+def _run_scenarios_body(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
     ambient_c: Array | None,
@@ -770,6 +809,8 @@ def _run_scenarios_jit(
     t_bins: int,
     max_starts_per_bin: int,
     model: str,
+    use_pallas: bool,
+    precision: str,
 ) -> tuple[SimOutput, Prediction]:
     # the DES core's own readout bound is per-scenario; under the scenario
     # vmap every intermediate gains the S axis, so the bound must include S
@@ -779,7 +820,21 @@ def _run_scenarios_jit(
     return _scenario_lanes(
         ss, carbon_intensity, ambient_c, price,
         max_hosts=max_hosts, t_bins=t_bins,
-        max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
+        max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk,
+        use_pallas=use_pallas, precision=precision)
+
+
+_RUN_STATICS = ("max_hosts", "t_bins", "max_starts_per_bin", "model",
+                "use_pallas", "precision")
+_run_scenarios_jit = jax.jit(_run_scenarios_body,
+                             static_argnames=_RUN_STATICS)
+#: same program, but the ScenarioSet argument's buffers are donated — the
+#: optimizer's generation carry uses this so warm searches stop
+#: double-buffering the [S, J] workload leaves.  A separate compiled
+#: program, hence a separate cache: run_scenarios._cache_size sums both.
+_run_scenarios_jit_donated = jax.jit(_run_scenarios_body,
+                                     static_argnames=_RUN_STATICS,
+                                     donate_argnums=(0,))
 
 
 #: mesh axis name the scenario batch is sharded over
@@ -803,7 +858,8 @@ def scenario_mesh(num_devices: int | None = None):
 
 @functools.partial(jax.jit, static_argnames=("mesh", "max_hosts", "t_bins",
                                              "max_starts_per_bin", "model",
-                                             "chunk"))
+                                             "chunk", "use_pallas",
+                                             "precision"))
 def _run_scenarios_sharded_jit(
     ss: ScenarioSet,
     carbon_intensity: Array | None,
@@ -816,6 +872,8 @@ def _run_scenarios_sharded_jit(
     max_starts_per_bin: int,
     model: str,
     chunk: bool,
+    use_pallas: bool = False,
+    precision: str = "f32",
 ) -> tuple[SimOutput, Prediction]:
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -825,7 +883,8 @@ def _run_scenarios_sharded_jit(
         return _scenario_lanes(
             ss_local, ci_local, amb_local, price_local,
             max_hosts=max_hosts, t_bins=t_bins,
-            max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk)
+            max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk,
+            use_pallas=use_pallas, precision=precision)
 
     return shard_map(
         body, mesh=mesh,
@@ -863,6 +922,9 @@ def run_scenarios(
     price: "Array | np.ndarray | None" = None,
     shard: bool = False,
     mesh=None,
+    use_pallas: bool = False,
+    readout_precision: str = "f32",
+    donate: bool = False,
 ) -> tuple[SimOutput, Prediction]:
     """Simulate + predict all S scenarios in one jitted program.
 
@@ -910,6 +972,25 @@ def run_scenarios(
     ``benchmarks/whatif_batch.py``).  S is padded to a multiple of the
     device count with masked scenario-0 replicas and the outputs are sliced
     back to the true S, mirroring the host-axis padding story.
+
+    **Fused readout** (``use_pallas=True``): the post-scan readout runs as
+    the one-pass :mod:`repro.kernels.des_readout` kernel (Pallas on TPU,
+    interpret mode elsewhere) instead of the unfused XLA pipeline.
+    Outputs stay inside the ``tests/reference.py`` oracle tolerance but
+    are *not* bitwise vs the default readout (padded-lane summation), so
+    the flag defaults off and golden comparisons keep the legacy path.
+    ``readout_precision="bf16"`` additionally computes the derived
+    performance leaves (tflops, efficiency) in bf16 — sustainability
+    leaves stay f32; pinned by ``tests/golden/readout_bf16.npz``.
+
+    **Donation** (``donate=True``, single-device path only): the
+    ``ScenarioSet``'s array buffers are donated to the compiled program,
+    halving peak residency of the dominant ``[S, J]`` workload leaves on
+    warm calls.  The caller's ``ss`` (its leaves, including any aliases)
+    is **invalidated** — snapshot anything still needed first.  The
+    optimizer's generation loop runs this way (it re-builds ``ss`` every
+    generation); it is a separate compiled program from the non-donating
+    one, and ``run_scenarios._cache_size`` counts both.
     """
     if carbon_intensity is None:
         if np.isfinite(np.asarray(ss.carbon_cap_base_w)).any():
@@ -951,10 +1032,19 @@ def run_scenarios(
     s = ss.num_scenarios
     anon = dataclasses.replace(ss, names=("",) * s)
     if not shard:
-        return _run_scenarios_jit(
-            anon, ci, amb, pr, max_hosts=max_hosts, t_bins=t_bins,
-            max_starts_per_bin=max_starts_per_bin, model=model,
-        )
+        run = _run_scenarios_jit_donated if donate else _run_scenarios_jit
+        with warnings.catch_warnings():
+            # expected on the donated program: the small [S] knob leaves
+            # have no same-shaped output to reuse, and jax reports them.
+            # The [S, J] workload leaves — the residency that matters —
+            # do get reused; tests/test_compile_invariants.py asserts it.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return run(
+                anon, ci, amb, pr, max_hosts=max_hosts, t_bins=t_bins,
+                max_starts_per_bin=max_starts_per_bin, model=model,
+                use_pallas=use_pallas, precision=readout_precision,
+            )
     mesh = scenario_mesh() if mesh is None else mesh
     n_dev = mesh.shape[SCENARIO_AXIS]
     per_dev = -(-s // n_dev)
@@ -972,13 +1062,21 @@ def run_scenarios(
     out = _run_scenarios_sharded_jit(
         padded, ci, amb, pr, mesh=mesh, max_hosts=max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model, chunk=chunk,
+        use_pallas=use_pallas, precision=readout_precision,
     )
     return jax.tree.map(lambda x: x[:s], out)
 
 
-# surfaced for the single-compilation regression test; `_cache_size` is
-# private jax API, so its absence must degrade to None, not an import error
-run_scenarios._cache_size = getattr(_run_scenarios_jit, "_cache_size", None)
+# surfaced for the single-compilation regression tests; `_cache_size` is
+# private jax API, so its absence must degrade to None, not an import
+# error.  The donated program is a distinct executable with its own cache,
+# so the counter sums both: a donated-only workload (the optimizer) and a
+# non-donating one (the grid benchmarks) each still count 1.
+_jit_caches = tuple(
+    getattr(f, "_cache_size", None)
+    for f in (_run_scenarios_jit, _run_scenarios_jit_donated))
+run_scenarios._cache_size = (
+    (lambda: sum(c() for c in _jit_caches)) if all(_jit_caches) else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1146,6 +1244,7 @@ def evaluate_scenarios(
     price: "Array | np.ndarray | None" = None,
     shard: bool = False,
     mesh=None,
+    use_pallas: bool = False,
 ) -> tuple[ScenarioSet, SimOutput, Prediction, list[ScenarioSummary]]:
     """End-to-end what-if sweep: build, batch-simulate, summarize.
 
@@ -1167,7 +1266,7 @@ def evaluate_scenarios(
         ss, max_hosts=ss.max_hosts, t_bins=t_bins,
         max_starts_per_bin=max_starts_per_bin, model=model,
         carbon_intensity=carbon_intensity, ambient_c=ambient_c, price=price,
-        shard=shard, mesh=mesh,
+        shard=shard, mesh=mesh, use_pallas=use_pallas,
     )
     return ss, sim, pred, summarize_scenarios(
         ss, sim, pred, carbon_intensity=carbon_intensity)

@@ -265,7 +265,7 @@ def init_twin_state(cfg: TwinConfig,
                        p_max=_scalar_param(base_params.p_max, "p_max"),
                        r=_scalar_param(base_params.r, "r"))
     k, tw, h = cfg.history_windows, cfg.bins_per_window, cfg.dc.num_hosts
-    return TwinState(
+    state = TwinState(
         params=base,
         base_params=base,
         cand=candidate_grid(cfg.calibration, base),
@@ -280,6 +280,10 @@ def init_twin_state(cfg: TwinConfig,
         bias_ties=jnp.asarray(0, jnp.int32),
         cfg=cfg,
     )
+    # de-alias the leaves: params/base_params start as the *same* arrays
+    # (and scalar constants may share cached buffers), but twin_step_jit
+    # donates the state — XLA rejects the same buffer donated twice
+    return jax.tree.map(lambda x: jnp.array(x), state)
 
 
 def _push(buf: Array, new: Array, n: Array) -> Array:
@@ -321,7 +325,8 @@ def twin_step(state: TwinState, telemetry: TelemetrySlice,
                            carbon_intensity=sim_slice.carbon_intensity,
                            ambient_c=sim_slice.ambient_c,
                            price=sim_slice.price,
-                           pue=cfg.pue)
+                           pue=cfg.pue,
+                           backend=cfg.kernel_backend)
 
     # Scoring: window MAPE against measured power (NaN without telemetry).
     valid = telemetry.valid
@@ -377,7 +382,13 @@ def twin_step(state: TwinState, telemetry: TelemetrySlice,
 
 #: the shared jitted step the imperative shell (and simple callers) drive —
 #: one compilation per (shapes, cfg) combination, shared across instances.
-twin_step_jit = jax.jit(twin_step)
+#: The window carry is donated: every caller rebinds ``state, out =
+#: twin_step_jit(state, ...)``, so the incoming TwinState's buffers (the
+#: [K, Tw, H] history above all) are dead after the call and XLA reuses
+#: them for the outgoing state instead of double-buffering.  Reading a
+#: donated input afterwards raises — keep a reference to the *new* state
+#: (or use ``jax.jit(twin_step)`` for a non-donating step).
+twin_step_jit = jax.jit(twin_step, donate_argnums=(0,))
 
 
 # -- checkpoint / resume ------------------------------------------------------

@@ -143,7 +143,9 @@ def _run_fleet(fleet: TwinState, telemetry, sim_slices):
     return jax.lax.scan(body, fleet, (telemetry, sim_slices))
 
 
-_run_fleet_jit = jax.jit(_run_fleet)
+# the fleet carry is donated like twin_step_jit's: run_fleet returns the
+# successor state, so the incoming fleet's buffers are reused in place
+_run_fleet_jit = jax.jit(_run_fleet, donate_argnums=(0,))
 
 
 def run_fleet(fleet: TwinState, telemetry, sim_slices
@@ -162,6 +164,10 @@ def run_fleet(fleet: TwinState, telemetry, sim_slices
     Returns the final fleet state and the per-window outputs stacked
     ``[W, D, ...]``.  Each lane is the exact computation :func:`twin_step`
     performs solo (pinned by ``tests/test_twin_core.py``).
+
+    The ``fleet`` argument's buffers are **donated** (rebind the return
+    value; re-running from the same starting state requires a fresh
+    :func:`stack_twin_states`).
     """
     return _run_fleet_jit(fleet, telemetry, sim_slices)
 

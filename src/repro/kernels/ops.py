@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.calib_mape import calib_mape_grid_pallas
+from repro.kernels.des_readout import des_readout_pallas, des_readout_ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.power_sim import power_sim_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
@@ -65,6 +66,23 @@ def power_sim(
         peak_tflops=peak_tflops, dt_seconds=dt_seconds,
         interpret=(b == "pallas_interpret"),
     )
+
+
+def des_readout(u_th: Array, *, backend: Backend = "auto",
+                **kw) -> dict[str, Array]:
+    """Fused DES readout: the full per-bin metric set in one pass.
+
+    Keyword operands are those of
+    :func:`repro.kernels.des_readout.des_readout_pallas`; the ``xla``
+    backend runs the reference over the identical tile decomposition, so
+    in f32 the two backends agree bit for bit (not merely within
+    tolerance).
+    """
+    b = resolve_backend(backend)
+    if b == "xla":
+        return des_readout_ref(u_th, **kw)
+    return des_readout_pallas(u_th, interpret=(b == "pallas_interpret"),
+                              **kw)
 
 
 def flash_attention(

@@ -1,0 +1,218 @@
+"""Tier-1 compile-count and buffer-donation invariants (PR 7 satellite).
+
+These guarantees used to live only in ``benchmarks/whatif_batch.py`` —
+asserted, but outside CI.  This module promotes them into tier-1:
+
+* a mixed (failures x dynamic PUE x spot price x power cap) scenario grid
+  rides ONE compiled program, and a re-parameterized grid of the same
+  shape does not retrace — on both the legacy readout and the fused
+  kernel path (``use_pallas=True``);
+* the multi-generation scenario optimizer compiles its evaluator exactly
+  once, and a warm re-search adds ZERO compiles;
+* donation is real, not advisory: the donated carry of ``twin_step_jit``
+  and the donated ``ScenarioSet`` of ``run_scenarios(donate=True)`` are
+  invalidated by the call (XLA reused their buffers), while the
+  non-donating paths leave inputs readable.
+
+Compile counts come from the jit ``_cache_size`` hook (private jax API);
+where jax stops exposing it the count-based tests skip rather than rot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimize import ObjectiveSpec, OptimizerConfig, SearchSpace, optimize
+from repro.core.scenarios import Scenario, build_scenario_set, run_scenarios
+from repro.core.state import (
+    TwinConfig,
+    init_twin_state,
+    make_telemetry,
+    twin_step_jit,
+)
+from repro.core.state import SimSlice
+from repro.runtime.fault import DEGRADED, OUTAGE, HostFailure
+from repro.traces.schema import DatacenterConfig, Workload
+
+T_BINS = 48
+HOSTS = 6
+
+
+def _workload(seed=0, j=32):
+    rng = np.random.default_rng(seed)
+    return Workload(
+        np.sort(rng.integers(0, T_BINS // 2, j)).astype(np.int32),
+        rng.integers(1, 10, j).astype(np.int32),
+        rng.integers(1, 9, j).astype(np.int32),
+        rng.uniform(0.1, 1.0, (j, 3)).astype(np.float32),
+        np.ones(j, bool),
+        deferrable=rng.random(j) < 0.5)
+
+
+def _traces(seed=1):
+    rng = np.random.default_rng(seed)
+    return dict(
+        carbon_intensity=rng.uniform(80, 600, T_BINS).astype(np.float32),
+        ambient_c=rng.uniform(5, 35, T_BINS).astype(np.float32),
+        price=rng.uniform(0.02, 0.45, T_BINS).astype(np.float32))
+
+
+def _mixed_grid(shift=0):
+    """(failures x PUE x cap) grid; ``shift`` re-seeds values, not shapes."""
+    scs = []
+    for fi in (0, 1):
+        fails = () if fi == 0 else (
+            HostFailure(host=1 + (shift % 2), start_bin=5 + shift,
+                        end_bin=20 + shift, kind=OUTAGE),
+            HostFailure(host=4, start_bin=10, end_bin=30 + shift,
+                        kind=DEGRADED))
+        for pb, plc in ((1.0, 0.0), (1.12 + 0.01 * shift, 0.08)):
+            for cap in (900.0, 1_500.0 + 10.0 * shift):
+                scs.append(Scenario(
+                    name=f"f{fi}-p{pb:.2f}-c{cap:.0f}", failures=fails,
+                    pue_base=pb, pue_load_coeff=plc,
+                    pue_amb_coeff=0.004 if plc else 0.0, power_cap_w=cap))
+    return scs
+
+
+def _cache():
+    c = run_scenarios._cache_size
+    if c is None:
+        pytest.skip("jax no longer exposes the jit _cache_size hook")
+    return c
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["legacy", "pallas"])
+def test_mixed_grid_single_compile(use_pallas):
+    """The (failures x PUE x price x cap) grid is ONE compiled program."""
+    w, dc = _workload(), DatacenterConfig(num_hosts=HOSTS, cores_per_host=8)
+    kw = dict(t_bins=T_BINS, **_traces(), use_pallas=use_pallas)
+    jax.clear_caches()
+    cache = _cache()
+    ss = build_scenario_set(w, dc, _mixed_grid(0))
+    _, pred = run_scenarios(ss, max_hosts=ss.max_hosts, **kw)
+    pred.energy_cost.block_until_ready()
+    assert cache() == 1, f"mixed grid compiled {cache()}x, want 1"
+
+    # same shapes, new failure windows / coefficients / caps: no retrace
+    ss2 = build_scenario_set(w, dc, _mixed_grid(3))
+    _, pred2 = run_scenarios(ss2, max_hosts=ss2.max_hosts, **kw)
+    pred2.energy_cost.block_until_ready()
+    assert cache() == 1, "re-parameterized grid retraced"
+
+
+def test_optimizer_single_compile_and_warm_zero_recompiles():
+    """All generations ride one evaluator; a warm re-search adds nothing."""
+    w, dc = _workload(), DatacenterConfig(num_hosts=HOSTS, cores_per_host=8)
+    space = SearchSpace(
+        structures=(Scenario(name="wf"),
+                    Scenario(name="bf", policy="best_fit", backfill_depth=4)),
+        carbon_cap_base_w=(800.0, 2_000.0),
+        carbon_cap_slope=(-1.0, 0.0),
+        shift_bins=(0, 8))
+    objective = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.5, w_unplaced=50.0)
+    kw = dict(t_bins=T_BINS,
+              carbon_intensity=_traces()["carbon_intensity"], key=0,
+              config=OptimizerConfig(batch_size=6, generations=2,
+                                     init="random"))
+    jax.clear_caches()
+    cache = _cache()
+    optimize(w, dc, space, objective, **kw)
+    assert cache() == 1, f"optimizer compiled {cache()}x, want 1"
+    optimize(w, dc, space, objective, **kw)
+    assert cache() == 1, "warm re-search recompiled the evaluator"
+
+
+def test_optimizer_single_compile_with_pallas_readout():
+    """The fused readout keeps the optimizer's single-compile contract."""
+    w, dc = _workload(), DatacenterConfig(num_hosts=HOSTS, cores_per_host=8)
+    space = SearchSpace(
+        structures=(Scenario(name="wf"),),
+        carbon_cap_base_w=(800.0, 2_000.0),
+        carbon_cap_slope=(-1.0, 0.0),
+        shift_bins=(0, 8))
+    objective = ObjectiveSpec(w_gco2_kg=1.0, w_wait=0.5)
+    kw = dict(t_bins=T_BINS,
+              carbon_intensity=_traces()["carbon_intensity"], key=1,
+              config=OptimizerConfig(batch_size=4, generations=1,
+                                     init="random"),
+              use_pallas=True)
+    jax.clear_caches()
+    cache = _cache()
+    optimize(w, dc, space, objective, **kw)
+    assert cache() == 1
+    optimize(w, dc, space, objective, **kw)
+    assert cache() == 1
+
+
+# -- donation -----------------------------------------------------------------
+
+def _deleted(x) -> bool:
+    """True when jax has invalidated the buffer (donated and consumed)."""
+    try:
+        return bool(x.is_deleted())
+    except AttributeError:  # non-jax leaf (host scalar): never donated
+        return False
+
+
+def test_twin_step_donates_its_carry():
+    cfg = TwinConfig(bins_per_window=8,
+                     dc=DatacenterConfig(num_hosts=HOSTS, cores_per_host=8))
+    rng = np.random.default_rng(2)
+    u = rng.uniform(0, 1, (8, HOSTS)).astype(np.float32)
+    telem = make_telemetry(u, rng.uniform(300, 900, 8).astype(np.float32))
+    sl = SimSlice(u_th=jnp.asarray(u))
+
+    state = init_twin_state(cfg)
+    hist = state.hist_u                    # a big [K, Tw, H] donated leaf
+    new_state, out = twin_step_jit(state, telem, sl)
+    out.mape.block_until_ready()
+    assert _deleted(hist), "twin_step_jit did not donate the carry"
+    # the successor state is alive and steps again (buffers were *reused*,
+    # not lost) — the canonical rebind-the-return-value pattern
+    newer, _ = twin_step_jit(new_state, telem, sl)
+    assert not _deleted(newer.hist_u)
+
+
+def test_run_scenarios_donate_flag():
+    w, dc = _workload(), DatacenterConfig(num_hosts=HOSTS, cores_per_host=8)
+    scs = [Scenario(name="a"), Scenario(name="b", power_cap_w=1_000.0)]
+
+    # donate=False (the default): inputs stay readable after the call
+    ss = build_scenario_set(w, dc, scs)
+    sim, _ = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=T_BINS)
+    sim.u_th.block_until_ready()
+    assert not _deleted(ss.workload.util_levels)
+    np.asarray(ss.workload.util_levels)    # still materializable
+
+    # donate=True: XLA reuses donated buffers that match an output shape —
+    # the [S, J] int32 schedule inputs (submit/duration/cores) against the
+    # [S, J] int32 schedule outputs (job_start/job_host).  Leaves with no
+    # same-shaped output (e.g. [S, J, U] util_levels) legitimately survive.
+    ss = build_scenario_set(w, dc, scs)
+    ss = jax.tree.map(jnp.asarray, ss)     # device-side leaves to donate
+    donated = (ss.workload.submit_bin, ss.workload.duration_bins,
+               ss.workload.cores)
+    sim, _ = run_scenarios(ss, max_hosts=ss.max_hosts, t_bins=T_BINS,
+                           donate=True)
+    sim.u_th.block_until_ready()
+    assert any(_deleted(x) for x in donated), (
+        "donate=True consumed none of the [S, J] schedule buffers — "
+        "donation is not reaching XLA")
+
+
+def test_donated_and_plain_paths_agree():
+    """donate=True is a memory optimization, not a numerics change."""
+    w, dc = _workload(3), DatacenterConfig(num_hosts=HOSTS, cores_per_host=8)
+    scs = _mixed_grid(0)
+    kw = dict(t_bins=T_BINS, **_traces())
+    ss = build_scenario_set(w, dc, scs)
+    sim0, pred0 = run_scenarios(ss, max_hosts=ss.max_hosts, **kw)
+    ss = build_scenario_set(w, dc, scs)
+    sim1, pred1 = run_scenarios(ss, max_hosts=ss.max_hosts, **kw,
+                                donate=True)
+    for a, b in zip(jax.tree.leaves((sim0, pred0)),
+                    jax.tree.leaves((sim1, pred1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

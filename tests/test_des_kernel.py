@@ -1,0 +1,332 @@
+"""Differential gate for the fused DES readout kernel (PR 7 tentpole).
+
+Three rings of defense, tightest first:
+
+* **bitwise** — the Pallas kernel (interpret mode, so it runs in tier-1
+  CI on CPU) against the XLA reference ``des_readout_ref``: identical
+  operand packing + identical tile function ⇒ f32 outputs must be *equal*,
+  not close, across every axis combination and power model;
+* **oracle** — both backends against the pure-f64 ``tests/reference.py``
+  readout at the tolerances ``tests/test_oracle.py`` enforces;
+* **engine** — ``run_scenarios(use_pallas=True)`` and
+  ``predict_metrics(backend="pallas_interpret")`` against their legacy
+  unfused paths: same scan bit-for-bit, readout within oracle tolerance,
+  and identical ``None``-leaf structure.
+
+The bf16 precision policy rides the same harness: sustainability leaves
+must stay bitwise-f32; only tflops/efficiency may move, and by at most a
+few bf16 ulps (the golden pin lives in ``test_precision_golden.py``).
+Hypothesis property tests run when the optional dependency is installed
+(CI exercises the skip path, per the optional-dependency policy).
+"""
+
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from reference import reference_readout
+
+from repro.core.desim import predict_metrics
+from repro.core.power import POWER_MODELS, PowerParams
+from repro.core.scenarios import Scenario, evaluate_scenarios
+from repro.kernels.des_readout import (
+    READOUT_FIELDS,
+    des_readout_pallas,
+    des_readout_ref,
+)
+from repro.runtime.fault import DEGRADED, HostFailure
+from repro.traces.schema import DatacenterConfig, Workload
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+import capture_readout_golden  # noqa: E402  (golden config lives with the tool)
+
+# oracle tolerances — test_oracle.py's contract for the f32 engine
+RTOL = 1e-4
+RTOL_GCO2 = 2e-4
+ATOL = 1e-6
+
+#: small tile size so every case exercises multi-tile grids (t0 offsets,
+#: cross-tile failure windows) — the default TB_T would fold 97 bins into
+#: one tile and hide indexing bugs
+TB = 64
+
+AXES = ("mask", "cap", "carbon", "failures", "pue", "price")
+
+
+def _case(seed, t=97, h=13, axes=AXES):
+    """Randomized readout inputs with the selected axes active."""
+    rng = np.random.default_rng(seed)
+    kw = dict(
+        p_idle=rng.uniform(40.0, 90.0, h).astype(np.float32),
+        p_max=rng.uniform(200.0, 420.0, h).astype(np.float32),
+        r=np.float32(rng.uniform(1.2, 3.4)),
+        peak_tflops=np.float32(rng.uniform(100.0, 500.0)),
+        tb_t=TB,
+    )
+    u = rng.uniform(0.0, 1.15, (t, h)).astype(np.float32)  # >1: SMT bursts
+    if "mask" in axes:
+        kw["mask"] = rng.uniform(size=h) < 0.8
+    if "cap" in axes:
+        # cap at a demand quantile so some bins throttle and some don't,
+        # never at the f32-vs-f64 knife edge of demand == cap
+        rough = float(np.sum(kw["p_idle"]) + 0.4 * np.sum(kw["p_max"]))
+        kw["cap_t"] = rng.uniform(0.5 * rough, 1.1 * rough, t).astype(
+            np.float32)
+    if "carbon" in axes:
+        kw["intensity"] = rng.uniform(50.0, 600.0, t).astype(np.float32)
+    if "failures" in axes:
+        fs = np.where(rng.uniform(size=h) < 0.4,
+                      rng.integers(0, t, h),
+                      np.iinfo(np.int32).max).astype(np.int32)
+        fe = np.minimum(fs.astype(np.int64)
+                        + rng.integers(3, max(t // 2, 4), h),
+                        np.iinfo(np.int32).max).astype(np.int32)
+        kw.update(fail_start=fs, fail_end=fe,
+                  fail_kill=rng.uniform(size=h) < 0.7)
+    if "pue" in axes:
+        kw.update(pue_base=np.float32(rng.uniform(1.05, 1.4)),
+                  pue_amb_coeff=np.float32(rng.uniform(0.0, 0.05)),
+                  pue_amb_ref=np.float32(rng.uniform(10.0, 22.0)),
+                  pue_load_coeff=np.float32(rng.uniform(0.0, 0.25)),
+                  ambient=rng.uniform(-5.0, 38.0, t).astype(np.float32))
+    if "price" in axes:
+        kw["price"] = rng.uniform(-0.05, 0.45, t).astype(np.float32)
+    return u, kw
+
+
+_AXIS_CASES = [
+    ((), 0), (("mask",), 1), (("cap",), 2), (("cap", "carbon"), 3),
+    (("failures",), 4), (("pue",), 5), (("price",), 6), (AXES, 7),
+]
+
+
+@pytest.mark.parametrize("axes,seed", _AXIS_CASES,
+                         ids=["+".join(a) or "plain" for a, _ in _AXIS_CASES])
+def test_pallas_bitwise_equals_xla_ref(axes, seed):
+    """f32 kernel vs XLA reference: equal bits, every axis combination."""
+    u, kw = _case(seed, axes=axes)
+    got = des_readout_pallas(u, **kw, interpret=True)
+    want = des_readout_ref(u, **kw)
+    assert set(got) == set(READOUT_FIELDS)
+    for k in READOUT_FIELDS:
+        a, b = np.asarray(got[k]), np.asarray(want[k])
+        assert a.shape == (u.shape[0],)
+        assert np.array_equal(a, b), f"{k}: pallas != ref (axes {axes})"
+
+
+@pytest.mark.parametrize("model", sorted(POWER_MODELS))
+def test_power_models_bitwise(model):
+    u, kw = _case(11, axes=("mask", "cap"))
+    got = des_readout_pallas(u, **kw, model=model, interpret=True)
+    want = des_readout_ref(u, **kw, model=model)
+    for k in READOUT_FIELDS:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), (
+            f"{model}: {k}")
+
+
+def test_unknown_model_and_precision_rejected():
+    u, kw = _case(0, t=8, h=3, axes=())
+    with pytest.raises(ValueError, match="unknown power model"):
+        des_readout_ref(u, **kw, model="quartic")
+    with pytest.raises(ValueError, match="unknown precision policy"):
+        des_readout_ref(u, **kw, precision="f16")
+
+
+@pytest.mark.parametrize("axes,seed", _AXIS_CASES,
+                         ids=["+".join(a) or "plain" for a, _ in _AXIS_CASES])
+def test_kernel_matches_f64_oracle(axes, seed):
+    """Both backends vs the pure-Python f64 readout at oracle tolerance."""
+    u, kw = _case(seed, axes=axes)
+    t, h = u.shape
+    mask = kw.get("mask", np.ones(h, bool))
+    online = None
+    if "failures" in axes:
+        tt = np.arange(t)[:, None]
+        offline = (kw["fail_kill"][None, :]
+                   & (tt >= kw["fail_start"][None, :])
+                   & (tt < kw["fail_end"][None, :]))
+        online = (mask[None, :] & ~offline).tolist()
+    elif "mask" in axes:
+        online = np.broadcast_to(mask, (t, h)).tolist()
+    # the oracle takes scalar p_idle/p_max and a scalar static cap, so the
+    # oracle leg re-randomizes those as scalars (the kernel broadcasts them)
+    rng = np.random.default_rng(seed + 1000)
+    pi, pm = float(rng.uniform(40, 90)), float(rng.uniform(200, 420))
+    kw = dict(kw, p_idle=np.float32(pi), p_max=np.float32(pm))
+    cap = None
+    if "cap" in axes:
+        cap = float(h * rng.uniform(0.5, 1.1) * (pi + 0.4 * (pm - pi)))
+        kw["cap_t"] = np.full(t, cap, np.float32)
+    ref = reference_readout(
+        u.tolist(), p_idle=pi, p_max=pm, r=float(kw["r"]),
+        power_cap_w=cap,
+        intensity=(None if "carbon" not in axes
+                   else kw["intensity"].tolist()),
+        online=online,
+        pue=(None if "pue" not in axes
+             else (float(kw["pue_base"]), float(kw["pue_amb_coeff"]),
+                   float(kw["pue_amb_ref"]), float(kw["pue_load_coeff"]))),
+        ambient=(None if "pue" not in axes else kw["ambient"].tolist()),
+        price=(None if "price" not in axes else kw["price"].tolist()))
+    for name, out in (("pallas", des_readout_pallas(u, **kw, interpret=True)),
+                      ("ref", des_readout_ref(u, **kw))):
+        pairs = [("power_demand_w", "demand", RTOL, 0.0),
+                 ("power_w", "power", RTOL, 0.0),
+                 ("utilization", "util", RTOL, ATOL),
+                 ("energy_kwh", "energy_kwh", RTOL, 0.0)]
+        if "carbon" in axes:
+            pairs.append(("gco2", "gco2", RTOL_GCO2, 0.0))
+        if "pue" in axes:
+            pairs.append(("pue", "pue", RTOL, 0.0))
+        if "price" in axes:
+            pairs.append(("energy_cost", "cost", RTOL, 1e-5))
+        for got_k, ref_k, rtol, atol in pairs:
+            np.testing.assert_allclose(
+                np.asarray(out[got_k], np.float64), np.asarray(ref[ref_k]),
+                rtol=rtol, atol=atol,
+                err_msg=f"{name}:{got_k} vs oracle {ref_k} (axes {axes})")
+
+
+# -- engine integration -------------------------------------------------------
+
+def _engine_case(seed=3, j=24, hosts=4, t_bins=60):
+    rng = np.random.default_rng(seed)
+    w = Workload(
+        np.sort(rng.integers(0, t_bins // 2, j)).astype(np.int32),
+        rng.integers(1, 9, j).astype(np.int32),
+        rng.integers(1, 9, j).astype(np.int32),
+        rng.uniform(0.1, 1.0, (j, 3)).astype(np.float32),
+        np.ones(j, bool),
+        deferrable=rng.random(j) < 0.5)
+    dc = DatacenterConfig(num_hosts=hosts, cores_per_host=8)
+    scs = [
+        Scenario(name="base"),
+        Scenario(name="small", num_hosts=hosts - 1, policy="best_fit"),
+        Scenario(name="cap", power_cap_w=hosts * 150.0,
+                 carbon_cap_base_w=hosts * 260.0, carbon_cap_slope=-0.4),
+        Scenario(name="outage+pue", pue_base=1.2, pue_load_coeff=0.15,
+                 pue_amb_coeff=0.02, failures=(
+                     HostFailure(0, t_bins // 4, t_bins // 2),
+                     HostFailure(1, 5, 20, kind=DEGRADED))),
+        Scenario(name="shift", shift_bins=6),
+    ]
+    traces = dict(
+        carbon_intensity=rng.uniform(80.0, 600.0, t_bins).astype(np.float32),
+        ambient_c=rng.uniform(5.0, 35.0, t_bins).astype(np.float32),
+        price=rng.uniform(0.02, 0.45, t_bins).astype(np.float32))
+    return w, dc, scs, t_bins, traces
+
+
+def test_run_scenarios_use_pallas_matches_legacy():
+    w, dc, scs, t_bins, traces = _engine_case()
+    params = PowerParams(p_idle=63.0, p_max=341.0, r=2.3)
+    _, sim0, pred0, _ = evaluate_scenarios(
+        w, dc, scs, t_bins=t_bins, base_params=params, **traces)
+    _, sim1, pred1, _ = evaluate_scenarios(
+        w, dc, scs, t_bins=t_bins, base_params=params, **traces,
+        use_pallas=True)
+    # the DES scan is untouched by the readout swap: schedules are equal
+    np.testing.assert_array_equal(np.asarray(sim0.job_start),
+                                  np.asarray(sim1.job_start))
+    np.testing.assert_array_equal(np.asarray(sim0.u_th),
+                                  np.asarray(sim1.u_th))
+    for name in ("power_w", "energy_kwh", "tflops", "utilization",
+                 "efficiency", "gco2", "power_demand_w", "pue",
+                 "energy_cost"):
+        a, b = getattr(pred0, name), getattr(pred1, name)
+        assert (a is None) == (b is None), f"{name}: structure changed"
+        if a is None:
+            continue
+        rtol = RTOL_GCO2 if name == "gco2" else RTOL
+        np.testing.assert_allclose(np.asarray(b, np.float64),
+                                   np.asarray(a, np.float64),
+                                   rtol=rtol, atol=ATOL, err_msg=name)
+
+
+def test_run_scenarios_use_pallas_no_axes_structure():
+    """Axis-free sweep: optional leaves stay None on the kernel path too."""
+    w, dc, scs, t_bins, _ = _engine_case()
+    _, _, pred, _ = evaluate_scenarios(
+        w, dc, [Scenario(name="base"), Scenario(name="bf",
+                                                policy="best_fit")],
+        t_bins=t_bins, use_pallas=True)
+    assert pred.gco2 is None and pred.energy_cost is None
+    assert pred.pue is None
+    assert pred.power_demand_w is not None   # always filled by this engine
+
+
+def test_predict_metrics_backend_matches_legacy():
+    rng = np.random.default_rng(5)
+    u = rng.uniform(0.0, 1.1, (36, 7)).astype(np.float32)
+    dc = DatacenterConfig(num_hosts=7, cores_per_host=8)
+    params = PowerParams(p_idle=70.0, p_max=350.0, r=2.0)
+    from repro.traces.thermal import PUEParams
+    kw = dict(carbon_intensity=rng.uniform(100, 500, 36).astype(np.float32),
+              ambient_c=rng.uniform(0, 35, 36).astype(np.float32),
+              price=rng.uniform(0.01, 0.4, 36).astype(np.float32),
+              pue=PUEParams(base=1.2, amb_coeff=0.03, load_coeff=0.1))
+    legacy = predict_metrics(u, params, dc, **kw)
+    fused = predict_metrics(u, params, dc, **kw, backend="pallas_interpret")
+    for name in ("power_w", "energy_kwh", "tflops", "utilization",
+                 "efficiency", "gco2", "pue", "energy_cost"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(fused, name), np.float64),
+            np.asarray(getattr(legacy, name), np.float64),
+            rtol=RTOL_GCO2, atol=ATOL, err_msg=name)
+    # legacy structure: the demand leaf stays None on the twin-step path
+    assert fused.power_demand_w is None and legacy.power_demand_w is None
+    bare_l = predict_metrics(u, params, dc)
+    bare_f = predict_metrics(u, params, dc, backend="pallas_interpret")
+    for name in ("gco2", "pue", "energy_cost", "power_demand_w"):
+        assert getattr(bare_f, name) is None
+        assert getattr(bare_l, name) is None
+
+
+# -- precision policy ---------------------------------------------------------
+
+def test_bf16_policy_sustainability_stays_f32():
+    """bf16 touches only tflops/efficiency; everything else is bitwise f32."""
+    u, kw = _case(7, axes=AXES)
+    f32 = des_readout_pallas(u, **kw, interpret=True)
+    bf16 = des_readout_pallas(u, **kw, precision="bf16", interpret=True)
+    ref16 = des_readout_ref(u, **kw, precision="bf16")
+    for k in READOUT_FIELDS:
+        # the policy is backend-invariant: pallas bf16 == ref bf16 bitwise
+        assert np.array_equal(np.asarray(bf16[k]), np.asarray(ref16[k])), k
+    for k in set(READOUT_FIELDS) - {"tflops", "efficiency"}:
+        assert np.array_equal(np.asarray(bf16[k]), np.asarray(f32[k])), (
+            f"{k}: bf16 policy leaked into a sustainability leaf")
+    for k in ("tflops", "efficiency"):
+        a, b = np.asarray(bf16[k], np.float64), np.asarray(f32[k], np.float64)
+        rel = np.abs(a - b) / np.maximum(np.abs(b), 1e-9)
+        # a couple of bf16 rounding steps (eps = 2^-8), never more
+        assert float(rel.max()) < 2.0 ** -6, f"{k}: bf16 error {rel.max()}"
+
+
+def test_bf16_golden_pinned():
+    """The precision policy is pinned bit-for-bit by the committed golden.
+
+    Regen (only) on an intentional policy change:
+    ``PYTHONPATH=src python tools/capture_readout_golden.py``.
+    """
+    g = np.load(pathlib.Path(__file__).parent / "golden" / "readout_bf16.npz")
+    bf16, f32 = capture_readout_golden.run()
+    for k in READOUT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(bf16[k]), g[f"bf16_{k}"],
+                                      err_msg=f"bf16 {k} drifted from golden")
+        np.testing.assert_array_equal(np.asarray(f32[k]), g[f"f32_{k}"],
+                                      err_msg=f"f32 {k} drifted from golden")
+    # the policy's promise, asserted against the committed artifact itself:
+    # sustainability leaves identical, perf leaves inside oracle headroom
+    for k in set(READOUT_FIELDS) - {"tflops", "efficiency"}:
+        np.testing.assert_array_equal(g[f"bf16_{k}"], g[f"f32_{k}"])
+    for k in ("tflops", "efficiency"):
+        rel = (np.abs(g[f"bf16_{k}"].astype(np.float64) - g[f"f32_{k}"])
+               / np.maximum(np.abs(g[f"f32_{k}"]), 1e-9))
+        assert float(rel.max()) < 2.0 ** -6
+
+
+# hypothesis property tests live in test_des_kernel_property.py (module-level
+# importorskip, same optional-dependency policy as tests/test_property.py)

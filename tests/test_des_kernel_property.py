@@ -1,0 +1,58 @@
+"""Hypothesis property tests for the fused DES readout kernel.
+
+``hypothesis`` is optional (same policy as ``tests/test_property.py``):
+environments without it skip this module instead of failing collection.
+Randomized shapes and axis subsets probe what the parametrized cases in
+``test_des_kernel.py`` can't enumerate — odd tile remainders, single-bin
+horizons, every axis power set — and assert both the bitwise
+pallas-vs-reference contract and the physical invariants of the readout.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.des_readout import (
+    READOUT_FIELDS,
+    des_readout_pallas,
+    des_readout_ref,
+)
+from test_des_kernel import AXES, _case
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       t=st.integers(1, 70), h=st.integers(1, 9),
+       axes=st.sets(st.sampled_from(AXES)))
+def test_bitwise_and_physical_invariants(seed, t, h, axes):
+    u, kw = _case(seed, t=t, h=h, axes=tuple(sorted(axes)))
+    got = des_readout_pallas(u, **kw, interpret=True)
+    want = des_readout_ref(u, **kw)
+    for k in READOUT_FIELDS:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), k
+    power = np.asarray(got["power_w"], np.float64)
+    demand = np.asarray(got["power_demand_w"], np.float64)
+    energy = np.asarray(got["energy_kwh"], np.float64)
+    util = np.asarray(got["utilization"], np.float64)
+    assert np.all(np.isfinite(demand)) and np.all(np.isfinite(util))
+    # delivered power never exceeds demand, and the cap is enforced exactly
+    assert np.all(power <= demand)
+    if "cap" in axes:
+        assert np.all(power <= np.asarray(kw["cap_t"], np.float64))
+    # energy is delivered power integrated over the 5-minute bin
+    np.testing.assert_allclose(energy, power * (300.0 / 3600.0) / 1000.0,
+                               rtol=1e-6)
+    assert np.all(util >= 0.0) and np.all(util <= 1.0 + 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), t=st.integers(1, 50),
+       h=st.integers(1, 8))
+def test_bf16_policy_never_touches_sustainability(seed, t, h):
+    u, kw = _case(seed, t=t, h=h, axes=AXES)
+    f32 = des_readout_ref(u, **kw)
+    bf16 = des_readout_ref(u, **kw, precision="bf16")
+    for k in set(READOUT_FIELDS) - {"tflops", "efficiency"}:
+        assert np.array_equal(np.asarray(bf16[k]), np.asarray(f32[k])), k

@@ -1,0 +1,80 @@
+"""Capture the fused-readout precision-policy golden as an npz.
+
+Pins the ``precision="bf16"`` readout of ``repro.kernels.des_readout``
+bit-for-bit on one fixed randomized case with every axis active, next to
+its f32 run — so any drift in the precision policy (a leaf silently moving
+to bf16, a changed rounding point, a widened matmul) shows up as a golden
+diff instead of a quiet accuracy change.  The paired f32 arrays double as
+the in-test bound: bf16 may only touch ``tflops``/``efficiency``, and only
+within a few bf16 ulps (far inside the ``tests/reference.py`` oracle
+tolerance the engine is held to).
+
+Regenerate (only) on an intentional change to the precision policy:
+
+    PYTHONPATH=src python tools/capture_readout_golden.py
+
+Same pattern as ``capture_optimize_golden.py``: the test
+(``tests/test_des_kernel.py::test_bf16_golden_pinned``) re-runs this exact
+configuration and compares with ``assert_array_equal``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.kernels.des_readout import READOUT_FIELDS, des_readout_ref
+
+OUT = (pathlib.Path(__file__).resolve().parent.parent
+       / "tests" / "golden" / "readout_bf16.npz")
+
+#: the pinned configuration — the golden test mirrors these exactly
+SEED = 20260808
+T, H = 150, 11
+
+
+def case():
+    """The exact (u_th, kwargs) the golden run and the golden test share."""
+    rng = np.random.default_rng(SEED)
+    fs = np.where(rng.uniform(size=H) < 0.4,
+                  rng.integers(0, T, H),
+                  np.iinfo(np.int32).max).astype(np.int32)
+    rough = 11 * 200.0
+    return rng.uniform(0.0, 1.1, (T, H)).astype(np.float32), dict(
+        p_idle=rng.uniform(40.0, 90.0, H).astype(np.float32),
+        p_max=rng.uniform(200.0, 420.0, H).astype(np.float32),
+        r=np.float32(2.3),
+        mask=rng.uniform(size=H) < 0.85,
+        cap_t=rng.uniform(0.4 * rough, 1.2 * rough, T).astype(np.float32),
+        intensity=rng.uniform(50.0, 600.0, T).astype(np.float32),
+        ambient=rng.uniform(-5.0, 38.0, T).astype(np.float32),
+        price=rng.uniform(0.01, 0.45, T).astype(np.float32),
+        peak_tflops=np.float32(250.0),
+        pue_base=np.float32(1.18), pue_amb_coeff=np.float32(0.01),
+        pue_amb_ref=np.float32(18.0), pue_load_coeff=np.float32(0.12),
+        fail_start=fs,
+        fail_end=np.minimum(fs.astype(np.int64) + 30,
+                            np.iinfo(np.int32).max).astype(np.int32),
+        fail_kill=rng.uniform(size=H) < 0.6,
+        tb_t=64)
+
+
+def run():
+    u, kw = case()
+    return (des_readout_ref(u, **kw, precision="bf16"),
+            des_readout_ref(u, **kw))
+
+
+def main() -> None:
+    bf16, f32 = run()
+    np.savez(OUT,
+             **{f"bf16_{k}": np.asarray(bf16[k]) for k in READOUT_FIELDS},
+             **{f"f32_{k}": np.asarray(f32[k]) for k in READOUT_FIELDS})
+    moved = [k for k in READOUT_FIELDS
+             if not np.array_equal(np.asarray(bf16[k]), np.asarray(f32[k]))]
+    print(f"wrote {OUT}: T={T} H={H}; bf16 moved only {moved}")
+
+
+if __name__ == "__main__":
+    main()

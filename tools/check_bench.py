@@ -1,0 +1,199 @@
+"""Validate the committed ``benchmarks/BENCH_*.json`` performance snapshots.
+
+Two modes, both CI-wired (the bench-snapshot job):
+
+* **schema** (default) — every committed snapshot parses, carries the
+  provenance trio (``regenerate_with`` / ``backend`` / ``devices``), and
+  its invariant fields hold: compile counts are exactly 1, the sharded
+  cross-check is either a boolean that is ``true`` or an explicit
+  ``"skipped: ..."`` reason string (a bare ``null`` means the check was
+  silently dropped — the PR-7 bug this tool exists to catch), and
+  wall-clock fields are positive finite numbers.
+
+* **--compare OLD_DIR** — regression gate between two snapshot sets: the
+  compile-count invariants must not grow (a retrace regression fails the
+  job); wall-clock drift is reported but informational, since the
+  committed numbers come from whatever machine regenerated them last.
+
+    PYTHONPATH=src python tools/check_bench.py
+    PYTHONPATH=src python tools/check_bench.py --compare /tmp/old_benchmarks
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+
+#: required provenance keys in every snapshot
+PROVENANCE = ("regenerate_with", "jax_version", "backend", "devices")
+
+#: dotted paths of compile-count invariants per snapshot file; missing
+#: entries fail (the invariant was dropped), None values are allowed only
+#: if jax stopped exposing the cache hook on the regenerating machine
+COMPILE_COUNTS = {
+    "BENCH_whatif.json": (
+        "optimizer.compiles",
+        "new_axes_grid.compiles",
+    ),
+    "BENCH_des.json": (
+        "optimizer.compiles",
+        "engine_sweep.legacy_compiles",
+        "engine_sweep.pallas_compiles",
+    ),
+}
+
+#: dotted paths that must be positive finite wall-clock seconds
+WALL_CLOCKS = {
+    "BENCH_whatif.json": (
+        "optimizer.warm_s",
+        "new_axes_grid.grid_s",
+        "window_step.mean_seconds",
+        "des_hot_path.scan_s",
+        "des_hot_path.total_s",
+    ),
+    "BENCH_des.json": (
+        "des_hot_path.scan_s",
+        "des_hot_path.total_s",
+        "readout_microbench.legacy_unfused_s",
+        "readout_microbench.fused_xla_s",
+        "readout_microbench.pallas_s",
+        "engine_sweep.legacy_warm_s",
+        "engine_sweep.pallas_warm_s",
+        "optimizer.warm_s",
+    ),
+}
+
+
+def _get(snap: dict, path: str):
+    cur = snap
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def check_snapshot(path: pathlib.Path) -> list[str]:
+    """All schema violations in one committed snapshot (empty = clean)."""
+    errors: list[str] = []
+    try:
+        snap = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+
+    for key in PROVENANCE:
+        if key not in snap:
+            errors.append(f"{path.name}: missing provenance field {key!r}")
+    if not isinstance(snap.get("devices"), int) or snap.get("devices", 0) < 1:
+        errors.append(f"{path.name}: devices must be a positive int")
+
+    for cpath in COMPILE_COUNTS.get(path.name, ()):
+        try:
+            v = _get(snap, cpath)
+        except KeyError:
+            errors.append(f"{path.name}: compile-count field {cpath} missing")
+            continue
+        if v is None:
+            continue  # cache hook unavailable on the regenerating machine
+        if v != 1:
+            errors.append(f"{path.name}: {cpath} = {v}, want 1 "
+                          "(single-compile invariant broken)")
+
+    for wpath in WALL_CLOCKS.get(path.name, ()):
+        try:
+            v = _get(snap, wpath)
+        except KeyError:
+            errors.append(f"{path.name}: wall-clock field {wpath} missing")
+            continue
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            errors.append(f"{path.name}: {wpath} = {v!r}, want finite > 0")
+
+    # the sharded cross-check must be an explicit outcome, never null
+    if path.name == "BENCH_whatif.json":
+        sbe = _get(snap, "new_axes_grid")["sharded_bitwise_equal"] \
+            if "new_axes_grid" in snap else None
+        if sbe is None:
+            errors.append(
+                f"{path.name}: new_axes_grid.sharded_bitwise_equal is null — "
+                "record true (checked) or an explicit 'skipped: ...' reason")
+        elif isinstance(sbe, str):
+            if not sbe.startswith("skipped:"):
+                errors.append(f"{path.name}: sharded_bitwise_equal string "
+                              f"must start with 'skipped:', got {sbe!r}")
+        elif sbe is not True:
+            errors.append(f"{path.name}: sharded_bitwise_equal = {sbe!r} — "
+                          "the shard_map path diverged from vmap")
+    return errors
+
+
+def compare_snapshots(old_dir: pathlib.Path) -> tuple[list[str], list[str]]:
+    """(failures, infos) between ``old_dir`` and the committed snapshots.
+
+    Compile counts may never grow; wall-clock drift is informational.
+    """
+    failures: list[str] = []
+    infos: list[str] = []
+    for name, cpaths in COMPILE_COUNTS.items():
+        old_p, new_p = old_dir / name, BENCH_DIR / name
+        if not old_p.exists() or not new_p.exists():
+            infos.append(f"{name}: missing on one side, compare skipped")
+            continue
+        old = json.loads(old_p.read_text())
+        new = json.loads(new_p.read_text())
+        for cpath in cpaths:
+            try:
+                ov, nv = _get(old, cpath), _get(new, cpath)
+            except KeyError as e:
+                failures.append(f"{name}: {e.args[0]} missing in one side")
+                continue
+            if ov is not None and nv is not None and nv > ov:
+                failures.append(f"{name}: {cpath} regressed {ov} -> {nv} "
+                                "(retrace regression)")
+        for wpath in WALL_CLOCKS.get(name, ()):
+            try:
+                ov, nv = _get(old, wpath), _get(new, wpath)
+            except KeyError:
+                continue
+            if isinstance(ov, (int, float)) and isinstance(nv, (int, float)) \
+                    and ov > 0:
+                infos.append(f"{name}: {wpath} {ov:.4f}s -> {nv:.4f}s "
+                             f"({nv / ov - 1.0:+.1%} vs old)")
+    return failures, infos
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--compare", metavar="OLD_DIR", default=None,
+                    help="old benchmarks/ dir to diff compile counts against")
+    args = ap.parse_args(argv)
+
+    snaps = sorted(BENCH_DIR.glob("BENCH_*.json"))
+    if not snaps:
+        print("check_bench: no benchmarks/BENCH_*.json found", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for p in snaps:
+        errors.extend(check_snapshot(p))
+
+    if args.compare:
+        failures, infos = compare_snapshots(pathlib.Path(args.compare))
+        errors.extend(failures)
+        for line in infos:
+            print(f"  info: {line}")
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench: {len(snaps)} snapshot(s) OK "
+          f"({', '.join(p.name for p in snaps)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
