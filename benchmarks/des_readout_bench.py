@@ -60,6 +60,7 @@ def readout_microbench(t_bins: int = 2 * 288, hosts: int = 277) -> dict:
                     load_coeff=0.08)
     peak = jnp.float32(100.0)
 
+    # tracecheck: disable=TC001 — throwaway jits; compile time is measured
     legacy = jax.jit(lambda x: _predict_masked(
         x, params, mask, peak, "opendc", cap_t, intensity,
         pue=pue, ambient=ambient, price=price).power_w)
@@ -67,8 +68,10 @@ def readout_microbench(t_bins: int = 2 * 288, hosts: int = 277) -> dict:
               cap_t=cap_t, intensity=intensity, ambient=ambient, price=price,
               peak_tflops=100.0, pue_base=1.12, pue_amb_coeff=0.004,
               pue_amb_ref=18.0, pue_load_coeff=0.08)
+    # tracecheck: disable=TC001 — throwaway jits; compile time is measured
     fused = jax.jit(lambda x: des_readout_ref(x, **kw)["power_w"])
     interpret = jax.default_backend() != "tpu"
+    # tracecheck: disable=TC001 — throwaway jits; compile time is measured
     pallas = jax.jit(
         lambda x: des_readout_pallas(x, **kw, interpret=interpret)["power_w"])
 

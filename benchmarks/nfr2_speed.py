@@ -55,8 +55,10 @@ def des_hot_path(days: float = 2.0, dc: DatacenterConfig | None = None) -> dict:
     kw = dict(max_hosts=dc.num_hosts, t_bins=t_bins)
 
     # scan only: the readout never feeds job_start, so XLA DCEs it entirely
+    # tracecheck: disable=TC001 — throwaway jits; compile time is measured
     scan_only = jax.jit(lambda wl: simulate_utilization_masked(
         wl, mask, cores, **kw).job_start)
+    # tracecheck: disable=TC001 — throwaway jits; compile time is measured
     full = jax.jit(lambda wl: simulate_utilization_masked(
         wl, mask, cores, **kw).u_th)
 

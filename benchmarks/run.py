@@ -34,6 +34,25 @@ BENCH_WHATIF = os.path.join(os.path.dirname(__file__), "BENCH_whatif.json")
 #: ``PYTHONPATH=src python benchmarks/run.py des``)
 BENCH_DES = os.path.join(os.path.dirname(__file__), "BENCH_des.json")
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_findings() -> int:
+    """Standing tracecheck debt, recorded in snapshot provenance.
+
+    Counts every post-suppression finding a fresh ``python -m tools.lint``
+    run reports (baselined or new), so the perf trajectory also shows the
+    contract-debt trend (tools/check_bench.py --compare prints the drift).
+    """
+    if _REPO_ROOT not in sys.path:
+        sys.path.insert(0, _REPO_ROOT)
+    from tools.lint.engine import DEFAULT_BASELINE, load_baseline, run_lint
+    entries = (load_baseline(DEFAULT_BASELINE)
+               if DEFAULT_BASELINE.exists() else [])
+    res = run_lint(["src", "tests", "benchmarks", "tools"],
+                   baseline_entries=entries)
+    return len(res.findings)
+
 
 def whatif_snapshot(days: float = 0.5) -> dict:
     """Write the scenario-engine performance snapshot to BENCH_whatif.json.
@@ -71,6 +90,7 @@ def whatif_snapshot(days: float = 0.5) -> dict:
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "devices": len(jax.devices()),
+        "lint_findings": lint_findings(),
         "optimizer": {
             "days": days,
             "candidates": opt["candidates"],
@@ -112,6 +132,7 @@ def des_snapshot(days: float = 0.5) -> dict:
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "devices": len(jax.devices()),
+        "lint_findings": lint_findings(),
         **d,
     }
     with open(BENCH_DES, "w") as f:

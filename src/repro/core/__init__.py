@@ -37,6 +37,7 @@ from repro.core.optimize import (
     score_batch,
 )
 from repro.core.orchestrator import (
+    Clock,
     OptimizeWhatIfResult,
     Orchestrator,
     OrchestratorConfig,
@@ -109,7 +110,8 @@ __all__ = [
     "Candidate", "ObjectiveSpec", "OptimizeResult", "OptimizerConfig",
     "SearchSpace", "optimize", "score_batch",
     "OptimizeWhatIfResult",
-    "Orchestrator", "OrchestratorConfig", "WhatIfResult", "WindowRecord",
+    "Clock", "Orchestrator", "OrchestratorConfig", "WhatIfResult",
+    "WindowRecord",
     "SCENARIO_AXIS", "Scenario", "ScenarioSet", "ScenarioSummary",
     "build_scenario_set", "evaluate_scenarios", "run_scenarios",
     "scenario_mesh", "summarize_scenarios",

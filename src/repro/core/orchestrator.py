@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +88,20 @@ class OrchestratorConfig:
     #: facility power (IT x PUE(load, ambient)) instead of bare IT draw.
     #: Scenarios that set their own ``pue_base`` override this default.
     pue: PUEParams | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Clock:
+    """Injectable wall clock for the I/O shell (tracecheck TC007).
+
+    ``now``/``sleep`` default to the real clock; pacing tests inject fakes
+    so acceleration behavior is asserted deterministically instead of
+    slept out.  The pure core never sees this object — wall time only
+    touches records and pacing, never the traced math.
+    """
+
+    now: Callable[[], float] = time.time
+    sleep: Callable[[float], None] = time.sleep
 
 
 @dataclasses.dataclass
@@ -167,6 +182,7 @@ class Orchestrator:
         carbon_intensity: "np.ndarray | None" = None,
         ambient_c: "np.ndarray | None" = None,
         price: "np.ndarray | None" = None,
+        clock: Clock | None = None,
     ):
         self.workload = workload
         self.dc = dc
@@ -196,6 +212,7 @@ class Orchestrator:
                 "OrchestratorConfig.pue has amb_coeff > 0 but no ambient_c "
                 "trace was supplied — pass ambient_c=[t_bins] deg C or use "
                 "a load-only PUE model (amb_coeff=0)")
+        self.clock = clock or Clock()
         self.store = TelemetryStore(cfg.bins_per_window)
         self.gate = gate or HITLGate()
         self.records: list[WindowRecord] = []
@@ -276,7 +293,7 @@ class Orchestrator:
         ``twin_step`` (predict S_k with params from C_{k-1}; score + calibrate
         C_k when telemetry has landed), then do the shell work — records,
         float64 carbon bookkeeping, proposals, pacing."""
-        t_start = time.time()
+        t_start = self.clock.now()
         sim = self._ensure_sim()
         sl = self.window_slice(window)
 
@@ -326,7 +343,7 @@ class Orchestrator:
                                       self.dc.num_hosts))
 
         # All the math: one pure, jitted step on the twin core.
-        t0 = time.time()
+        t0 = self.clock.now()
         self.state, out = twin_step_jit(
             self.state, telem, SimSlice(u_th=sim.u_th[sl],
                                         carbon_intensity=ci_w,
@@ -334,7 +351,7 @@ class Orchestrator:
                                         price=pr_w))
         pred = out.prediction
         pred.power_w.block_until_ready()
-        sim_seconds = time.time() - t0
+        sim_seconds = self.clock.now() - t0
 
         rec = WindowRecord(
             window=window, started_at=t_start, sim_seconds=sim_seconds,
@@ -380,9 +397,9 @@ class Orchestrator:
         # acceleration factor: live mode sleeps out the window's wall time.
         if self.cfg.acceleration:
             wall = self.cfg.bins_per_window * SAMPLE_SECONDS / self.cfg.acceleration
-            spent = time.time() - t_start
+            spent = self.clock.now() - t_start
             if wall > spent:
-                time.sleep(min(wall - spent, 1.0))  # capped for tests
+                self.clock.sleep(min(wall - spent, 1.0))  # capped for tests
         return rec
 
     # -- batched what-if analysis (paper Fig. 1, operator loop) --------------

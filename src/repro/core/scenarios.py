@@ -716,6 +716,7 @@ def _scenario_lanes(
     """
     if use_pallas:
         from repro.kernels.ops import des_readout
+        # tracecheck: disable=TC007 — platform dispatch at trace time
         pallas_backend = ("pallas" if jax.devices()[0].platform == "tpu"
                           else "pallas_interpret")
 
@@ -851,9 +852,10 @@ def scenario_mesh(num_devices: int | None = None):
     """
     from repro.parallel.sharding import make_mesh_compat
 
-    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    devs = jax.devices()  # tracecheck: disable=TC007 — mesh discovery is this helper's purpose
+    n = len(devs) if num_devices is None else int(num_devices)
     return make_mesh_compat((n,), (SCENARIO_AXIS,),
-                            devices=np.array(jax.devices()[:n]))
+                            devices=np.array(devs[:n]))
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "max_hosts", "t_bins",

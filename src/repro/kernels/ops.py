@@ -31,7 +31,7 @@ Backend = Literal["auto", "pallas", "pallas_interpret", "xla"]
 def resolve_backend(backend: Backend) -> str:
     if backend != "auto":
         return backend
-    platform = jax.devices()[0].platform
+    platform = jax.devices()[0].platform  # tracecheck: disable=TC007 — backend="auto" dispatch
     return "pallas" if platform == "tpu" else "xla"
 
 

@@ -79,6 +79,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         # moments shard exactly like their parameter; step is replicated
         o_shard = type(o_abs)(step=rep, mu=p_shard, nu=p_shard)
         step = make_train_step(cfg, opt_cfg, ctx)
+        # tracecheck: disable=TC001 — per-cell AOT lower/compile is the product
         jitted = jax.jit(
             step,
             in_shardings=(p_shard, o_shard, b_shard),
@@ -88,6 +89,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         lowered = jitted.lower(p_abs, o_abs, b_abs)
     elif shape.kind == "prefill":
         step = make_prefill_step(cfg, ctx)
+        # tracecheck: disable=TC001 — per-cell AOT lower/compile is the product
         jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
                          out_shardings=None)
         lowered = jitted.lower(p_abs, b_abs)
@@ -96,6 +98,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         s_abs = abstract_params(sspecs, dtype)
         s_shard = specs_to_shardings(sspecs, mesh, mode)
         step = make_serve_step(cfg, ctx)
+        # tracecheck: disable=TC001 — per-cell AOT lower/compile is the product
         jitted = jax.jit(
             step,
             in_shardings=(p_shard, s_shard, b_shard),

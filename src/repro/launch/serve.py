@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -18,6 +19,13 @@ from repro.launch.steps import make_serve_step, param_specs_for, state_specs_for
 from repro.launch.train import reduce_config
 from repro.models.common import init_params
 from repro.parallel.sharding import ShardingCtx
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_step_jit(cfg):
+    """One donating serve jit per config — cached so repeated mains (tests,
+    notebooks) reuse the compilation instead of rebuilding it (TC001)."""
+    return jax.jit(make_serve_step(cfg, ShardingCtx()), donate_argnums=(1,))
 
 
 def main() -> None:
@@ -43,7 +51,7 @@ def main() -> None:
     # zero caches/states
     state = jax.tree.map(lambda t: jnp.zeros_like(t), state)
 
-    serve = jax.jit(make_serve_step(cfg, ShardingCtx()), donate_argnums=(1,))
+    serve = _serve_step_jit(cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  min(cfg.vocab, 1000), jnp.int32)
 

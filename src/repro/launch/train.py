@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
@@ -81,6 +82,13 @@ def _scale_sections(cfg: ModelConfig, factor: int):
     return (t, h, w)
 
 
+@functools.lru_cache(maxsize=None)
+def _train_step_jit(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """One train-step jit per (model, optimizer) config — cached at module
+    scope so repeated mains reuse the compilation (TC001)."""
+    return jax.jit(make_train_step(cfg, opt_cfg, ShardingCtx()))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -102,8 +110,7 @@ def main() -> None:
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5),
                           total_steps=args.steps)
-    ctx = ShardingCtx()          # single device
-    step_fn_jit = jax.jit(make_train_step(cfg, opt_cfg, ctx))
+    step_fn_jit = _train_step_jit(cfg, opt_cfg)   # single device
     pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                     global_batch=args.batch, seed=args.seed))
 

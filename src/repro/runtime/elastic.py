@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import numpy as np
 from jax.sharding import Mesh
 
@@ -61,7 +60,13 @@ def plan_mesh(
                     grad_accum=1)
 
 
-def build_mesh(plan: MeshPlan, devices=None) -> Mesh:
-    devices = devices if devices is not None else jax.devices()
+def build_mesh(plan: MeshPlan, devices) -> Mesh:
+    """Materialize a plan over an explicit device list.
+
+    ``devices`` is required (pass ``jax.devices()`` at the call site): mesh
+    re-planning after a failure must be a pure function of the surviving
+    device set the caller observed, not of ambient discovery at build time
+    (tracecheck TC007 — the runtime layer is deterministic-core).
+    """
     n = int(np.prod(plan.shape))
     return make_mesh_compat(plan.shape, plan.axes, devices=devices[:n])

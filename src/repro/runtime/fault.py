@@ -17,7 +17,6 @@ Two layers share this module because they model the same physical event
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import numpy as np

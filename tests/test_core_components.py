@@ -141,12 +141,14 @@ def test_metamodel_combiners():
 
 def test_orchestrator_acceleration_modes():
     """Acceleration factor (paper §2.3): live mode (factor=1) paces windows
-    against wall time; max mode (None) runs as fast as compute allows."""
-    import time
+    against wall time; max mode (None) runs as fast as compute allows.
+    Pacing is asserted through the injectable Clock — deterministic, no
+    real sleeping in tier 1."""
+    import itertools
 
     import jax.numpy as jnp
 
-    from repro.core import Orchestrator, OrchestratorConfig
+    from repro.core import Clock, Orchestrator, OrchestratorConfig
     from repro.traces.schema import DatacenterConfig, Workload
 
     dc = DatacenterConfig(num_hosts=4)
@@ -155,20 +157,28 @@ def test_orchestrator_acceleration_modes():
         jnp.ones((2,), jnp.int32) * 8,
         jnp.ones((2, 2), jnp.float32) * 0.5, jnp.ones((2,), bool))
 
+    def fake_clock(sleeps):
+        # each now() reads 10 ms later than the last; sleeps are recorded,
+        # never slept
+        ticks = itertools.count()
+        return Clock(now=lambda: next(ticks) * 0.01, sleep=sleeps.append)
+
+    fast_sleeps: list = []
     fast = Orchestrator(w, dc, t_bins=24,
                         cfg=OrchestratorConfig(bins_per_window=12,
-                                               acceleration=None))
-    fast.run(1)                      # warm up jit before timing
-    t0 = time.time()
-    fast.run_window(1)
-    fast_t = time.time() - t0
-    assert fast_t < 0.9              # max-acceleration window is sub-second
+                                               acceleration=None),
+                        clock=fake_clock(fast_sleeps))
+    fast.run(2)
+    assert fast_sleeps == []         # max acceleration: never paces
+    # the fake clock feeds the run records too
+    assert all(rec.sim_seconds > 0 for rec in fast.records)
 
+    live_sleeps: list = []
     live = Orchestrator(w, dc, t_bins=24,
                         cfg=OrchestratorConfig(bins_per_window=12,
-                                               acceleration=1.0))
-    t0 = time.time()
+                                               acceleration=1.0),
+                        clock=fake_clock(live_sleeps))
     live.run(1)
-    live_t = time.time() - t0
-    # live mode must pace against wall time (sleep capped at 1 s in-library)
-    assert live_t >= 0.9
+    # live mode paces out the window's wall time (12 bins x 300 s >> the
+    # fake 30 ms of compute), with the in-library 1 s cap per window
+    assert live_sleeps == [1.0]

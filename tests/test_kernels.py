@@ -46,6 +46,7 @@ def test_power_sim_sweep(t, h):
     (2, 8, 2, 100, 100, 32, True, jnp.float32),      # GQA ragged seq
     (2, 4, 1, 64, 64, 64, False, jnp.float32),       # MQA bidirectional
     (1, 6, 2, 1, 96, 64, True, jnp.float32),         # decode shape
+    # tracecheck: disable=TC005 — attention dtype sweep, not twin math
     (2, 4, 2, 128, 128, 64, True, jnp.bfloat16),     # bf16
     (1, 4, 4, 257, 257, 16, True, jnp.float32),      # non-tile-aligned
 ])
@@ -56,7 +57,7 @@ def test_flash_attention_sweep(b, hq, hkv, sq, skv, d, causal, dtype):
     want = ref.flash_attention_ref(q, k, v, causal=causal)
     got = flash_attention_pallas(q, k, v, causal=causal, interpret=True,
                                  q_blk=64, k_blk=64)
-    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5  # tracecheck: disable=TC005 — dtype sweep tolerance
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=tol, atol=tol * 10)

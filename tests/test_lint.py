@@ -1,0 +1,408 @@
+"""tracecheck (tools/lint) — fixtures per rule, ratchet, suppressions.
+
+The linter is pure stdlib, so these tests run without jax; the fixtures
+lint tiny synthetic trees under tmp_path with an injectable registry, and
+one tier-1 test asserts the *committed* baseline matches a fresh run of
+the real tree (no new findings, no stale entries).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import types
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.lint import engine, rules  # noqa: E402
+from tools.lint.engine import load_baseline, run_lint  # noqa: E402
+
+
+def make_registry(**over):
+    base = dict(
+        JIT_ENTRYPOINTS={"mod.entry": ()},
+        STATIC_PARAM_NAMES=frozenset({"cfg", "model"}),
+        DONATING_JITS={},
+        BF16_ALLOWED_FILES=frozenset({"src/allowed.py"}),
+        OPTIONAL_MODULES=("zstandard", "hypothesis"),
+        DETERMINISTIC_DIRS=("src/core/",),
+        NONDETERMINISM_ALLOWED=frozenset(),
+        JIT_HYGIENE_DIRS=("src/", "benchmarks/"),
+        MAX_FAST_EXAMPLES=50,
+    )
+    base.update(over)
+    return types.SimpleNamespace(**base)
+
+
+def lint(tmp_path, files, registry=None, rule_set=None, baseline=None):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint([tmp_path], root=tmp_path,
+                    registry=registry or make_registry(),
+                    baseline_entries=baseline or [],
+                    rules=rule_set)
+
+
+# -- TC001: jit construction hygiene ------------------------------------------
+
+BAD_TC001 = {"src/a.py": """\
+    import jax
+
+    def f(x):
+        g = jax.jit(lambda v: v + 1)
+        return g(x)
+    """}
+
+
+def test_tc001_flags_in_function_jit(tmp_path):
+    res = lint(tmp_path, BAD_TC001, rule_set=[rules.rule_tc001])
+    assert [f.rule for f in res.findings] == ["TC001"]
+    assert "src/a.py" in res.findings[0].key
+
+
+def test_tc001_module_level_and_cached_factories_pass(tmp_path):
+    res = lint(tmp_path, {"src/a.py": """\
+        import functools
+        import jax
+
+        top = jax.jit(lambda v: v + 1)
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def decorated(v, k):
+            return v * k
+
+        @functools.lru_cache(maxsize=None)
+        def factory(k):
+            return jax.jit(lambda v: v * k)
+        """}, rule_set=[rules.rule_tc001])
+    assert res.findings == []
+
+
+def test_tc001_out_of_scope_dirs_exempt(tmp_path):
+    files = {"tests/test_a.py": BAD_TC001["src/a.py"]}
+    res = lint(tmp_path, files, rule_set=[rules.rule_tc001])
+    assert res.findings == []
+
+
+# -- TC002: concretization in jit-reachable code ------------------------------
+
+def test_tc002_flags_concretized_param_transitively(tmp_path):
+    res = lint(tmp_path, {"src/mod.py": """\
+        def entry(x, cfg):
+            return helper(x) + other(x)
+
+        def helper(y):
+            return float(y)
+
+        def other(z):
+            return z.item()
+        """}, rule_set=[rules.rule_tc002])
+    assert sorted(f.message.split("'")[1] for f in res.findings) == ["y", "z"]
+
+
+def test_tc002_static_shape_and_cfg_pass(tmp_path):
+    res = lint(tmp_path, {"src/mod.py": """\
+        import jax.numpy as jnp
+
+        def entry(x, cfg, n: int):
+            m = int(x.shape[0])          # shape metadata: static
+            k = float(cfg.scale)         # cfg: static by convention
+            j = int(n)                   # annotated host scalar
+            return jnp.asarray(x) * m * k * j
+        """}, rule_set=[rules.rule_tc002])
+    assert res.findings == []
+
+
+def test_tc002_unreachable_function_ignored(tmp_path):
+    res = lint(tmp_path, {"src/mod.py": """\
+        def host_only(x):
+            return float(x)
+        """}, rule_set=[rules.rule_tc002])
+    assert res.findings == []
+
+
+# -- TC003: python branches on traced values ----------------------------------
+
+def test_tc003_flags_traced_branch(tmp_path):
+    res = lint(tmp_path, {"src/mod.py": """\
+        def entry(x):
+            if x > 0:
+                return x
+            while x < 5:
+                x = x + 1
+            return -x
+        """}, rule_set=[rules.rule_tc003])
+    assert [f.rule for f in res.findings] == ["TC003", "TC003"]
+
+
+def test_tc003_structural_checks_pass(tmp_path):
+    res = lint(tmp_path, {"src/mod.py": """\
+        def entry(x, cfg):
+            if x is None:
+                return None
+            if isinstance(x, tuple):
+                x = x[0]
+            if x.shape[0] > 4:
+                return x[:4]
+            if cfg.calibrate:
+                return x * 2
+            return x
+        """}, rule_set=[rules.rule_tc003])
+    assert res.findings == []
+
+
+# -- TC004: donated-buffer reuse ----------------------------------------------
+
+DONATING = {"src/mod.py": """\
+    import jax
+
+    def step(s, t):
+        return s, s.sum()
+
+    step_jit = jax.jit(step, donate_argnums=(0,))
+    """}
+
+
+def test_tc004_flags_read_after_donation(tmp_path):
+    files = dict(DONATING)
+    files["src/use.py"] = """\
+        from mod import step_jit
+
+        def bad(state, t):
+            new, out = step_jit(state, t)
+            return state.sum()
+
+        def bad_loop(state, ts):
+            for t in ts:
+                new, out = step_jit(state, t)
+            return new
+        """
+    res = lint(tmp_path, files, rule_set=[rules.rule_tc004])
+    assert [f.rule for f in res.findings] == ["TC004", "TC004"]
+    assert all("state" in f.message for f in res.findings)
+
+
+def test_tc004_rebinding_passes(tmp_path):
+    files = dict(DONATING)
+    files["src/use.py"] = """\
+        from mod import step_jit
+
+        def good(state, t):
+            state, out = step_jit(state, t)
+            return state.sum()
+
+        def good_loop(state, ts):
+            for t in ts:
+                state, out = step_jit(state, t)
+            return state
+        """
+    res = lint(tmp_path, files, rule_set=[rules.rule_tc004])
+    assert res.findings == []
+
+
+def test_tc004_discovers_donation_without_registry(tmp_path):
+    # DONATING_JITS is empty in the fixture registry: the donate_argnums
+    # assignment in src/mod.py is discovered syntactically
+    files = dict(DONATING)
+    files["src/use.py"] = """\
+        from mod import step_jit
+
+        def bad(state, t):
+            new, out = step_jit(state, t)
+            return state
+        """
+    reg = make_registry(DONATING_JITS={})
+    res = lint(tmp_path, files, registry=reg, rule_set=[rules.rule_tc004])
+    assert len(res.findings) == 1
+
+
+# -- TC005: bf16 outside the allow-list ---------------------------------------
+
+def test_tc005_allowlist(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def f(x):
+            return x.astype(jnp.bfloat16)
+        """
+    res = lint(tmp_path, {"src/allowed.py": src, "src/stray.py": src},
+               rule_set=[rules.rule_tc005])
+    assert [f.path for f in res.findings] == ["src/stray.py"]
+
+
+# -- TC006: optional-dependency imports ---------------------------------------
+
+def test_tc006_bare_vs_guarded(tmp_path):
+    res = lint(tmp_path, {
+        "src/bare.py": "import zstandard\n",
+        "src/guarded.py": """\
+            try:
+                import zstandard
+            except ImportError:
+                zstandard = None
+            """,
+        "tests/test_skipped.py": """\
+            import pytest
+
+            pytest.importorskip("hypothesis")
+            from hypothesis import given
+            """,
+    }, rule_set=[rules.rule_tc006])
+    assert [f.path for f in res.findings] == ["src/bare.py"]
+
+
+# -- TC007: nondeterminism in the deterministic core --------------------------
+
+def test_tc007_calls_flagged_references_and_seeded_rngs_pass(tmp_path):
+    res = lint(tmp_path, {"src/core/t.py": """\
+        import time
+
+        import numpy as np
+
+        def bad():
+            return time.time(), np.random.rand()
+
+        def good(clock=time.time):
+            rng = np.random.default_rng(42)
+            return rng.normal()
+        """}, rule_set=[rules.rule_tc007])
+    assert sorted(f.line for f in res.findings) == [6, 6]
+
+
+def test_tc007_allowlist_and_scope(tmp_path):
+    src = "import time\n\ndef f():\n    return time.time()\n"
+    reg = make_registry(NONDETERMINISM_ALLOWED=frozenset(
+        {("src/core/ok.py", "time.time")}))
+    res = lint(tmp_path, {"src/core/ok.py": src, "src/shell.py": src},
+               registry=reg, rule_set=[rules.rule_tc007])
+    assert res.findings == []        # allow-listed + outside core dirs
+
+
+# -- TC008: slow-worthy tests without the marker ------------------------------
+
+def test_tc008_hypothesis_budget_and_golden_regen(tmp_path):
+    res = lint(tmp_path, {"tests/test_heavy.py": """\
+        import numpy as np
+        import pytest
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=500)
+        @given(st.integers())
+        def test_big(x):
+            assert x == x
+
+        @pytest.mark.slow
+        @settings(max_examples=500)
+        @given(st.integers())
+        def test_big_marked(x):
+            assert x == x
+
+        @settings(max_examples=20)
+        @given(st.integers())
+        def test_small(x):
+            assert x == x
+
+        def test_regen():
+            np.savez("tests/golden/new.npz", a=1)
+        """}, rule_set=[rules.rule_tc008])
+    assert [(f.line, f.rule) for f in res.findings] == [(5, "TC008"),
+                                                        (22, "TC008")]
+
+
+# -- suppressions -------------------------------------------------------------
+
+def test_suppression_comment_same_line_and_line_above(tmp_path):
+    res = lint(tmp_path, {"src/a.py": """\
+        import jax
+
+        def f(x):
+            g = jax.jit(lambda v: v)  # tracecheck: disable=TC001 — fixture
+            # tracecheck: disable=TC001 — fixture
+            h = jax.jit(
+                lambda v: v + 1)
+            return g(x) + h(x)
+        """}, rule_set=[rules.rule_tc001])
+    assert res.findings == []
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    res = lint(tmp_path, {"src/a.py": """\
+        import jax
+
+        def f(x):
+            g = jax.jit(lambda v: v)  # tracecheck: disable=TC005
+            return g(x)
+        """}, rule_set=[rules.rule_tc001])
+    assert len(res.findings) == 1    # TC005 suppression does not hide TC001
+
+
+# -- baseline ratchet ---------------------------------------------------------
+
+def test_baseline_ratchet(tmp_path):
+    # 1. a grandfathered finding passes under its baseline entry
+    res = lint(tmp_path, BAD_TC001, rule_set=[rules.rule_tc001])
+    key = res.findings[0].key
+    entry = [{"key": key, "reason": "fixture debt"}]
+    res = lint(tmp_path, BAD_TC001, rule_set=[rules.rule_tc001],
+               baseline=entry)
+    assert res.ok and [f.key for f in res.baselined] == [key]
+
+    # 2. a NEW finding alongside the old one fails
+    files = {"src/a.py": textwrap.dedent(BAD_TC001["src/a.py"])
+             + "\n\ndef f2(x):\n    return jax.jit(lambda v: v)(x)\n"}
+    res = lint(tmp_path, files, rule_set=[rules.rule_tc001], baseline=entry)
+    assert not res.ok and len(res.new) == 1 and len(res.baselined) == 1
+
+    # 3. fixing the debt without deleting the entry fails as stale
+    res = lint(tmp_path, {"src/a.py": "X = 1\n"},
+               rule_set=[rules.rule_tc001], baseline=entry)
+    assert not res.ok and res.stale == [key]
+
+
+def test_baseline_entries_require_reasons(tmp_path):
+    bp = tmp_path / "baseline.json"
+    bp.write_text(json.dumps({"version": 1,
+                              "entries": [{"key": "TC001::x", "reason": ""}]}))
+    with pytest.raises(ValueError, match="no reason"):
+        load_baseline(bp)
+
+
+# -- the real tree ------------------------------------------------------------
+
+def test_committed_baseline_matches_fresh_run():
+    """Tier-1 ratchet integrity: a fresh lint of the repo produces no new
+    findings and leaves no stale baseline entries."""
+    entries = (load_baseline(engine.DEFAULT_BASELINE)
+               if engine.DEFAULT_BASELINE.exists() else [])
+    res = run_lint(["src", "tests", "benchmarks", "tools"],
+                   baseline_entries=entries)
+    assert res.new == [], "\n".join(f.render() for f in res.new)
+    assert res.stale == [], f"stale baseline entries: {res.stale}"
+
+
+def test_cli_exit_codes(tmp_path):
+    env = {**os.environ, "PYTHONPATH": str(REPO_ROOT)}
+    ok = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--explain", "TC003"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env)
+    assert ok.returncode == 0 and "lax.cond" in ok.stdout
+    # an injected violation must fail the run: lint a fixture tree whose
+    # root is tmp_path so the bad file counts as src/
+    tree = tmp_path / "src"
+    tree.mkdir()
+    (tree / "bad.py").write_text(textwrap.dedent(BAD_TC001["src/a.py"]))
+    fail = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--no-baseline",
+         "--root", str(tmp_path), "src"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env)
+    assert fail.returncode == 1 and "TC001" in fail.stdout

@@ -2,8 +2,9 @@
 
 Two modes, both CI-wired (the bench-snapshot job):
 
-* **schema** (default) — every committed snapshot parses, carries the
-  provenance trio (``regenerate_with`` / ``backend`` / ``devices``), and
+* **schema** (default; spelled ``--validate`` in CI) — every committed
+  snapshot parses, carries the provenance fields (``regenerate_with`` /
+  ``backend`` / ``devices`` / ``lint_findings``), and
   its invariant fields hold: compile counts are exactly 1, the sharded
   cross-check is either a boolean that is ``true`` or an explicit
   ``"skipped: ..."`` reason string (a bare ``null`` means the check was
@@ -29,8 +30,11 @@ import sys
 
 BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
 
-#: required provenance keys in every snapshot
-PROVENANCE = ("regenerate_with", "jax_version", "backend", "devices")
+#: required provenance keys in every snapshot.  ``lint_findings`` is the
+#: standing tracecheck debt at regeneration time (see tools/lint): the
+#: perf trajectory doubles as the contract-debt trend.
+PROVENANCE = ("regenerate_with", "jax_version", "backend", "devices",
+              "lint_findings")
 
 #: dotted paths of compile-count invariants per snapshot file; missing
 #: entries fail (the invariant was dropped), None values are allowed only
@@ -91,6 +95,10 @@ def check_snapshot(path: pathlib.Path) -> list[str]:
             errors.append(f"{path.name}: missing provenance field {key!r}")
     if not isinstance(snap.get("devices"), int) or snap.get("devices", 0) < 1:
         errors.append(f"{path.name}: devices must be a positive int")
+    lf = snap.get("lint_findings")
+    if lf is not None and (not isinstance(lf, int) or lf < 0):
+        errors.append(f"{path.name}: lint_findings must be an int >= 0, "
+                      f"got {lf!r}")
 
     for cpath in COMPILE_COUNTS.get(path.name, ()):
         try:
@@ -154,6 +162,11 @@ def compare_snapshots(old_dir: pathlib.Path) -> tuple[list[str], list[str]]:
             if ov is not None and nv is not None and nv > ov:
                 failures.append(f"{name}: {cpath} regressed {ov} -> {nv} "
                                 "(retrace regression)")
+        # contract-debt trend: informational (the lint CI job is the gate
+        # for NEW findings; this line makes the trajectory visible)
+        ol, nl = old.get("lint_findings"), new.get("lint_findings")
+        if isinstance(ol, int) and isinstance(nl, int):
+            infos.append(f"{name}: lint_findings {ol} -> {nl}")
         for wpath in WALL_CLOCKS.get(name, ()):
             try:
                 ov, nv = _get(old, wpath), _get(new, wpath)
@@ -170,6 +183,9 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--compare", metavar="OLD_DIR", default=None,
                     help="old benchmarks/ dir to diff compile counts against")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-validate the committed snapshots (the "
+                         "default mode, named for CI readability)")
     args = ap.parse_args(argv)
 
     snaps = sorted(BENCH_DIR.glob("BENCH_*.json"))

@@ -1,0 +1,20 @@
+"""tracecheck — the repo's JAX contract linter.
+
+``python -m tools.lint src tests benchmarks tools`` statically enforces
+the standing invariants (ROADMAP): single-compile jit hygiene, no
+concretization/branching on traced values, donated-carry discipline, the
+bf16 precision policy, the optional-dependency policy, core determinism,
+and test-tier markers.  See ``python -m tools.lint --explain TC001``.
+"""
+
+from tools.lint.engine import (  # noqa: F401
+    DEFAULT_BASELINE,
+    Finding,
+    LintResult,
+    Project,
+    SourceFile,
+    assign_keys,
+    load_baseline,
+    run_lint,
+)
+from tools.lint.rules import ALL_RULES, EXPLAIN  # noqa: F401

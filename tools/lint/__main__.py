@@ -1,0 +1,101 @@
+"""CLI for tracecheck: ``python -m tools.lint [paths...]``.
+
+Exit codes: 0 clean (baselined debt is reported but passes), 1 new
+findings or stale baseline entries, 2 usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.lint.engine import (
+    DEFAULT_BASELINE,
+    REPO_ROOT,
+    load_baseline,
+    run_lint,
+)
+from tools.lint.rules import EXPLAIN
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "tools")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="tracecheck: static enforcement of the twin's JAX "
+                    "contracts (TC001–TC008).")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print the documentation for one rule and exit")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline.json path (default: committed ratchet)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding fails")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(each entry still needs a hand-written reason)")
+    ap.add_argument("--root", default=None,
+                    help="treat this directory as the repo root "
+                         "(default: the real repo; used for fixture trees)")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        rule = args.explain.upper()
+        if rule not in EXPLAIN:
+            print(f"unknown rule {args.explain!r}; known: "
+                  f"{', '.join(sorted(EXPLAIN))}", file=sys.stderr)
+            return 2
+        print(EXPLAIN[rule].rstrip())
+        return 0
+
+    entries: list[dict] = []
+    if not args.no_baseline:
+        bp = pathlib.Path(args.baseline)
+        if bp.exists():
+            try:
+                entries = load_baseline(bp)
+            except ValueError as exc:
+                print(f"tracecheck: invalid baseline: {exc}", file=sys.stderr)
+                return 2
+
+    result = run_lint(args.paths,
+                      root=pathlib.Path(args.root) if args.root else None,
+                      baseline_entries=entries)
+
+    if args.write_baseline:
+        bp = pathlib.Path(args.baseline)
+        existing = {e["key"]: e for e in entries}
+        out = {"version": 1, "entries": [
+            {"key": f.key,
+             "reason": existing.get(f.key, {}).get(
+                 "reason", "TODO: justify or fix")}
+            for f in result.findings]}
+        bp.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"tracecheck: wrote {len(out['entries'])} entries to {bp}")
+        return 0
+
+    for f in result.new:
+        print(f.render())
+    for f in result.baselined:
+        print(f"{f.render()}  [baselined]")
+    for key in result.stale:
+        print(f"tracecheck: stale baseline entry (fix shipped — delete "
+              f"it): {key}")
+
+    if result.new or result.stale:
+        print(f"tracecheck: FAIL — {len(result.new)} new finding(s), "
+              f"{len(result.stale)} stale baseline entr(y/ies)",
+              file=sys.stderr)
+        return 1
+    print(f"tracecheck: OK — 0 new findings"
+          f"{f', {len(result.baselined)} baselined' if result.baselined else ''}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,415 @@
+"""tracecheck mechanism: scanning, module index, call graph, baseline.
+
+Pure stdlib ``ast`` — the linter runs without jax installed, so the CI
+static gate needs no accelerator stack and finishes in seconds.
+
+The moving parts:
+
+* :class:`SourceFile` — one parsed file: tree, per-line suppressions,
+  repo-relative path, dotted module name, import map.
+* :class:`Project` — the file set plus everything cross-file: the function
+  index, the jit-entry reachability closure (with per-function static
+  parameter sets) and the donating-jit registry.
+* :func:`run_lint` — parse, run the rules, apply ``# tracecheck:
+  disable=…`` suppressions, diff against the baseline.
+
+Baseline contract (the ratchet): ``baseline.json`` holds explicitly
+justified findings, each with a non-empty ``reason``.  A finding matching
+an entry passes; a finding matching nothing is *new* and fails; an entry
+matching nothing is *stale* and also fails (the debt was paid — delete the
+entry, don't let it shadow a future regression).  Keys are line-number
+free, so pure line drift never churns the baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from collections import Counter
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*tracecheck:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s+—|\s+--|\s*$)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a concrete location.
+
+    ``key`` is the stable identity used for baseline matching and
+    suppression accounting: rule, path and message plus an occurrence
+    counter for exact duplicates — deliberately no line number, so a
+    finding survives unrelated edits above it.
+    """
+
+    rule: str
+    path: str          # repo-root-relative, posix separators
+    line: int
+    message: str
+    key: str = ""
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """One parsed python file plus the lexical facts rules need."""
+
+    def __init__(self, abspath: pathlib.Path, root: pathlib.Path):
+        self.abspath = abspath
+        self.path = abspath.relative_to(root).as_posix()
+        self.source = abspath.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(abspath))
+        self.module = self._module_name()
+        # line -> set of rule ids disabled on that line ("all" disables all)
+        self.suppressions: dict[int, set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                self.suppressions[i] = {
+                    r.strip().upper() if r.strip().lower() != "all" else "all"
+                    for r in m.group(1).split(",") if r.strip()}
+        self._annotate_parents()
+        self.import_map = self._collect_imports()
+
+    def _module_name(self) -> str | None:
+        parts = list(pathlib.PurePosixPath(self.path).parts)
+        if parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts) if parts else None
+
+    def _annotate_parents(self) -> None:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._tc_parent = node  # type: ignore[attr-defined]
+
+    def _collect_imports(self) -> dict[str, str]:
+        """local name -> dotted target, for module-level imports."""
+        out: dict[str, str] = {}
+        for node in self.tree.body:
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    def ancestors(self, node: ast.AST):
+        cur = getattr(node, "_tc_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_tc_parent", None)
+
+    def enclosing_function(self, node: ast.AST):
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """Trailing comment on the line, or a comment line directly above
+        (for multi-line statements where a trailing comment can't fit)."""
+        for ln in (line, line - 1):
+            rules = self.suppressions.get(ln, ())
+            if "all" in rules or rule in rules:
+                return True
+        return False
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const_str_tuple(node: ast.AST, sf: SourceFile) -> tuple[str, ...]:
+    """Static-argnames value -> tuple of strings (resolving one Name hop)."""
+    if isinstance(node, ast.Name):
+        # e.g. static_argnames=_RUN_STATICS with a module-level constant
+        for stmt in sf.tree.body:
+            if isinstance(stmt, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == node.id
+                    for t in stmt.targets):
+                node = stmt.value
+                break
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    return ()
+
+
+def is_jax_jit(node: ast.AST, sf: SourceFile) -> bool:
+    """True for expressions denoting ``jax.jit`` (incl. ``from jax import jit``)."""
+    d = dotted(node)
+    if d == "jax.jit":
+        return True
+    return d is not None and sf.import_map.get(d) == "jax.jit"
+
+
+def jit_call_info(call: ast.Call, sf: SourceFile):
+    """(inner_fn_expr, static_names, donate_positions) if ``call`` builds a
+    jit — ``jax.jit(...)`` or ``functools.partial(jax.jit, ...)`` — else None.
+    """
+    func = call.func
+    is_partial = dotted(func) in ("functools.partial", "partial")
+    if is_partial:
+        if not (call.args and is_jax_jit(call.args[0], sf)):
+            return None
+        inner = call.args[1] if len(call.args) > 1 else None
+    elif is_jax_jit(func, sf):
+        inner = call.args[0] if call.args else None
+    else:
+        return None
+    statics: tuple[str, ...] = ()
+    donate: tuple[int, ...] = ()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            statics = statics + _const_str_tuple(kw.value, sf)
+        elif kw.arg == "donate_argnums":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            donate = tuple(e.value for e in elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, int))
+    return inner, statics, donate
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    sf: SourceFile
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    qualname: str                       # module.func (module-level only)
+    statics: set[str] = dataclasses.field(default_factory=set)
+
+
+class Project:
+    """Cross-file view: function index, call graph, jit-entry closure."""
+
+    def __init__(self, files: list[SourceFile], registry):
+        self.files = files
+        self.registry = registry
+        self.by_module: dict[str, SourceFile] = {
+            f.module: f for f in files if f.module}
+        # module-level functions by dotted name
+        self.functions: dict[str, FunctionInfo] = {}
+        for sf in files:
+            if not sf.module:
+                continue
+            for node in sf.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{sf.module}.{node.name}"
+                    self.functions[q] = FunctionInfo(sf, node, q)
+        self.donating: dict[str, tuple[int, ...]] = dict(
+            registry.DONATING_JITS)
+        self._entry_statics: dict[str, set[str]] = {
+            q: set(s) for q, s in registry.JIT_ENTRYPOINTS.items()}
+        self._discover_jits()
+        self.reachable: dict[str, FunctionInfo] = {}
+        self._close_over_entries()
+
+    # -- discovery ------------------------------------------------------------
+    def _discover_jits(self) -> None:
+        """Auto-register in-place jits: decorated functions and module-level
+        ``name = jax.jit(fn, ...)`` assignments (statics + donation)."""
+        for sf in self.files:
+            if not sf.module:
+                continue
+            for node in sf.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        info = (jit_call_info(dec, sf)
+                                if isinstance(dec, ast.Call) else
+                                ((None, (), ()) if is_jax_jit(dec, sf)
+                                 else None))
+                        if info is not None:
+                            q = f"{sf.module}.{node.name}"
+                            self._entry_statics.setdefault(
+                                q, set()).update(info[1])
+                elif isinstance(node, ast.Assign) and isinstance(
+                        node.value, ast.Call):
+                    info = jit_call_info(node.value, sf)
+                    if info is None:
+                        continue
+                    inner, statics, donate = info
+                    inner_name = dotted(inner) if inner is not None else None
+                    if inner_name and "." not in inner_name \
+                            and f"{sf.module}.{inner_name}" in self.functions:
+                        q = f"{sf.module}.{inner_name}"
+                        self._entry_statics.setdefault(q, set()).update(statics)
+                    for target in node.targets:
+                        t = dotted(target)
+                        if t and donate:
+                            self.donating[f"{sf.module}.{t}"] = donate
+
+    def resolve_call(self, sf: SourceFile, call: ast.Call) -> str | None:
+        """Dotted target of a call, resolved through module-level imports."""
+        d = dotted(call.func)
+        if d is None:
+            return None
+        head, _, rest = d.partition(".")
+        target = sf.import_map.get(head)
+        if target is not None:
+            d = f"{target}.{rest}" if rest else target
+        elif sf.module and "." not in d:
+            local = f"{sf.module}.{d}"
+            if local in self.functions:
+                d = local
+        return d
+
+    # -- reachability ---------------------------------------------------------
+    def _close_over_entries(self) -> None:
+        queue = [q for q in self._entry_statics if q in self.functions]
+        seen = set(queue)
+        for q in queue:
+            self.functions[q].statics |= self._entry_statics.get(q, set())
+        while queue:
+            q = queue.pop()
+            fi = self.functions[q]
+            self.reachable[q] = fi
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = self.resolve_call(fi.sf, node)
+                if target is None or target not in self.functions:
+                    continue
+                if target not in seen:
+                    seen.add(target)
+                    self.functions[target].statics |= \
+                        self._entry_statics.get(target, set())
+                    queue.append(target)
+
+    def traced_params(self, fi: FunctionInfo) -> set[str]:
+        """Parameters of a reachable function considered traced."""
+        a = fi.node.args
+        params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        out = set()
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg in fi.statics:
+                continue
+            if p.arg in self.registry.STATIC_PARAM_NAMES:
+                continue
+            if self._static_annotation(p):
+                continue
+            out.add(p.arg)
+        del params
+        return out
+
+    @staticmethod
+    def _static_annotation(p: ast.arg) -> bool:
+        """Annotated with a pure host-scalar type -> static by declaration."""
+        ann = p.annotation
+        if ann is None:
+            return False
+        text = ast.unparse(ann).strip()
+        if text[:1] in ("'", '"'):          # string annotation
+            text = text.strip("\"'").strip()
+        parts = [t.strip() for t in text.split("|")]
+        return all(t in ("str", "bool", "int", "float", "None")
+                   for t in parts)
+
+
+# -- baseline -----------------------------------------------------------------
+
+def load_baseline(path: pathlib.Path) -> list[dict]:
+    """Parse and validate baseline entries (every entry needs a reason)."""
+    data = json.loads(path.read_text())
+    entries = data.get("entries", [])
+    for e in entries:
+        if not isinstance(e.get("key"), str) or not e["key"]:
+            raise ValueError(f"baseline entry without a key: {e!r}")
+        if not isinstance(e.get("reason"), str) or not e["reason"].strip():
+            raise ValueError(
+                f"baseline entry {e['key']!r} has no reason — every "
+                "grandfathered finding must say why it is allowed to stand")
+    return entries
+
+
+def assign_keys(findings: list[Finding]) -> list[Finding]:
+    """Stable, line-free keys: rule::path::message, deduped by occurrence."""
+    seen: Counter[str] = Counter()
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        base = f"{f.rule}::{f.path}::{f.message}"
+        n = seen[base]
+        seen[base] += 1
+        out.append(dataclasses.replace(
+            f, key=base if n == 0 else f"{base}::{n}"))
+    return out
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]        # all post-suppression findings
+    new: list[Finding]             # not covered by the baseline -> fail
+    baselined: list[Finding]       # covered: the standing contract debt
+    stale: list[str]               # baseline keys matching nothing -> fail
+
+    @property
+    def ok(self) -> bool:
+        return not self.new and not self.stale
+
+
+def run_lint(paths, root: pathlib.Path | None = None, registry=None,
+             baseline_entries: list[dict] | None = None,
+             rules=None) -> LintResult:
+    """Lint ``paths`` (files or directories) and diff against the baseline."""
+    from tools.lint import rules as rules_mod
+    from tools.lint import entrypoints as default_registry
+    registry = registry or default_registry
+    root = (root or REPO_ROOT).resolve()
+
+    files: list[SourceFile] = []
+    seen_paths = set()
+    for p in paths:
+        p = pathlib.Path(p)
+        if not p.is_absolute():
+            p = root / p
+        candidates = ([p] if p.is_file() else sorted(p.rglob("*.py")))
+        for c in candidates:
+            c = c.resolve()
+            if c in seen_paths or "__pycache__" in c.parts:
+                continue
+            seen_paths.add(c)
+            files.append(SourceFile(c, root))
+
+    project = Project(files, registry)
+    findings: list[Finding] = []
+    for rule_fn in (rules or rules_mod.ALL_RULES):
+        findings.extend(rule_fn(project))
+
+    by_path = {f.path: f for f in files}
+    kept = [f for f in findings
+            if not by_path[f.path].suppressed(f.rule, f.line)]
+    kept = assign_keys(kept)
+
+    entries = baseline_entries or []
+    entry_keys = {e["key"] for e in entries}
+    new = [f for f in kept if f.key not in entry_keys]
+    baselined = [f for f in kept if f.key in entry_keys]
+    found_keys = {f.key for f in kept}
+    stale = [k for k in sorted(entry_keys) if k not in found_keys]
+    return LintResult(findings=kept, new=new, baselined=baselined,
+                      stale=stale)
