@@ -24,6 +24,7 @@ import m3sa_metamodel  # noqa: E402
 import e2_calibration  # noqa: E402
 import nfr2_speed  # noqa: E402
 import roofline  # noqa: E402
+import serve_bench  # noqa: E402
 import whatif_batch  # noqa: E402
 
 #: committed what-if/scenario-engine performance snapshot (regenerate with
@@ -33,6 +34,10 @@ BENCH_WHATIF = os.path.join(os.path.dirname(__file__), "BENCH_whatif.json")
 #: committed DES readout-kernel performance snapshot (regenerate with
 #: ``PYTHONPATH=src python benchmarks/run.py des``)
 BENCH_DES = os.path.join(os.path.dirname(__file__), "BENCH_des.json")
+
+#: committed streaming-service performance snapshot (regenerate with
+#: ``PYTHONPATH=src python benchmarks/run.py serve``)
+BENCH_SERVE = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -141,6 +146,32 @@ def des_snapshot(days: float = 0.5) -> dict:
     return snap
 
 
+def serve_snapshot() -> dict:
+    """Write the streaming-service performance snapshot to BENCH_serve.json.
+
+    The PR-9 trajectory entry (ROADMAP open item 1): warm serving rate
+    (tenants/s and tenant-windows/s through ``TwinService``), batch fill
+    ratio, the replay phase's cache hit rate, and the gated invariant —
+    cold/warm/replay services all riding ONE compiled
+    ``fleet_step_masked`` program.  Wall-clock numbers are
+    machine-dependent reference points; the compile count is the gate.
+    """
+    import jax
+
+    snap = {
+        "regenerate_with": "PYTHONPATH=src python benchmarks/run.py serve",
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "lint_findings": lint_findings(),
+        "serve": serve_bench.run(),
+    }
+    with open(BENCH_SERVE, "w") as f:
+        json.dump(snap, f, indent=2)
+        f.write("\n")
+    return snap
+
+
 def np_mean(xs: list) -> float:
     return sum(xs) / len(xs) if xs else float("nan")
 
@@ -216,6 +247,16 @@ def main() -> None:
         f";cand_per_s={de['optimizer']['cand_per_s_warm']:.1f}",
     ))
 
+    sv = serve_snapshot()
+    rows.append((
+        "serve_snapshot",
+        sv["serve"]["warm_s"] * 1e6,
+        f"windows_per_s={sv['serve']['windows_per_s_warm']:.1f}"
+        f";fill={sv['serve']['batch_fill_ratio']:.2f}"
+        f";cache_hit_rate={sv['serve']['cache_hit_rate']:.2f}"
+        f";compiles={sv['serve']['compiles']}",
+    ))
+
     cells = roofline.load_cells()
     summ = roofline.summarize(cells)
     rows.append((
@@ -246,6 +287,8 @@ def main() -> None:
     print(json.dumps(wi, indent=2))
     print(f"\n=== DES readout snapshot (written to {BENCH_DES}) ===")
     print(json.dumps(de, indent=2))
+    print(f"\n=== Streaming-service snapshot (written to {BENCH_SERVE}) ===")
+    print(json.dumps(sv, indent=2))
 
 
 if __name__ == "__main__":
@@ -253,5 +296,7 @@ if __name__ == "__main__":
         print(json.dumps(whatif_snapshot(), indent=2))
     elif len(sys.argv) > 1 and sys.argv[1] == "des":
         print(json.dumps(des_snapshot(), indent=2))
+    elif len(sys.argv) > 1 and sys.argv[1] == "serve":
+        print(json.dumps(serve_snapshot(), indent=2))
     else:
         main()

@@ -1,0 +1,118 @@
+"""Streaming-service throughput bench (the PR-9 trajectory entry).
+
+Three phases through one :class:`repro.serve.TwinService` shape:
+
+  * **cold** — N tenants stream W windows each through a fresh service;
+    the wall clock includes the single ``fleet_step_masked`` compile;
+  * **warm** — a second service with fresh tenants, same shapes: the
+    steady-state serving rate (tenant-windows/s) with zero recompiles;
+  * **replay** — a third service serves one tenant group, then an
+    identical-seed group: the second group rides the result cache, so the
+    phase measures the cache path's rate and hit ratio.
+
+The compile count across ALL phases is the gated invariant (ONE program,
+asserted here and schema-checked by ``tools/check_bench.py``); wall-clock
+numbers are machine-dependent reference points.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.state import TwinConfig
+from repro.core.twin import fleet_step_masked
+from repro.serve import ServeConfig, SyntheticProducer, TwinService
+from repro.traces.schema import DatacenterConfig
+
+HOSTS = 16
+BINS = 36
+LANES = 32
+TENANTS = 32
+WINDOWS = 8
+
+
+def _config() -> ServeConfig:
+    return ServeConfig(
+        twin=TwinConfig(bins_per_window=BINS,
+                        dc=DatacenterConfig(num_hosts=HOSTS,
+                                            cores_per_host=16)),
+        lanes=LANES, queue_capacity=4 * TENANTS * WINDOWS)
+
+
+def _stream(svc: TwinService, prefix: str, n: int, seed0: int) -> float:
+    """Admit n tenants + producers, serve to idle; returns wall seconds."""
+    for i in range(n):
+        t = f"{prefix}{i}"
+        svc.admit(t)
+        svc.attach(SyntheticProducer(
+            t, hosts=HOSTS, bins_per_window=BINS, num_windows=WINDOWS,
+            seed=seed0 + i, util_mean=0.3 + 0.02 * (i % 10)))
+    t0 = time.time()
+    results = svc.run_until_idle()
+    wall = time.time() - t0
+    assert len(results) == n * WINDOWS, "service dropped windows"
+    return wall
+
+
+def run() -> dict:
+    jax.clear_caches()
+
+    svc_cold = TwinService(_config())
+    cold_s = _stream(svc_cold, "cold-", TENANTS, seed0=0)
+
+    svc_warm = TwinService(_config())
+    warm_s = _stream(svc_warm, "warm-", TENANTS, seed0=1000)
+
+    svc_replay = TwinService(_config())
+    _stream(svc_replay, "orig-", TENANTS // 2, seed0=2000)
+    replay_s = _stream(svc_replay, "dup-", TENANTS // 2, seed0=2000)
+
+    size = fleet_step_masked._cache_size
+    compiles = size() if callable(size) else None
+    if compiles is not None:
+        # the acceptance gate: three services, three arrival patterns,
+        # cache hits and all — ONE compiled fleet program.
+        assert compiles == 1, f"serving compiled {compiles}x, want 1"
+
+    return {
+        "tenants": TENANTS,
+        "windows_per_tenant": WINDOWS,
+        "lanes": LANES,
+        "hosts": HOSTS,
+        "bins_per_window": BINS,
+        "compiles": compiles,
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "replay_s": replay_s,
+        "tenants_per_s_warm": TENANTS / warm_s,
+        "windows_per_s_warm": TENANTS * WINDOWS / warm_s,
+        "batch_fill_ratio": svc_warm.stats.fill_ratio,
+        "cache_hit_rate": svc_replay.cache.hit_rate,
+        "replay_windows_cached": svc_replay.stats.windows_cached,
+    }
+
+
+def main() -> None:
+    r = run()
+    print(f"streaming twin service: {r['tenants']} tenants x "
+          f"{r['windows_per_tenant']} windows on {r['lanes']} lanes "
+          f"({r['hosts']} hosts, {r['bins_per_window']} bins)")
+    if r["compiles"] is not None:
+        print(f"  compiled fleet programs: {r['compiles']} (PASS: one "
+              "program across cold/warm/replay, asserted)")
+    print(f"  cold (incl. compile): {r['cold_s']:7.2f} s")
+    print(f"  warm:                 {r['warm_s']:7.2f} s -> "
+          f"{r['windows_per_s_warm']:.1f} windows/s "
+          f"({r['tenants_per_s_warm']:.1f} tenants/s)")
+    print(f"  batch fill ratio (warm): {r['batch_fill_ratio']:.0%}")
+    print(f"  replay of an identical tenant group: {r['replay_s']:7.2f} s, "
+          f"{r['replay_windows_cached']} windows from cache "
+          f"(hit rate {r['cache_hit_rate']:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -405,6 +405,79 @@ def run_optimizer(days: float = 0.5) -> dict:
     }
 
 
+def run_scale(days: float = 0.25, num_scenarios: int = 1000,
+              slice_s: int = 16) -> dict:
+    """S>=1000 mixed scenario batch: ONE program, lanes == a sliced run.
+
+    The scale case behind the streaming-service PR: a thousand-and-more
+    lane batch over mixed traced axes (host counts, power caps, time
+    shifts, dynamic-PUE models) on a smaller datacenter (64 hosts), so the
+    batch stays memory-light while S dwarfs anything the other grids run.
+    Two properties are **asserted**:
+
+      * the whole S-lane batch compiles exactly once (the S axis is vmapped
+        data, never a shape);
+      * the first ``slice_s`` lanes are bit-for-bit an independent
+        ``slice_s``-scenario run of the same prefix on the same
+        ``max_hosts`` padding — lanes are airtight at any S.
+    """
+    dc = DatacenterConfig(num_hosts=64)
+    w = make_surf22_like(SurfTraceSpec(days=days), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    intensity = make_diurnal_carbon(t_bins)
+    ambient = make_diurnal_ambient(t_bins, seed=2)
+
+    # mixed traced axes, deterministic in i — no two lanes identical, no
+    # shape depends on i
+    scs = [
+        Scenario(
+            name=f"s{i}",
+            num_hosts=32 + (i % 33),
+            power_cap_w=8_000.0 + 25.0 * (i % 800),
+            shift_bins=(i % 4) * (t_bins // 8),
+            pue_base=1.0 + 0.002 * (i % 150),
+            pue_load_coeff=0.08 if i % 2 else 0.0,
+            pue_amb_coeff=0.004 if i % 2 else 0.0)
+        for i in range(num_scenarios)]
+
+    jax.clear_caches()
+    cache = run_scenarios._cache_size
+    kw = dict(t_bins=t_bins, carbon_intensity=intensity, ambient_c=ambient)
+    t0 = time.time()
+    ss = build_scenario_set(w, dc, scs, max_hosts=dc.num_hosts)
+    sim, pred = run_scenarios(ss, max_hosts=ss.max_hosts, **kw)
+    pred.power_w.block_until_ready()
+    batch_s = time.time() - t0
+    compiles = cache() if cache is not None else None
+    if compiles is not None:
+        # the acceptance gate: S is data — a thousand lanes, one program.
+        assert compiles == 1, f"S={num_scenarios} batch compiled {compiles}x"
+
+    # airtight lanes: an independent small run of the same scenario prefix
+    # (same max_hosts padding => same per-lane program) must equal the big
+    # batch's first lanes bit for bit.
+    ss_small = build_scenario_set(w, dc, scs[:slice_s], max_hosts=dc.num_hosts)
+    sim_sm, pred_sm = run_scenarios(ss_small, max_hosts=ss_small.max_hosts,
+                                    **kw)
+    sliced_equal = all(
+        bool((np.asarray(a)[:slice_s] == np.asarray(b)).all())
+        for a, b in zip(jax.tree.leaves((sim, pred)),
+                        jax.tree.leaves((sim_sm, pred_sm))))
+    assert sliced_equal, (
+        f"lanes 0..{slice_s - 1} of the S={num_scenarios} batch diverged "
+        "from the standalone run")
+
+    return {
+        "num_scenarios": num_scenarios,
+        "t_bins": t_bins,
+        "max_hosts": ss.max_hosts,
+        "batch_s": batch_s,
+        "scenarios_per_s": num_scenarios / batch_s,
+        "compiles": compiles,
+        "sliced_bitwise_equal": sliced_equal,
+    }
+
+
 def run_sharded(days: float = 1.0, num_scenarios: int = 16) -> dict | None:
     """Scenario-axis sharding: shard_map over S vs the single-device vmap.
 
@@ -519,6 +592,16 @@ def main() -> None:
     print(f"  objective: searched {o['best_objective']:.2f} vs grid best "
           f"{o['grid_best_objective']:.2f} vs baseline "
           f"{o['baseline_objective']:.2f}")
+
+    sc = run_scale()
+    print(f"\nscale batch: S={sc['num_scenarios']} mixed scenarios, "
+          f"{sc['t_bins']} bins, max_hosts={sc['max_hosts']}: "
+          f"{sc['batch_s']:.2f} s -> {sc['scenarios_per_s']:.0f} scenarios/s")
+    if sc["compiles"] is not None:
+        print(f"  compiled programs: {sc['compiles']} (PASS: single compile "
+              "at S=1000, asserted)")
+    print(f"  lanes 0..15 == standalone S=16 run: "
+          f"{'PASS' if sc['sliced_bitwise_equal'] else 'FAIL'}")
 
     s = run_sharded()
     if s is None:

@@ -1,0 +1,101 @@
+"""Streaming twin service: live tenants multiplexed onto one program.
+
+Where ``fleet_of_twins.py`` batches a *fixed* fleet over a *fixed* horizon,
+this example runs the serving story (``repro.serve``): tenants arrive and
+leave, their telemetry streams in jittered and out of order, and every
+dynamic batch — whatever mix of lanes is ready — is one call to the same
+compiled ``fleet_step_masked`` program.  Along the way it exercises the
+whole lane lifecycle:
+
+  admit -> batch -> step -> cache -> checkpoint/restore -> evict
+
+Two tenant groups share hidden power models (same seeds), so once the
+first group's streams have been served the result cache answers the
+second group's windows without touching the device — bit for bit.
+
+    PYTHONPATH=src python examples/twin_service.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.state import TwinConfig
+from repro.serve import ServeConfig, SyntheticProducer, TwinService
+from repro.traces.schema import DatacenterConfig
+
+HOSTS = 16
+BINS = 36          # one 3 h window at 5-min sampling
+WINDOWS = 4
+LANES = 8
+
+
+def producer(tenant: str, seed: int):
+    return SyntheticProducer(
+        tenant, hosts=HOSTS, bins_per_window=BINS, num_windows=WINDOWS,
+        seed=seed, util_mean=0.3 + 0.05 * (seed % 5))
+
+
+def main() -> None:
+    cfg = ServeConfig(
+        twin=TwinConfig(bins_per_window=BINS,
+                        dc=DatacenterConfig(num_hosts=HOSTS,
+                                            cores_per_host=16)),
+        lanes=LANES, queue_capacity=64)
+    svc = TwinService(cfg)
+
+    # --- admit the first tenant group and stream it to completion --------
+    for i in range(4):
+        svc.admit(f"tenant-a{i}")
+        svc.attach(producer(f"tenant-a{i}", seed=i))
+    results_a = svc.run_until_idle()
+    print(f"group A: {len(results_a)} windows served over "
+          f"{svc.stats.batches} batches (fill {svc.stats.fill_ratio:.0%}, "
+          f"compiles: {svc.compile_count()})")
+
+    # --- group B replays the same hidden models (same seeds): every window
+    # is answered from the result cache, bitwise, device untouched ---------
+    for i in range(4):
+        svc.admit(f"tenant-b{i}")
+        svc.attach(producer(f"tenant-b{i}", seed=i))
+    results_b = svc.run_until_idle()
+    print(f"group B: {len(results_b)} windows served, "
+          f"{svc.stats.windows_cached} from cache (hit rate "
+          f"{svc.cache.hit_rate:.0%}), still {svc.compile_count()} "
+          "compiled program(s)")
+
+    # --- checkpoint all 8 live sessions, kill, restore into a fresh
+    # service; replayable producers re-emit from window 0 and every
+    # already-served window drops as a stale replay -----------------------
+    with tempfile.TemporaryDirectory() as root:
+        svc.checkpoint(root)
+        svc2 = TwinService(cfg)
+        restored = svc2.restore(root)
+        for i in range(4):
+            svc2.attach(producer(f"tenant-a{i}", seed=i))
+        new = svc2.run_until_idle()
+        print(f"\nrestored {len(restored)} sessions; replayed group A "
+              f"produced {len(new)} new windows "
+              f"({svc2.stats.stale_dropped} stale replays dropped) — "
+              "nothing is served twice")
+
+        # --- evict one tenant; its session travels as a value ------------
+        session = svc2.evict("tenant-b0")
+        print(f"evicted tenant-b0 at window {session.next_window}; "
+              f"{LANES - len(svc2.tenants)} of {LANES} lanes free")
+
+    # cached results match computed ones bitwise: B-windows vs the A-stream
+    # of the same seed
+    a0 = {r.window: r for r in results_a if r.tenant == "tenant-a0"}
+    b0 = {r.window: r for r in results_b if r.tenant == "tenant-b0"}
+    same = all(
+        np.array_equal(a0[w].output.prediction.power_w,
+                       b0[w].output.prediction.power_w)
+        for w in range(WINDOWS))
+    print(f"\nB-stream outputs bitwise == A-stream outputs: {same}")
+    print("one compiled fleet program served every batch above — admission "
+          "order,\nfill pattern and cache hits never retrace.")
+
+
+if __name__ == "__main__":
+    main()

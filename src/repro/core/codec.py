@@ -18,6 +18,9 @@ from __future__ import annotations
 
 import zlib
 
+import msgpack
+import numpy as np
+
 try:  # optional dependency — never a hard import
     import zstandard  # type: ignore
 
@@ -53,6 +56,38 @@ def compress(data: bytes, level: int = 3, codec: bytes | None = None) -> bytes:
     if codec == CODEC_ZLIB:
         return CODEC_ZLIB + zlib.compress(data, level=min(level * 2, 9))
     raise ValueError(f"unknown codec id {codec!r}")
+
+
+def pack_array(x) -> dict:
+    """Lossless wire form of one array: raw bytes + dtype + shape.
+
+    The repo-wide array serialization used by every persisted blob that
+    carries tensors (checkpoints, telemetry flushes, cached window results).
+    Round-trips **bitwise** — dtype and shape are recorded, never coerced —
+    so ``unpack_array(pack_array(x)) == x`` exactly for any numpy array.
+    """
+    a = np.asarray(x)
+    return {"b": a.tobytes(), "d": a.dtype.str, "s": list(a.shape)}
+
+
+def unpack_array(rec: dict) -> np.ndarray:
+    """Inverse of :func:`pack_array` (returns a numpy array)."""
+    return np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(rec["s"])
+
+
+def dumps(payload, level: int = 3) -> bytes:
+    """msgpack-encode ``payload`` and compress it with the codec-id tag.
+
+    The one call every persisted blob in this repo goes through: msgpack for
+    structure, :func:`compress` for the optional-zstd policy.  ``payload``
+    may contain :func:`pack_array` records for tensors.
+    """
+    return compress(msgpack.packb(payload, use_bin_type=True), level=level)
+
+
+def loads(blob: bytes):
+    """Inverse of :func:`dumps` (tolerates int map keys, e.g. window ids)."""
+    return msgpack.unpackb(decompress(blob), raw=False, strict_map_key=False)
 
 
 def decompress(blob: bytes) -> bytes:

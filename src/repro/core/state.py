@@ -52,7 +52,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
 
 from repro.core import codec
@@ -393,22 +392,15 @@ twin_step_jit = jax.jit(twin_step, donate_argnums=(0,))
 
 # -- checkpoint / resume ------------------------------------------------------
 
-def _pack_array(x) -> dict:
-    a = np.asarray(x)
-    return {"b": a.tobytes(), "d": a.dtype.str, "s": list(a.shape)}
-
-
-def _unpack_array(rec: dict) -> jnp.ndarray:
-    a = np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(rec["s"])
-    return jnp.asarray(a)
-
-
-def save_state(state: TwinState, path: str) -> None:
-    """Persist a ``TwinState`` as a codec-tagged compressed msgpack blob.
+def state_to_bytes(state: TwinState) -> bytes:
+    """Encode a ``TwinState`` as a codec-tagged compressed msgpack blob.
 
     Same optional-dependency story as every persisted blob in this repo
     (:mod:`repro.core.codec`): zstd when available, stdlib zlib otherwise,
-    one codec-id byte so either reader opens either file.
+    one codec-id byte so either reader opens either blob.  The byte form is
+    what checkpoints (:func:`save_state`), the streaming service's session
+    store (:mod:`repro.serve.sessions`) and its result cache
+    (:mod:`repro.serve.cache`) all share.
     """
     leaves, treedef = jax.tree_util.tree_flatten(state)
     del treedef  # reconstructed from cfg on load
@@ -429,22 +421,14 @@ def save_state(state: TwinState, path: str) -> None:
             "pue": (dataclasses.asdict(cfg.pue)
                     if cfg.pue is not None else None),
         },
-        "leaves": [_pack_array(x) for x in leaves],
+        "leaves": [codec.pack_array(x) for x in leaves],
     }
-    blob = codec.compress(msgpack.packb(payload, use_bin_type=True))
-    with open(path, "wb") as f:
-        f.write(blob)
+    return codec.dumps(payload)
 
 
-def load_state(path: str) -> TwinState:
-    """Load a ``TwinState`` written by :func:`save_state`.
-
-    The resumed state is bit-identical to the saved one, so a resumed run
-    reproduces the uninterrupted run exactly (pinned by
-    ``tests/test_twin_core.py``).
-    """
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(codec.decompress(f.read()), raw=False)
+def state_from_bytes(blob: bytes) -> TwinState:
+    """Decode a ``TwinState`` from :func:`state_to_bytes` (bit-identical)."""
+    payload = codec.loads(blob)
     if payload["version"] != _STATE_VERSION:
         raise ValueError(
             f"unsupported TwinState version {payload['version']} "
@@ -463,5 +447,23 @@ def load_state(path: str) -> TwinState:
     )
     template = init_twin_state(cfg)
     treedef = jax.tree_util.tree_structure(template)
-    leaves = [_unpack_array(rec) for rec in payload["leaves"]]
+    leaves = [jnp.asarray(codec.unpack_array(rec))
+              for rec in payload["leaves"]]
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_state(state: TwinState, path: str) -> None:
+    """Persist a ``TwinState`` (:func:`state_to_bytes`) to ``path``."""
+    with open(path, "wb") as f:
+        f.write(state_to_bytes(state))
+
+
+def load_state(path: str) -> TwinState:
+    """Load a ``TwinState`` written by :func:`save_state`.
+
+    The resumed state is bit-identical to the saved one, so a resumed run
+    reproduces the uninterrupted run exactly (pinned by
+    ``tests/test_twin_core.py``).
+    """
+    with open(path, "rb") as f:
+        return state_from_bytes(f.read())

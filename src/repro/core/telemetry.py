@@ -26,7 +26,6 @@ import tempfile
 import threading
 from typing import Iterable
 
-import msgpack
 import numpy as np
 
 from repro.core import codec
@@ -145,22 +144,26 @@ class TelemetryStore:
 
     # -- persistence --------------------------------------------------------
     def flush(self, path: str) -> None:
-        cols: dict = {"bins_per_window": self.bins_per_window,
+        """Persist every window through :mod:`repro.core.codec`.
+
+        Columns are :func:`repro.core.codec.pack_array` records (raw bytes +
+        dtype + shape), so the round-trip is **bitwise** — no dtype coercion
+        — and the blob obeys the repo-wide optional-zstd policy (one codec-id
+        byte, zlib fallback) exactly like checkpoints do.
+        """
+        cols: dict = {"version": 2,
+                      "bins_per_window": self.bins_per_window,
                       "sample_seconds": self.sample_seconds, "windows": {}}
         with self._lock:
             for w, tw in sorted(self._windows.items()):
                 cols["windows"][w] = {
                     "t0_bin": tw.t0_bin,
-                    "u_th": tw.u_th.astype(np.float32).tobytes(),
-                    "u_shape": list(tw.u_th.shape),
-                    "power_w": tw.power_w.astype(np.float64).tobytes(),
-                    "extras": {
-                        k: {"b": v.astype(np.float32).tobytes(),
-                            "s": list(v.shape)}
-                        for k, v in tw.extras.items()
-                    },
+                    "u_th": codec.pack_array(tw.u_th),
+                    "power_w": codec.pack_array(tw.power_w),
+                    "extras": {k: codec.pack_array(v)
+                               for k, v in tw.extras.items()},
                 }
-        blob = codec.compress(msgpack.packb(cols, use_bin_type=True), level=6)
+        blob = codec.dumps(cols, level=6)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         with os.fdopen(fd, "wb") as f:
             f.write(blob)
@@ -169,16 +172,22 @@ class TelemetryStore:
     @classmethod
     def load(cls, path: str) -> "TelemetryStore":
         with open(path, "rb") as f:
-            cols = msgpack.unpackb(
-                codec.decompress(f.read()), raw=False, strict_map_key=False,
-            )
+            cols = codec.loads(f.read())
         store = cls(cols["bins_per_window"], cols["sample_seconds"])
+        legacy = cols.get("version", 1) < 2
         for w, rec in cols["windows"].items():
-            u = np.frombuffer(rec["u_th"], np.float32).reshape(rec["u_shape"])
-            p = np.frombuffer(rec["power_w"], np.float64)
-            extras = {
-                k: np.frombuffer(v["b"], np.float32).reshape(v["s"])
-                for k, v in rec["extras"].items()
-            }
+            if legacy:  # pre-codec columns: ad-hoc bytes with forced dtypes
+                u = np.frombuffer(rec["u_th"],
+                                  np.float32).reshape(rec["u_shape"])
+                p = np.frombuffer(rec["power_w"], np.float64)
+                extras = {
+                    k: np.frombuffer(v["b"], np.float32).reshape(v["s"])
+                    for k, v in rec["extras"].items()
+                }
+            else:
+                u = codec.unpack_array(rec["u_th"])
+                p = codec.unpack_array(rec["power_w"])
+                extras = {k: codec.unpack_array(v)
+                          for k, v in rec["extras"].items()}
             store.ingest(TelemetryWindow(int(w), rec["t0_bin"], u, p, extras))
         return store

@@ -130,9 +130,81 @@ def index_twin_state(fleet: TwinState, i: int) -> TwinState:
     return jax.tree.map(lambda x: x[i], fleet)
 
 
+def update_twin_state_lane(fleet: TwinState, i: int,
+                           state: TwinState) -> TwinState:
+    """Write one twin's state into lane ``i`` of a batched fleet state.
+
+    The admission half of lane multiplexing (:mod:`repro.serve.batching`):
+    a tenant joins a resident fleet by landing its ``TwinState`` on a free
+    lane; :func:`index_twin_state` is the eviction half.  Host-side eager
+    ops — admission/eviction are rare control-plane events, not per-step
+    work — and config-checked like :func:`stack_twin_states`.
+    """
+    if state.cfg != fleet.cfg:
+        raise ValueError(
+            "lane state must share the fleet's TwinConfig (got differing "
+            f"configs:\n  {fleet.cfg}\n  {state.cfg})")
+    return jax.tree.map(lambda f, s: f.at[i].set(s), fleet, state)
+
+
 #: one fused program that twins D datacenters for one window: every leaf of
 #: the three inputs leads with the fleet axis [D, ...].
 fleet_step = jax.jit(jax.vmap(twin_step))
+
+
+def _fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active):
+    """One fleet window with per-lane masking (partially-filled steps).
+
+    ``lane_active`` is a ``[D]`` bool vector: active lanes advance exactly
+    as :func:`fleet_step` would (each lane bitwise-identical to a solo
+    ``twin_step`` — the pinned fleet invariant), inactive lanes carry their
+    state through **unchanged** — window index, history, accumulators, all
+    of it.  That is what lets a dynamic batcher pack any subset of resident
+    tenants into a fixed-shape ``[D]`` call: empty lanes ride along on
+    padding telemetry without their twins ever noticing, the same
+    pad-and-mask trick the scenario engine plays on the S axis.
+
+    Outputs are returned for every lane (inactive lanes produce padding
+    predictions the caller must ignore — the batcher only reads active
+    lanes).
+    """
+    stepped, outs = jax.vmap(twin_step)(fleet, telemetry, sim_slices)
+
+    def keep(new, old):
+        mask = lane_active.reshape(lane_active.shape + (1,) * (new.ndim - 1))
+        return jax.numpy.where(mask, new, old)
+
+    return jax.tree.map(keep, stepped, fleet), outs
+
+
+# the fleet carry is donated like fleet_step's would be: callers rebind
+# `fleet, outs = fleet_step_masked(fleet, ...)`, so the incoming lane
+# buffers are reused in place batch after batch
+_fleet_step_masked_jit = jax.jit(_fleet_step_masked, donate_argnums=(0,))
+
+
+def fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active
+                      ) -> tuple[TwinState, WindowOutput]:
+    """Advance a partially-filled fleet one window in ONE compiled program.
+
+    The serving primitive behind :class:`repro.serve.service.TwinService`:
+    every dynamic batch — whatever mix of tenants is ready — is one call to
+    this one jitted program, so an arbitrary tenant arrival pattern never
+    recompiles.  ``fleet`` leaves lead with ``[D, ...]``; ``telemetry`` /
+    ``sim_slices`` are one window's
+    :class:`~repro.core.state.TelemetrySlice` /
+    :class:`~repro.core.state.SimSlice` with ``[D, ...]`` leaves;
+    ``lane_active`` is the ``[D]`` bool fill mask.
+
+    The ``fleet`` argument's buffers are **donated** — rebind the returned
+    state.
+    """
+    return _fleet_step_masked_jit(fleet, telemetry, sim_slices, lane_active)
+
+
+# surfaced for the single-compile serving tests, like run_fleet below
+fleet_step_masked._cache_size = getattr(
+    _fleet_step_masked_jit, "_cache_size", None)
 
 
 def _run_fleet(fleet: TwinState, telemetry, sim_slices):

@@ -1,0 +1,50 @@
+"""Streaming twin service: many live tenant twins, one compiled program.
+
+Upstream OpenDT serves its twin as a Kafka microservice mesh — ``dc-mock``
+telemetry producers, a sim-worker window manager and a result cache.  This
+package is that serving story on the pure functional core: replayable
+producers (:mod:`repro.serve.producers`), a dynamic batcher that packs
+ready ``(tenant, window)`` pairs onto the fixed fleet axis
+(:mod:`repro.serve.batching`), a digest-keyed result cache of codec blobs
+(:mod:`repro.serve.cache`), per-tenant checkpoint/restore sessions
+(:mod:`repro.serve.sessions`) and the bounded-queue ingestion loop that
+ties them together (:mod:`repro.serve.service`).
+
+Everything host-side is deterministic by construction (the injectable
+``Clock`` from :mod:`repro.core.orchestrator`, seeded RNGs — enforced by
+tracecheck TC007); everything device-side is ONE jitted program
+(:func:`repro.core.twin.fleet_step_masked`) shared by every tenant mix.
+"""
+
+from repro.serve.batching import LaneMap, WindowManager, build_fleet_inputs
+from repro.serve.cache import ResultCache, decode_result, encode_result
+from repro.serve.producers import (
+    SyntheticProducer,
+    TraceReplayProducer,
+    WindowEvent,
+)
+from repro.serve.sessions import Session, SessionStore
+from repro.serve.service import (
+    ServeConfig,
+    ServeStats,
+    TwinService,
+    WindowResult,
+)
+
+__all__ = [
+    "LaneMap",
+    "ResultCache",
+    "ServeConfig",
+    "ServeStats",
+    "Session",
+    "SessionStore",
+    "SyntheticProducer",
+    "TraceReplayProducer",
+    "TwinService",
+    "WindowEvent",
+    "WindowManager",
+    "WindowResult",
+    "build_fleet_inputs",
+    "decode_result",
+    "encode_result",
+]

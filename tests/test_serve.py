@@ -1,0 +1,303 @@
+"""Streaming twin service gates (the PR-9 tentpole).
+
+The load-bearing properties:
+
+* **one program** — serving 64 tenants through arbitrary arrival order and
+  partial batches compiles ``fleet_step_masked`` exactly once;
+* **bitwise serving** — every emitted window (computed or cache-hit) is
+  bit-for-bit the output of a solo ``twin_step`` stream for that tenant;
+* **kill-and-restore** — checkpointing mid-stream and restoring into a
+  fresh service (with producers replaying from zero) emits exactly what
+  the uninterrupted service would have;
+* **lossless backpressure** — a full bounded queue rewinds the replayable
+  producer instead of dropping windows;
+* **eviction round-trip** — an evicted tenant's session re-admits and the
+  stream continues as if never interrupted;
+* the ``TelemetryStore`` codec round-trip is bitwise (satellite of the
+  same PR: flush/load goes through ``repro.core.codec`` records, no dtype
+  coercion).
+"""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import Clock
+from repro.core.state import (
+    SimSlice,
+    TwinConfig,
+    init_twin_state,
+    make_telemetry,
+    twin_step,
+)
+from repro.core.telemetry import TelemetryStore, TelemetryWindow
+from repro.core.twin import fleet_step_masked
+from repro.serve import (
+    LaneMap,
+    ResultCache,
+    ServeConfig,
+    SyntheticProducer,
+    TwinService,
+    WindowManager,
+)
+from repro.traces.schema import DatacenterConfig
+
+DC = DatacenterConfig(num_hosts=4, cores_per_host=4)
+TWIN = TwinConfig(bins_per_window=6, dc=DC)
+
+# shared non-donating solo step: the per-tenant reference the service must
+# reproduce bit for bit
+_solo_step = jax.jit(twin_step)
+
+
+def _producer(tenant, seed, num_windows=3, **kw):
+    return SyntheticProducer(tenant, hosts=DC.num_hosts,
+                             bins_per_window=TWIN.bins_per_window,
+                             num_windows=num_windows, seed=seed, **kw)
+
+
+def _all_events(producer):
+    evs = producer.poll(float("inf"))
+    assert producer.exhausted
+    return evs
+
+
+def _solo_outputs(events):
+    """Reference stream: one tenant's windows through solo twin_step."""
+    state = init_twin_state(TWIN)
+    outs = {}
+    for ev in sorted(events, key=lambda e: e.window):
+        state, out = _solo_step(state, make_telemetry(ev.u_th, ev.power_w),
+                                SimSlice(u_th=jnp.asarray(ev.sim_u)))
+        outs[ev.window] = jax.tree.map(np.asarray, out)
+    return outs, state
+
+
+def _assert_tree_equal(a, b, ctx=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y),
+                              equal_nan=True), ctx
+
+
+def test_64_tenants_interleaved_bitwise_and_single_compile():
+    tenants = [f"t{i:02d}" for i in range(64)]
+    streams = {t: _all_events(_producer(t, seed=i % 8))
+               for i, t in enumerate(tenants)}
+
+    jax.clear_caches()
+    svc = TwinService(ServeConfig(twin=TWIN, lanes=64, queue_capacity=1024))
+    for t in tenants:
+        svc.admit(t)
+
+    # arbitrary arrival: every tenant-window shuffled together, submitted
+    # in chunks with serving in between, so batches have varying fill and
+    # repeated streams can hit the cache across rounds
+    flat = [ev for evs in streams.values() for ev in evs]
+    rng = np.random.default_rng(42)
+    rng.shuffle(flat)
+    for i in range(0, len(flat), 40):
+        for ev in flat[i:i + 40]:
+            assert svc.submit(ev)
+        svc.run_until_idle(pump=False)
+    results = svc.drain()
+
+    compiles = svc.compile_count()
+    if compiles is not None:
+        # the acceptance gate: any tenant mix, any fill — ONE program
+        assert compiles == 1, f"fleet program compiled {compiles}x"
+    assert svc.stats.windows_served == 64 * 3
+    assert svc.stats.windows_cached > 0, "identical streams never hit cache"
+    assert svc.stats.batches >= 3
+
+    by_tenant = {}
+    for r in results:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    refs = {s: _solo_outputs(streams[f"t{s:02d}"])[0] for s in range(8)}
+    for i, t in enumerate(tenants):
+        rs = by_tenant[t]
+        assert [r.window for r in rs] == [0, 1, 2], "stream order broken"
+        for r in rs:
+            _assert_tree_equal(r.output, refs[i % 8][r.window],
+                               ctx=f"{t} window {r.window}")
+
+
+def test_kill_and_restore_equals_uninterrupted(tmp_path):
+    tenants = {f"s{i}": i % 3 for i in range(6)}   # seed reuse -> cache hits
+    streams = {t: _all_events(_producer(t, seed=s, num_windows=4))
+               for t, s in tenants.items()}
+
+    def submit_all(svc, events):
+        rng = np.random.default_rng(7)
+        events = list(events)
+        rng.shuffle(events)
+        for ev in events:
+            assert svc.submit(ev)
+        return svc.run_until_idle(pump=False)
+
+    # uninterrupted reference service
+    ref_svc = TwinService(ServeConfig(twin=TWIN, lanes=8, queue_capacity=64))
+    for t in tenants:
+        ref_svc.admit(t)
+    ref = {(r.tenant, r.window): r
+           for r in submit_all(ref_svc,
+                               [ev for evs in streams.values() for ev in evs])}
+
+    # interrupted: serve windows 0-1, checkpoint, kill
+    svc_a = TwinService(ServeConfig(twin=TWIN, lanes=8, queue_capacity=64))
+    for t in tenants:
+        svc_a.admit(t)
+    got_a = submit_all(svc_a, [ev for evs in streams.values() for ev in evs
+                               if ev.window < 2])
+    svc_a.checkpoint(tmp_path / "sessions")
+    del svc_a
+
+    # restore into a fresh service; producers replay from window 0 — the
+    # stale-replay filter must drop everything already served
+    svc_b = TwinService(ServeConfig(twin=TWIN, lanes=8, queue_capacity=64))
+    assert sorted(svc_b.restore(tmp_path / "sessions")) == sorted(tenants)
+    for t, s in tenants.items():
+        svc_b.attach(_producer(t, seed=s, num_windows=4))
+    got_b = svc_b.run_until_idle()
+
+    assert svc_b.stats.stale_dropped == len(tenants) * 2
+    combined = {(r.tenant, r.window): r for r in got_a + got_b}
+    assert set(combined) == set(ref)
+    for key, r in combined.items():
+        _assert_tree_equal(r.output, ref[key].output, ctx=str(key))
+
+
+def test_backpressure_rewinds_producer_losslessly():
+    svc = TwinService(ServeConfig(twin=TWIN, lanes=2, queue_capacity=2))
+    svc.admit("bp")
+    svc.attach(_producer("bp", seed=5, num_windows=6))
+    results = svc.run_until_idle()
+
+    assert svc.stats.queue_rejects > 0, "queue never filled — weak test"
+    assert [r.window for r in results] == list(range(6))
+    ref, _ = _solo_outputs(_all_events(_producer("bp", seed=5,
+                                                 num_windows=6)))
+    for r in results:
+        _assert_tree_equal(r.output, ref[r.window], ctx=f"window {r.window}")
+
+
+def test_evict_readmit_continues_stream_exactly():
+    events = _all_events(_producer("ev", seed=9, num_windows=4))
+    ref, _ = _solo_outputs(events)
+
+    svc = TwinService(ServeConfig(twin=TWIN, lanes=2))
+    svc.admit("ev")
+    for e in events[:2]:
+        svc.submit(e)
+    first = svc.run_until_idle(pump=False)
+
+    session = svc.evict("ev")
+    assert "ev" not in svc.tenants
+    svc.admit("other")  # lane reuse while 'ev' is away
+    svc.admit("ev", session.state, digest=session.digest,
+              next_window=session.next_window)
+    for e in events[2:]:
+        svc.submit(e)
+    rest = svc.run_until_idle(pump=False)
+
+    got = {r.window: r for r in first + rest if r.tenant == "ev"}
+    assert sorted(got) == [0, 1, 2, 3]
+    for w, r in got.items():
+        _assert_tree_equal(r.output, ref[w], ctx=f"window {w}")
+
+
+def test_live_mode_injected_clock():
+    class FakeTime:
+        def __init__(self):
+            self.t = 0.0
+            self.lock = threading.Lock()
+
+        def now(self):
+            with self.lock:
+                return self.t
+
+        def sleep(self, s):
+            with self.lock:
+                self.t += s
+
+    ft = FakeTime()
+    svc = TwinService(ServeConfig(twin=TWIN, lanes=2, poll_seconds=10.0),
+                      clock=Clock(now=ft.now, sleep=ft.sleep))
+    svc.admit("live")
+    svc.attach(_producer("live", seed=3, num_windows=3, period_s=25.0,
+                         jitter_s=5.0))
+    svc.start()
+    deadline = time.time() + 30.0
+    while len(svc.results) < 3 and time.time() < deadline:
+        time.sleep(0.01)
+    svc.stop()
+
+    results = svc.drain()
+    assert [r.window for r in results] == [0, 1, 2]
+    ref, _ = _solo_outputs(_all_events(_producer("live", seed=3,
+                                                 num_windows=3)))
+    for r in results:
+        _assert_tree_equal(r.output, ref[r.window], ctx=f"window {r.window}")
+
+
+def test_lane_map_and_window_manager_bookkeeping():
+    lanes = LaneMap(2)
+    assert lanes.admit("a") == 0 and lanes.admit("b") == 1
+    with pytest.raises(ValueError):
+        lanes.admit("c")                     # full
+    with pytest.raises(ValueError):
+        lanes.admit("a")                     # duplicate
+    assert lanes.evict("a") == 0
+    assert lanes.admit("c") == 0             # lowest free lane reused
+
+    wm = WindowManager()
+    ev = _all_events(_producer("a", seed=0, num_windows=3))
+    assert not wm.add(ev[1], next_window=2)          # stale: dropped
+    assert wm.add(ev[2], next_window=2)
+    assert wm.pop_ready("a", 1) is None              # gap: not ready
+    assert wm.pop_ready("a", 2).window == 2
+    assert wm.empty
+
+
+def test_result_cache_lru_and_counters():
+    cache = ResultCache(capacity=2)
+    cache.put(("k1",), b"1")
+    cache.put(("k2",), b"2")
+    assert cache.get(("k1",)) == b"1"     # refreshes k1
+    cache.put(("k3",), b"3")              # evicts k2 (LRU)
+    assert cache.get(("k2",)) is None
+    assert cache.get(("k3",)) == b"3"
+    assert cache.hits == 2 and cache.misses == 1
+    assert cache.hit_rate == pytest.approx(2 / 3)
+
+
+def test_telemetry_store_codec_roundtrip_is_bitwise(tmp_path):
+    store = TelemetryStore(bins_per_window=4)
+    rng = np.random.default_rng(0)
+    for w in range(3):
+        store.ingest(TelemetryWindow(
+            window=w, t0_bin=w * 4,
+            u_th=rng.random((4, 2)).astype(np.float32),
+            power_w=rng.random(4).astype(np.float64) * 400.0,
+            extras={"carbon_intensity": rng.random(4).astype(np.float32),
+                    "price": rng.random(4).astype(np.float64)}))
+    path = tmp_path / "telemetry.bin"
+    store.flush(str(path))
+    loaded = TelemetryStore.load(str(path))
+
+    assert loaded.bins_per_window == 4
+    assert sorted(loaded.windows()) == [0, 1, 2]
+    for w in range(3):
+        a, b = store.get(w), loaded.get(w)
+        assert b.t0_bin == a.t0_bin
+        # bitwise AND dtype-exact: the codec records carry dtype + shape,
+        # unlike the old flush which forced f32/f64 on every column
+        for x, y in [(a.u_th, b.u_th), (a.power_w, b.power_w),
+                     *[(a.extras[k], b.extras[k]) for k in a.extras]]:
+            assert x.dtype == y.dtype
+            assert np.array_equal(x, y)

@@ -49,6 +49,9 @@ COMPILE_COUNTS = {
         "engine_sweep.legacy_compiles",
         "engine_sweep.pallas_compiles",
     ),
+    "BENCH_serve.json": (
+        "serve.compiles",
+    ),
 }
 
 #: dotted paths that must be positive finite wall-clock seconds
@@ -69,6 +72,11 @@ WALL_CLOCKS = {
         "engine_sweep.legacy_warm_s",
         "engine_sweep.pallas_warm_s",
         "optimizer.warm_s",
+    ),
+    "BENCH_serve.json": (
+        "serve.cold_s",
+        "serve.warm_s",
+        "serve.replay_s",
     ),
 }
 

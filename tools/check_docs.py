@@ -31,6 +31,11 @@ DOCTEST_MODULES = [
     "repro.traces.schema",
     "repro.traces.thermal",
     "repro.traces.price",
+    "repro.serve.producers",
+    "repro.serve.batching",
+    "repro.serve.cache",
+    "repro.serve.sessions",
+    "repro.serve.service",
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

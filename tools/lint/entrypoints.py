@@ -39,6 +39,10 @@ JIT_ENTRYPOINTS: dict[str, tuple[str, ...]] = {
         "model", "precision", "dt_seconds", "tb_t"),
     # fleet twinning: scan(vmap(twin_step)) behind twin._run_fleet_jit
     "repro.core.twin._run_fleet": (),
+    # lane-masked fleet step behind twin._fleet_step_masked_jit — the ONE
+    # compiled program the streaming service (repro.serve) multiplexes
+    # every tenant mix onto
+    "repro.core.twin._fleet_step_masked": (),
 }
 
 #: Parameter names that are static *by repo convention* wherever they appear
@@ -64,6 +68,7 @@ STATIC_PARAM_NAMES: frozenset[str] = frozenset({
 DONATING_JITS: dict[str, tuple[int, ...]] = {
     "repro.core.state.twin_step_jit": (0,),
     "repro.core.twin._run_fleet_jit": (0,),
+    "repro.core.twin._fleet_step_masked_jit": (0,),
     "repro.core.scenarios._run_scenarios_jit_donated": (0,),
 }
 
@@ -83,9 +88,12 @@ OPTIONAL_MODULES: tuple[str, ...] = ("zstandard", "hypothesis")
 #: Directories (repo-relative prefixes) where TC007 forbids ambient
 #: nondeterminism: the deterministic heart of the twin.  ``runtime/`` is
 #: included because it produces the traced failure schedules and mesh plans
-#: that what-if results (and their goldens) depend on.
+#: that what-if results (and their goldens) depend on.  ``serve/`` is the
+#: streaming service loop: time is injected (Clock), producers are seeded —
+#: an ambient clock there would break replay determinism silently.
 DETERMINISTIC_DIRS: tuple[str, ...] = (
-    "src/repro/core/", "src/repro/kernels/", "src/repro/runtime/")
+    "src/repro/core/", "src/repro/kernels/", "src/repro/runtime/",
+    "src/repro/serve/")
 
 #: (file, source) pairs TC007 tolerates — the I/O-shell allow-list.
 #: Empty today: the orchestrator's wall-clock pacing goes through its
