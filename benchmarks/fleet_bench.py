@@ -1,0 +1,143 @@
+"""Fleet-axis engine bench (the ROADMAP item-5 trajectory entry).
+
+Runs the same multi-tenant fleet (D resident twins x W windows) through
+both ``run_fleet`` execution paths:
+
+  * **vmap** — the single-device batched program (the pre-item-5 engine);
+  * **sharded** — ``shard_map`` over the device mesh's ``fleet`` axis,
+    padded replica lanes and all, which must reproduce the vmap stream
+    bit for bit (pinned by ``tests/test_shard_fleet.py`` and re-asserted
+    here on whatever mesh this machine exposes).
+
+The gated invariants are the per-path compile counts (ONE program each,
+warm re-run included — the ``_commit_to_mesh`` steady-state guarantee)
+and the bitwise cross-check; wall clocks are machine-dependent reference
+points recorded with the backend/device count.  On a single device the
+sharded path runs through a trivial mesh, so the two walls should match;
+the ``tier1-multidevice`` environment is where lanes/device drops.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import SimSlice, TelemetrySlice, TwinConfig, init_twin_state
+from repro.core.twin import FLEET_AXIS, fleet_mesh, run_fleet, stack_twin_states
+from repro.traces.schema import DatacenterConfig
+
+HOSTS = 16
+BINS = 36
+LANES = 8          # D: resident tenant twins
+WINDOWS = 6
+
+CFG = TwinConfig(bins_per_window=BINS,
+                 dc=DatacenterConfig(num_hosts=HOSTS, cores_per_host=16))
+
+
+def _inputs():
+    rng = np.random.default_rng(0)
+    u = rng.uniform(0, 1, (WINDOWS, LANES, BINS, HOSTS)).astype(np.float32)
+    p = (HOSTS * 70.0 + HOSTS * 280.0
+         * rng.uniform(0.2, 0.9, (WINDOWS, LANES, BINS))).astype(np.float32)
+    telem = TelemetrySlice(u_th=jnp.asarray(u), power_w=jnp.asarray(p),
+                           valid=jnp.ones((WINDOWS, LANES), bool))
+    return telem, SimSlice(u_th=jnp.asarray(u))
+
+
+def _fresh():
+    return stack_twin_states([init_twin_state(CFG) for _ in range(LANES)])
+
+
+def _block(tree) -> None:
+    for leaf in jax.tree.leaves(tree):
+        leaf.block_until_ready()
+
+
+def _timed(fn) -> tuple[float, tuple]:
+    t0 = time.time()
+    out = fn()
+    _block(out)
+    return time.time() - t0, out
+
+
+def run() -> dict:
+    jax.clear_caches()
+    telem, sims = _inputs()
+    size = run_fleet._cache_size
+
+    # vmap path: cold (includes the compile), then warm from the evolved
+    # state — the donated carry's steady state.
+    vmap_cold_s, (st, vmap_outs) = _timed(lambda: run_fleet(
+        _fresh(), telem, sims))
+    vmap_warm_s, _ = _timed(lambda: run_fleet(st, telem, sims))
+    vmap_compiles = size() if callable(size) else None
+
+    # sharded path: same fleet through the device mesh, then a warm re-run
+    # feeding the committed outputs back (the serve dispatch loop's shape).
+    mesh = fleet_mesh()
+    n_dev = mesh.shape[FLEET_AXIS]
+    sh_cold_s, (sh_st, sh_outs) = _timed(lambda: run_fleet(
+        _fresh(), telem, sims, shard=True, mesh=mesh))
+    sh_warm_s, _ = _timed(lambda: run_fleet(
+        sh_st, telem, sims, shard=True, mesh=mesh))
+    sharded_compiles = (size() - vmap_compiles) if callable(size) else None
+
+    if vmap_compiles is not None:
+        assert vmap_compiles == 1, f"vmap path compiled {vmap_compiles}x"
+    if sharded_compiles is not None:
+        assert sharded_compiles == 1, \
+            f"sharded path compiled {sharded_compiles}x (warm re-run retraced)"
+
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(vmap_outs), jax.tree.leaves(sh_outs)))
+    assert bitwise, "sharded fleet diverged from the vmap path"
+
+    per_dev = -(-LANES // n_dev)
+    if n_dev > 1:
+        per_dev = max(per_dev, 2)   # replica-lane floor (see _fleet_pad)
+    return {
+        "lanes": LANES,
+        "windows": WINDOWS,
+        "hosts": HOSTS,
+        "bins_per_window": BINS,
+        "mesh_devices": n_dev,
+        "lanes_per_device": per_dev,
+        "vmap_compiles": vmap_compiles,
+        "sharded_compiles": sharded_compiles,
+        "sharded_bitwise_equal": bitwise,
+        "vmap_cold_s": vmap_cold_s,
+        "vmap_warm_s": vmap_warm_s,
+        "sharded_cold_s": sh_cold_s,
+        "sharded_warm_s": sh_warm_s,
+        "vmap_window_step_s": vmap_warm_s / WINDOWS,
+        "sharded_window_step_s": sh_warm_s / WINDOWS,
+    }
+
+
+def main() -> None:
+    r = run()
+    print(f"fleet engine: {r['lanes']} twins x {r['windows']} windows "
+          f"({r['hosts']} hosts, {r['bins_per_window']} bins) on "
+          f"{r['mesh_devices']} device(s), {r['lanes_per_device']} "
+          "lanes/device")
+    if r["vmap_compiles"] is not None:
+        print(f"  compiles: vmap {r['vmap_compiles']}, sharded "
+              f"{r['sharded_compiles']} (PASS: one program each, asserted)")
+    print(f"  bitwise vmap == sharded: {r['sharded_bitwise_equal']}")
+    print(f"  vmap    cold {r['vmap_cold_s']:7.2f} s, warm "
+          f"{r['vmap_warm_s']:7.2f} s "
+          f"({r['vmap_window_step_s'] * 1e3:.1f} ms/window)")
+    print(f"  sharded cold {r['sharded_cold_s']:7.2f} s, warm "
+          f"{r['sharded_warm_s']:7.2f} s "
+          f"({r['sharded_window_step_s'] * 1e3:.1f} ms/window)")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ import des_readout_bench  # noqa: E402
 import e1_footprinter  # noqa: E402
 import m3sa_metamodel  # noqa: E402
 import e2_calibration  # noqa: E402
+import fleet_bench  # noqa: E402
 import nfr2_speed  # noqa: E402
 import roofline  # noqa: E402
 import serve_bench  # noqa: E402
@@ -38,6 +39,10 @@ BENCH_DES = os.path.join(os.path.dirname(__file__), "BENCH_des.json")
 #: committed streaming-service performance snapshot (regenerate with
 #: ``PYTHONPATH=src python benchmarks/run.py serve``)
 BENCH_SERVE = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+#: committed fleet-axis engine snapshot (regenerate with
+#: ``PYTHONPATH=src python benchmarks/run.py fleet``)
+BENCH_FLEET = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -172,6 +177,32 @@ def serve_snapshot() -> dict:
     return snap
 
 
+def fleet_snapshot() -> dict:
+    """Write the fleet-axis engine snapshot to BENCH_fleet.json.
+
+    The ROADMAP item-5 trajectory entry: warm window-step seconds on the
+    vmap and sharded ``run_fleet`` paths, the per-path compile counts
+    (ONE program each, warm re-run included — asserted in
+    :mod:`fleet_bench` and schema-checked by ``tools/check_bench.py``),
+    the sharded-vs-vmap bitwise cross-check, and lanes/device on this
+    machine's mesh.  Wall clocks are machine-dependent reference points.
+    """
+    import jax
+
+    snap = {
+        "regenerate_with": "PYTHONPATH=src python benchmarks/run.py fleet",
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "lint_findings": lint_findings(),
+        "fleet": fleet_bench.run(),
+    }
+    with open(BENCH_FLEET, "w") as f:
+        json.dump(snap, f, indent=2)
+        f.write("\n")
+    return snap
+
+
 def np_mean(xs: list) -> float:
     return sum(xs) / len(xs) if xs else float("nan")
 
@@ -257,6 +288,19 @@ def main() -> None:
         f";compiles={sv['serve']['compiles']}",
     ))
 
+    fl = fleet_snapshot()
+    rows.append((
+        "fleet_snapshot",
+        fl["fleet"]["sharded_window_step_s"] * 1e6,
+        f"vmap_ms_per_window={fl['fleet']['vmap_window_step_s'] * 1e3:.1f}"
+        f";sharded_ms_per_window="
+        f"{fl['fleet']['sharded_window_step_s'] * 1e3:.1f}"
+        f";lanes_per_device={fl['fleet']['lanes_per_device']}"
+        f";compiles={fl['fleet']['vmap_compiles']}"
+        f"+{fl['fleet']['sharded_compiles']}"
+        f";bitwise={fl['fleet']['sharded_bitwise_equal']}",
+    ))
+
     cells = roofline.load_cells()
     summ = roofline.summarize(cells)
     rows.append((
@@ -289,6 +333,8 @@ def main() -> None:
     print(json.dumps(de, indent=2))
     print(f"\n=== Streaming-service snapshot (written to {BENCH_SERVE}) ===")
     print(json.dumps(sv, indent=2))
+    print(f"\n=== Fleet-axis snapshot (written to {BENCH_FLEET}) ===")
+    print(json.dumps(fl, indent=2))
 
 
 if __name__ == "__main__":
@@ -298,5 +344,7 @@ if __name__ == "__main__":
         print(json.dumps(des_snapshot(), indent=2))
     elif len(sys.argv) > 1 and sys.argv[1] == "serve":
         print(json.dumps(serve_snapshot(), indent=2))
+    elif len(sys.argv) > 1 and sys.argv[1] == "fleet":
+        print(json.dumps(fleet_snapshot(), indent=2))
     else:
         main()

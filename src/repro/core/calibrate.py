@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.power import PowerParams
+from repro.core.power import PowerParams, mape, opendc_power
 from repro.kernels import ops as kops
 
 Array = jax.Array
@@ -53,6 +53,11 @@ class CalibrationSpec:
     scale_points: int = 12
     refine_iters: int = 0          # 0 = pure grid (faithful); >0 = zoom refine
     refine_shrink: float = 0.25
+    # per-host mode (beyond-paper): after the fleet-level fit, re-fit every
+    # host against its predicted-share slice of the measured total power and
+    # carry ``[H]`` parameter rows instead of one fleet scalar.  Hosts with
+    # no finite history keep the fleet-level result.
+    per_host: bool = False
 
 
 def candidate_grid(spec: CalibrationSpec, base: PowerParams) -> PowerParams:
@@ -159,18 +164,73 @@ def calibrate_traced(
         cand2 = _grid_traced(spec, best, r_lo, r_hi, s_lo, s_hi)
         m2 = evaluate_candidates(u_th, real_power, cand2, backend=backend)
         b2 = jnp.argmin(jnp.where(jnp.isnan(m2), jnp.inf, m2))
-        better = m2[b2] < best_mape          # NaN-safe: NaN never wins
+        # NaN-safe in both directions: a NaN refined candidate never wins,
+        # and a NaN incumbent (all-NaN base grid) loses to any finite one —
+        # the host-side semantics of calibrate_window's refine loop.
+        better = jnp.logical_and(
+            jnp.isfinite(m2[b2]),
+            jnp.logical_or(jnp.isnan(best_mape), m2[b2] < best_mape))
         best = PowerParams(
             p_idle=jnp.where(better, cand2.p_idle[b2], best.p_idle),
             p_max=jnp.where(better, cand2.p_max[b2], best.p_max),
             r=jnp.where(better, cand2.r[b2], best.r))
         best_mape = jnp.where(better, m2[b2], best_mape)
+        # refined rounds count toward "did any candidate score at all"
+        any_finite = jnp.logical_or(any_finite, jnp.any(jnp.isfinite(m2)))
 
     params = jax.tree.map(
         lambda chosen, fallback: jnp.where(
             any_finite, chosen, jnp.mean(jnp.asarray(fallback, jnp.float32))),
         best, base)
+    if spec.per_host:
+        return _per_host_refit(u_th, real_power, cand, params, best_mape,
+                               backend=backend)
     return params, best_mape
+
+
+def _per_host_refit(
+    u_th: Array,
+    real_power: Array,
+    cand: PowerParams,
+    fleet_params: PowerParams,
+    fleet_mape: Array,
+    backend: Backend = "xla",
+) -> tuple[PowerParams, Array]:
+    """Per-host re-fit stage of ``CalibrationSpec(per_host=True)``.
+
+    Telemetry carries only the fleet *total* power, so the measured signal
+    is first attributed to hosts by each host's predicted share under the
+    fleet-level fit (``fleet_params``), then every host grid-searches its
+    own ``argmin``-MAPE row over the shared candidate grid — a vmap over
+    the host axis of the same kernel the fleet path uses, so the per-host
+    semantics are exactly the ``H=1`` fleet semantics.  Hosts whose share
+    target has no finite MAPE (no finite history) keep the fleet-level
+    result, and the returned MAPE is the *total-power* MAPE of the combined
+    per-host prediction — comparable with the fleet-level number.
+    """
+    pred = opendc_power(u_th, fleet_params)                    # [T, H]
+    total = jnp.sum(pred, axis=-1, keepdims=True)
+    share = pred / jnp.maximum(total, 1e-9)
+    target = real_power[..., None] * share                     # [T, H]
+
+    def one_host(u_col: Array, target_col: Array):
+        m = evaluate_candidates(u_col[:, None], target_col, cand,
+                                backend=backend)
+        b = jnp.argmin(jnp.where(jnp.isnan(m), jnp.inf, m))
+        p = PowerParams(p_idle=cand.p_idle[b], p_max=cand.p_max[b], r=cand.r[b])
+        return p, jnp.any(jnp.isfinite(m))
+
+    host_params, host_finite = jax.vmap(one_host, in_axes=(1, 1))(u_th, target)
+    rows = jax.tree.map(
+        lambda hp, fp: jnp.where(host_finite,
+                                 jnp.asarray(hp, jnp.float32),
+                                 jnp.asarray(fp, jnp.float32)),
+        host_params, fleet_params)
+    combined = jnp.sum(opendc_power(u_th, rows), axis=-1)      # [T]
+    per_host_mape = mape(real_power, combined)
+    # an all-zero window keeps the fleet path's NaN verdict either way
+    best_mape = jnp.where(jnp.isnan(per_host_mape), fleet_mape, per_host_mape)
+    return rows, best_mape
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,6 +36,7 @@ from repro.core.desim import PLACEMENT_POLICIES, Prediction, SimOutput, simulate
 from repro.core.feedback import (
     HITLGate,
     Proposal,
+    ProposalKind,
     propose_from_optimum,
     propose_from_scenario,
     propose_from_state,
@@ -88,6 +89,13 @@ class OrchestratorConfig:
     #: facility power (IT x PUE(load, ambient)) instead of bare IT draw.
     #: Scenarios that set their own ``pue_base`` override this default.
     pue: PUEParams | None = None
+    #: resident-DES mode (paper stage 3): the full-horizon utilization field
+    #: lives *inside* ``TwinState.sim_u`` and ``twin_step`` slices its own
+    #: window, so an applied topology/scheduler proposal
+    #: (:meth:`Orchestrator.apply_proposal`) re-seeds the twin's own
+    #: simulation instead of an external cache.  Off by default: the
+    #: external-cache path stays bitwise-pinned by the goldens.
+    sim_in_state: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +224,11 @@ class Orchestrator:
         self.store = TelemetryStore(cfg.bins_per_window)
         self.gate = gate or HITLGate()
         self.records: list[WindowRecord] = []
+        # scheduler knobs the resident DES runs under; structural proposals
+        # (apply_proposal) are the only writers after construction.
+        self.policy: str | None = None
+        self.backfill_depth: int = 0
+        self._sim: SimOutput | None = None
         self.twin_cfg = TwinConfig(
             bins_per_window=cfg.bins_per_window,
             dc=dc,
@@ -226,9 +239,11 @@ class Orchestrator:
             kernel_backend=cfg.kernel_backend,
             slos=(NFR1,),
             pue=cfg.pue,
+            sim_bins=self.t_bins if cfg.sim_in_state else 0,
         )
-        self.state: TwinState = init_twin_state(self.twin_cfg, base_params)
-        self._sim: SimOutput | None = None
+        sim_u = self._ensure_sim().u_th if cfg.sim_in_state else None
+        self.state: TwinState = init_twin_state(self.twin_cfg, base_params,
+                                                sim_u=sim_u)
 
     # -- pure-core views ------------------------------------------------------
     @property
@@ -272,6 +287,8 @@ class Orchestrator:
                 num_hosts=self.dc.num_hosts,
                 cores_per_host=self.dc.cores_per_host,
                 t_bins=self.t_bins,
+                policy=self.policy,
+                backfill_depth=self.backfill_depth,
             )
         return self._sim
 
@@ -300,6 +317,11 @@ class Orchestrator:
         # Telemetry for this window (produced asynchronously by the physical
         # twin; in-loop experiments ingest it before calling run_window).
         tw = self.store.get(window)
+        # Telemetry measured on a *different* topology (ingested before an
+        # apply_proposal resize) cannot score this twin — same not-landed
+        # treatment as missing telemetry, never a shape error inside jit.
+        if tw is not None and np.asarray(tw.u_th).shape[1] != self.dc.num_hosts:
+            tw = None
         # window carbon: prefer *measured* intensity from telemetry extras
         # over the configured forecast (same precedence as power itself).
         ci_meas = (tw.extras.get(CARBON_INTENSITY_KEY)
@@ -342,10 +364,14 @@ class Orchestrator:
                  else empty_telemetry(self.cfg.bins_per_window,
                                       self.dc.num_hosts))
 
-        # All the math: one pure, jitted step on the twin core.
+        # All the math: one pure, jitted step on the twin core.  In
+        # resident-DES mode the step slices its own window from
+        # ``state.sim_u`` (u_th=None), so what it predicts from is whatever
+        # apply_proposal last seeded — not this shell's cache.
         t0 = self.clock.now()
         self.state, out = twin_step_jit(
-            self.state, telem, SimSlice(u_th=sim.u_th[sl],
+            self.state, telem, SimSlice(u_th=(None if self.cfg.sim_in_state
+                                              else sim.u_th[sl]),
                                         carbon_intensity=ci_w,
                                         ambient_c=amb_w,
                                         price=pr_w))
@@ -456,6 +482,92 @@ class Orchestrator:
             summaries = summaries[1:]
         return WhatIfResult(summaries=summaries, proposals=proposals,
                             sim=sim, prediction=pred)
+
+    # -- applying approved proposals (paper stage 3, closing the loop) -------
+    def apply_proposal(self, p: Proposal) -> None:
+        """Apply an approved structural proposal to this twin.
+
+        Closes the paper's operator loop: a what-if/optimize sweep produced
+        the proposal, the HITL gate approved it, and this call makes the
+        twin *be* the proposed datacenter.  ``SCHEDULER_CHANGE`` swaps the
+        DES scheduler (placement policy + backfill depth, a software-only
+        change); ``SCALE_UP`` / ``SCALE_DOWN_IDLE`` resize the topology.
+        The full-horizon DES then re-runs under the new configuration and
+        the twin core is rebuilt around it (:meth:`_rebuild_state`) — in
+        resident-DES mode (``cfg.sim_in_state``) that re-seeds the state's
+        own ``sim_u``, so the very next ``twin_step`` predicts the new
+        datacenter without this shell re-slicing anything.
+
+        Raises for unapproved proposals (route them through the gate first)
+        and for kinds with no structural interpretation here (power caps and
+        time-shifting live on the scenario axis, not the twin's topology).
+        """
+        if p.approved is not True:
+            raise ValueError(
+                f"proposal {p.kind.value}@w{p.window} is not approved — "
+                "route it through the HITL gate before applying")
+        if p.kind is ProposalKind.SCHEDULER_CHANGE:
+            self.policy = p.impact.get("policy", self.policy)
+            self.backfill_depth = int(
+                p.impact.get("backfill_depth", self.backfill_depth))
+        elif p.kind in (ProposalKind.SCALE_UP, ProposalKind.SCALE_DOWN_IDLE):
+            if "num_hosts" not in p.impact:
+                raise ValueError(
+                    f"{p.kind.value} proposal carries no num_hosts impact")
+            n = int(p.impact["num_hosts"])
+            if n <= 0:
+                raise ValueError(f"proposed num_hosts must be >= 1; got {n}")
+            self.dc = dataclasses.replace(self.dc, num_hosts=n)
+        else:
+            raise ValueError(
+                f"{p.kind.value} is not a structural proposal this twin can "
+                "apply (power caps / load shifting are scenario axes; "
+                "recalibration is automatic)")
+        p.applied = True
+        self.invalidate()
+        self._rebuild_state()
+
+    def _rebuild_state(self) -> None:
+        """Rebuild the twin core around the current ``self.dc`` / scheduler.
+
+        Run accumulators (window counter, SLO counts, bias split) always
+        migrate — they describe the run, not the topology.  Calibrated
+        parameters migrate too and become the new base (per-host rows keep
+        their first ``min(old, new)`` hosts and mean-pad growth, the same
+        convention as the what-if path).  Calibration history migrates only
+        while the host axis is unchanged: telemetry measured on a different
+        topology would mis-calibrate the new one, so a resize starts the
+        history fresh.  In resident-DES mode the rebuilt state is seeded
+        with the re-run DES horizon.
+        """
+        old = self.state
+        old_h = old.cfg.dc.num_hosts
+        h = self.dc.num_hosts
+        self.twin_cfg = dataclasses.replace(self.twin_cfg, dc=self.dc)
+        sim_u = self._ensure_sim().u_th if self.cfg.sim_in_state else None
+
+        def row(x):
+            v = np.asarray(x, np.float32)
+            if v.ndim == 0:
+                return v
+            out = np.full((h,), float(v.mean()), np.float32)
+            out[:min(v.size, h)] = v[:h]
+            return out
+
+        params = PowerParams(p_idle=row(old.params.p_idle),
+                             p_max=row(old.params.p_max),
+                             r=row(old.params.r))
+        state = init_twin_state(self.twin_cfg, params, sim_u=sim_u)
+        keep = dict(window=old.window,
+                    slo_samples=old.slo_samples,
+                    slo_compliant=old.slo_compliant,
+                    bias_under=old.bias_under,
+                    bias_over=old.bias_over,
+                    bias_ties=old.bias_ties)
+        if h == old_h:
+            keep.update(hist_u=old.hist_u, hist_p=old.hist_p,
+                        hist_n=old.hist_n)
+        self.state = dataclasses.replace(state, **keep)
 
     def _with_pue(self, s: Scenario) -> Scenario:
         """Apply the orchestrator's facility PUE model to a scenario.

@@ -90,6 +90,14 @@ class TwinConfig:
     #: power (IT draw x PUE(load, ambient)) — frozen/hashable, so it rides
     #: the jit cache key like every other static knob.
     pue: PUEParams | None = None
+    #: full-horizon DES resident in the state: when positive, ``TwinState``
+    #: carries a ``[sim_bins, H]`` utilization field (``sim_u``) and
+    #: ``twin_step`` slices its own window from it whenever the caller
+    #: passes ``SimSlice(u_th=None)`` — the topology-applying feedback loop
+    #: (an accepted proposal re-simulates and swaps this field) needs the
+    #: twin to own its simulation.  0 (the default) keeps the incumbent
+    #: layout: no extra leaf, the shell feeds per-window slices.
+    sim_bins: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,12 +126,22 @@ class TwinState:
     ``bias_under``    int32                  bias split (paper Fig. 6)
     ``bias_over``     int32
     ``bias_ties``     int32
+    ``sim_u``         ``[sim_bins, H]`` f32  full-horizon DES utilization
+                                             (``None`` unless
+                                             ``cfg.sim_bins > 0``)
     ================  =====================  ===============================
+
+    With ``CalibrationSpec(per_host=True)`` the ``params`` / ``base_params``
+    leaves are ``[H]`` rows instead of scalars — one calibrated power model
+    per host, threaded straight into prediction (the power models broadcast
+    trailing host-dim parameters).
 
     History buffers are chronological with zero-padding at the tail; padded
     bins have zero measured power, which the MAPE kernel already excludes,
     so a partially-filled buffer scores like the old variable-length
-    concatenation.  ``cfg`` is aux data (static, hashable).
+    concatenation.  ``cfg`` is aux data (static, hashable).  ``sim_u=None``
+    is an empty pytree subtree, so the default layout's leaf list (and every
+    existing golden/checkpoint) is unchanged.
     """
 
     params: PowerParams
@@ -138,6 +156,7 @@ class TwinState:
     bias_under: Array
     bias_over: Array
     bias_ties: Array
+    sim_u: Array | None = None
     cfg: TwinConfig = TwinConfig()
 
 
@@ -145,7 +164,7 @@ jax.tree_util.register_pytree_node(
     TwinState,
     lambda s: ((s.params, s.base_params, s.cand, s.hist_u, s.hist_p,
                 s.hist_n, s.window, s.slo_samples, s.slo_compliant,
-                s.bias_under, s.bias_over, s.bias_ties), s.cfg),
+                s.bias_under, s.bias_over, s.bias_ties, s.sim_u), s.cfg),
     lambda cfg, c: TwinState(*c, cfg=cfg),
 )
 
@@ -196,13 +215,15 @@ class SimSlice:
 
     ``u_th`` is the window's ``[Tw, H]`` slice of the full-horizon DES
     utilization field (the DES itself is power-parameter independent and
-    stays outside the per-window step — see ``Orchestrator._ensure_sim``);
-    ``carbon_intensity`` / ``ambient_c`` / ``price`` are the optional
-    ``[Tw]`` forecast slices (gCO2/kWh, deg C, $/kWh) the read-out folds
-    into gCO2, dynamic PUE and energy cost.
+    stays outside the per-window step — see ``Orchestrator._ensure_sim``).
+    With ``TwinConfig.sim_bins > 0`` the state owns the full horizon and
+    ``u_th`` may be ``None``: ``twin_step`` then slices the window from
+    ``state.sim_u`` itself.  ``carbon_intensity`` / ``ambient_c`` /
+    ``price`` are the optional ``[Tw]`` forecast slices (gCO2/kWh, deg C,
+    $/kWh) the read-out folds into gCO2, dynamic PUE and energy cost.
     """
 
-    u_th: Array
+    u_th: Array | None = None
     carbon_intensity: Array | None = None
     ambient_c: Array | None = None
     price: Array | None = None
@@ -241,30 +262,60 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def _scalar_param(x, name: str) -> Array:
+def _scalar_param(x, name: str, hosts: int | None = None) -> Array:
+    """Base-parameter leaf: scalar, or a ``[hosts]`` row in per-host mode."""
     a = jnp.asarray(x, jnp.float32)
+    if hosts is not None:
+        if a.ndim == 0 or a.size == 1:
+            return jnp.full((hosts,), a.reshape(()), jnp.float32)
+        if a.shape != (hosts,):
+            raise ValueError(
+                f"per-host base params must be scalar or [{hosts}]; "
+                f"{name} has shape {a.shape}")
+        return a
     if a.ndim != 0 and a.size != 1:
         raise ValueError(
             f"pure-core base params must be scalar; {name} has shape "
-            f"{a.shape}.  Per-host parameters live on the scenario path "
-            "(build_scenario_set carries [S, max_hosts] params); the "
-            "calibrator output is scalar by construction.")
+            f"{a.shape}.  Per-host parameters need "
+            "CalibrationSpec(per_host=True), which carries [H] rows; the "
+            "fleet-level calibrator output is scalar by construction.")
     return a.reshape(())
 
 
 def init_twin_state(cfg: TwinConfig,
-                    base_params: PowerParams = PowerParams()) -> TwinState:
+                    base_params: PowerParams = PowerParams(),
+                    sim_u=None) -> TwinState:
     """Fresh ``TwinState``: base parameters, empty history, zero counters.
 
     The candidate grid is precomputed host-side here (one
     :func:`~repro.core.calibrate.candidate_grid` call) and carried as state
     leaves, so every subsequent ``twin_step`` is pure array math.
+
+    With ``cfg.sim_bins > 0`` the state carries the full-horizon DES
+    utilization field: pass ``sim_u`` (``[sim_bins, H]``) to seed it, or
+    leave it ``None`` for a zero field the shell fills in later.  With
+    ``cfg.calibration.per_host`` the parameter leaves are ``[H]`` rows
+    (scalar bases broadcast; length-``H`` vectors pass through).
     """
-    base = PowerParams(p_idle=_scalar_param(base_params.p_idle, "p_idle"),
-                       p_max=_scalar_param(base_params.p_max, "p_max"),
-                       r=_scalar_param(base_params.r, "r"))
     k, tw, h = cfg.history_windows, cfg.bins_per_window, cfg.dc.num_hosts
+    hosts = h if cfg.calibration.per_host else None
+    base = PowerParams(
+        p_idle=_scalar_param(base_params.p_idle, "p_idle", hosts),
+        p_max=_scalar_param(base_params.p_max, "p_max", hosts),
+        r=_scalar_param(base_params.r, "r", hosts))
+    if cfg.sim_bins > 0:
+        if sim_u is None:
+            sim_u = jnp.zeros((cfg.sim_bins, h), jnp.float32)
+        else:
+            sim_u = jnp.asarray(sim_u, jnp.float32)
+            if sim_u.shape != (cfg.sim_bins, h):
+                raise ValueError(
+                    f"sim_u must be [{cfg.sim_bins}, {h}] "
+                    f"(cfg.sim_bins x num_hosts); got {sim_u.shape}")
+    elif sim_u is not None:
+        raise ValueError("sim_u given but cfg.sim_bins == 0")
     state = TwinState(
+        sim_u=sim_u,
         params=base,
         base_params=base,
         cand=candidate_grid(cfg.calibration, base),
@@ -318,8 +369,20 @@ def twin_step(state: TwinState, telemetry: TelemetrySlice,
     cfg = state.cfg
     params = state.params
 
-    # S_k — prediction with the pipelined parameters.
-    pred = predict_metrics(sim_slice.u_th, params, cfg.dc,
+    # S_k — prediction with the pipelined parameters.  When the state owns
+    # the full-horizon DES (cfg.sim_bins > 0) and the caller passes no
+    # window slice, slice it here: the twin simulates from *its own* field,
+    # which topology-applying feedback may have re-simulated.
+    u_win = sim_slice.u_th
+    if u_win is None:
+        if state.sim_u is None:
+            raise ValueError(
+                "SimSlice.u_th is None but the state carries no sim_u "
+                "(TwinConfig.sim_bins == 0)")
+        u_win = jax.lax.dynamic_slice_in_dim(
+            state.sim_u, state.window * cfg.bins_per_window,
+            cfg.bins_per_window, axis=0)
+    pred = predict_metrics(u_win, params, cfg.dc,
                            model=cfg.power_model,
                            carbon_intensity=sim_slice.carbon_intensity,
                            ambient_c=sim_slice.ambient_c,
@@ -371,6 +434,7 @@ def twin_step(state: TwinState, telemetry: TelemetrySlice,
         bias_under=under,
         bias_over=over,
         bias_ties=ties,
+        sim_u=state.sim_u,
         cfg=cfg,
     )
     out = WindowOutput(prediction=pred, mape=m, calib_mape=calib_mape,
@@ -420,6 +484,9 @@ def state_to_bytes(state: TwinState) -> bytes:
             # old files load with pue=None (tolerant .get on load).
             "pue": (dataclasses.asdict(cfg.pue)
                     if cfg.pue is not None else None),
+            # 0 when the shell owns the DES; old files load with 0
+            # (tolerant .get on load), so the leaf lists line up.
+            "sim_bins": cfg.sim_bins,
         },
         "leaves": [codec.pack_array(x) for x in leaves],
     }
@@ -444,6 +511,7 @@ def state_from_bytes(blob: bytes) -> TwinState:
         kernel_backend=c["kernel_backend"],
         slos=tuple(SLO(**s) for s in c["slos"]),
         pue=(PUEParams(**c["pue"]) if c.get("pue") is not None else None),
+        sim_bins=c.get("sim_bins", 0),
     )
     template = init_twin_state(cfg)
     treedef = jax.tree_util.tree_structure(template)

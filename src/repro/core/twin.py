@@ -15,9 +15,11 @@ Two physical-twin flavors ship with the repo:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Iterator
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.desim import simulate_utilization
@@ -105,24 +107,57 @@ class DigitalTwin:
 
 # -- fleet twinning: vmap(twin_step) over independent datacenters -------------
 
+def _flatten_with_names(state: TwinState):
+    """``[(field-qualified leaf name, leaf), ...]`` + treedef, for errors.
+
+    ``TwinState`` (and ``PowerParams``) register plain pytree nodes without
+    key paths, so names are built from the dataclass fields — the level an
+    error message needs (``params.p_idle``, ``hist_u``, ``sim_u``).
+    """
+    out = []
+    for f in dataclasses.fields(state):
+        if f.name == "cfg":
+            continue
+        sub = getattr(state, f.name)
+        if isinstance(sub, PowerParams):
+            out.extend((f"{f.name}.{g.name}", getattr(sub, g.name))
+                       for g in dataclasses.fields(sub))
+        else:
+            out.extend((f.name, x) for x in jax.tree_util.tree_leaves(sub))
+    return out, jax.tree_util.tree_structure(state)
+
+
 def stack_twin_states(states: "list[TwinState] | tuple[TwinState, ...]") -> TwinState:
     """Stack D independent twins into one batched ``TwinState`` ``[D, ...]``.
 
     Every state must share the same :class:`~repro.core.state.TwinConfig`
-    (the config is pytree aux data, so mismatched configs fail loudly at
-    stack time) and the same array shapes — i.e. the fleet twins datacenters
-    of one padded size per compiled program, like the scenario engine's
-    ``max_hosts`` axis.
+    *and* the same leaf shapes (both checked up front, so mismatched fleets
+    fail loudly at stack time, naming the offending leaf and lane) — i.e.
+    the fleet twins datacenters of one padded size per compiled program,
+    like the scenario engine's ``max_hosts`` axis.
     """
     if not states:
         raise ValueError("need at least one TwinState to stack")
     cfg = states[0].cfg
-    for s in states[1:]:
+    ref, ref_def = _flatten_with_names(states[0])
+    for lane, s in enumerate(states[1:], start=1):
         if s.cfg != cfg:
             raise ValueError(
                 "fleet states must share one TwinConfig (got differing "
                 f"configs:\n  {cfg}\n  {s.cfg})")
-    return jax.tree.map(lambda *xs: jax.numpy.stack(xs, axis=0), *states)
+        cur, cur_def = _flatten_with_names(s)
+        if cur_def != ref_def:
+            raise ValueError(
+                f"fleet states must share one pytree structure; lane {lane} "
+                "differs from lane 0 (a field present on one side only, "
+                "e.g. sim_u)")
+        for (name, a), (_, b) in zip(ref, cur):
+            if jnp.shape(a) != jnp.shape(b):
+                raise ValueError(
+                    f"fleet states must share leaf shapes; leaf {name} has "
+                    f"shape {jnp.shape(b)} in lane {lane} vs "
+                    f"{jnp.shape(a)} in lane 0")
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *states)
 
 
 def index_twin_state(fleet: TwinState, i: int) -> TwinState:
@@ -138,12 +173,26 @@ def update_twin_state_lane(fleet: TwinState, i: int,
     a tenant joins a resident fleet by landing its ``TwinState`` on a free
     lane; :func:`index_twin_state` is the eviction half.  Host-side eager
     ops — admission/eviction are rare control-plane events, not per-step
-    work — and config-checked like :func:`stack_twin_states`.
+    work — and config- and shape-checked like :func:`stack_twin_states`
+    (a mismatched state names the offending leaf and lane instead of
+    surfacing as a cryptic scatter error).
     """
     if state.cfg != fleet.cfg:
         raise ValueError(
             "lane state must share the fleet's TwinConfig (got differing "
             f"configs:\n  {fleet.cfg}\n  {state.cfg})")
+    f_leaves, f_def = _flatten_with_names(fleet)
+    s_leaves, s_def = _flatten_with_names(state)
+    if s_def != f_def:
+        raise ValueError(
+            f"lane {i} state must share the fleet's pytree structure "
+            "(a field present on one side only, e.g. sim_u)")
+    for (name, f), (_, s) in zip(f_leaves, s_leaves):
+        if jnp.shape(f)[1:] != jnp.shape(s):
+            raise ValueError(
+                f"lane {i} state leaf {name} has shape {jnp.shape(s)}; the "
+                f"fleet carries {jnp.shape(f)} (want {jnp.shape(f)[1:]} "
+                "per lane)")
     return jax.tree.map(lambda f, s: f.at[i].set(s), fleet, state)
 
 
@@ -183,7 +232,8 @@ def _fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active):
 _fleet_step_masked_jit = jax.jit(_fleet_step_masked, donate_argnums=(0,))
 
 
-def fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active
+def fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active,
+                      *, shard: bool = False, mesh=None
                       ) -> tuple[TwinState, WindowOutput]:
     """Advance a partially-filled fleet one window in ONE compiled program.
 
@@ -196,15 +246,36 @@ def fleet_step_masked(fleet: TwinState, telemetry, sim_slices, lane_active
     :class:`~repro.core.state.SimSlice` with ``[D, ...]`` leaves;
     ``lane_active`` is the ``[D]`` bool fill mask.
 
-    The ``fleet`` argument's buffers are **donated** — rebind the returned
-    state.
+    With ``shard=True`` the D axis is ``shard_map``-ped over ``mesh``
+    (default: :func:`fleet_mesh` over all local devices): lanes pad to a
+    multiple of the device count with *inactive* lane-0 replicas and the
+    outputs slice back, bit-for-bit vs the vmap path (pinned by
+    ``tests/test_shard_fleet.py``) — the serving fleet spreads resident
+    tenants across devices without the batcher noticing.
+
+    On the default path the ``fleet`` argument's buffers are **donated** —
+    rebind the returned state (the sharded program, like the S axis's, does
+    not donate: padding copies the carry anyway).
     """
-    return _fleet_step_masked_jit(fleet, telemetry, sim_slices, lane_active)
-
-
-# surfaced for the single-compile serving tests, like run_fleet below
-fleet_step_masked._cache_size = getattr(
-    _fleet_step_masked_jit, "_cache_size", None)
+    if not shard:
+        return _fleet_step_masked_jit(fleet, telemetry, sim_slices,
+                                      lane_active)
+    mesh = fleet_mesh() if mesh is None else mesh
+    d = jax.tree.leaves(fleet)[0].shape[0]
+    pad = _fleet_pad(d, mesh)
+    new_fleet, outs = _fleet_step_masked_sharded_jit(
+        _commit_to_mesh(_pad_fleet_axis(fleet, pad, axis=0), mesh, axis=0),
+        _commit_to_mesh(_pad_fleet_axis(telemetry, pad, axis=0), mesh, axis=0),
+        _commit_to_mesh(_pad_fleet_axis(sim_slices, pad, axis=0), mesh, axis=0),
+        _commit_to_mesh(
+            jnp.concatenate([jnp.asarray(lane_active, bool),
+                             jnp.zeros((pad,), bool)]) if pad
+            else jnp.asarray(lane_active, bool), mesh, axis=0),
+        mesh=mesh)
+    if pad:
+        new_fleet = jax.tree.map(lambda x: x[:d], new_fleet)
+        outs = jax.tree.map(lambda x: x[:d], outs)
+    return new_fleet, outs
 
 
 def _run_fleet(fleet: TwinState, telemetry, sim_slices):
@@ -220,7 +291,8 @@ def _run_fleet(fleet: TwinState, telemetry, sim_slices):
 _run_fleet_jit = jax.jit(_run_fleet, donate_argnums=(0,))
 
 
-def run_fleet(fleet: TwinState, telemetry, sim_slices
+def run_fleet(fleet: TwinState, telemetry, sim_slices,
+              *, shard: bool = False, mesh=None
               ) -> tuple[TwinState, WindowOutput]:
     """Twin a whole fleet over a whole horizon in ONE compiled program.
 
@@ -233,20 +305,148 @@ def run_fleet(fleet: TwinState, telemetry, sim_slices
     x W windows — prediction, scoring, SLO/bias accumulation and grid-search
     calibration — compile once and execute as a single fused program.
 
+    With ``shard=True`` the D axis is additionally ``shard_map``-ped over
+    the devices of ``mesh`` (default: a 1-D :func:`fleet_mesh` over all
+    local devices), the same recipe as ``run_scenarios(shard=True)`` on the
+    S axis: D pads to a multiple of the device count with lane-0 replicas,
+    each device scans its local lanes, and the outputs slice back to the
+    true D — **bit-for-bit identical** to the single-device vmap path
+    (pinned by ``tests/test_shard_fleet.py``).
+
     Returns the final fleet state and the per-window outputs stacked
     ``[W, D, ...]``.  Each lane is the exact computation :func:`twin_step`
     performs solo (pinned by ``tests/test_twin_core.py``).
 
-    The ``fleet`` argument's buffers are **donated** (rebind the return
-    value; re-running from the same starting state requires a fresh
-    :func:`stack_twin_states`).
+    On the default path the ``fleet`` argument's buffers are **donated**
+    (rebind the return value; re-running from the same starting state
+    requires a fresh :func:`stack_twin_states`).
     """
-    return _run_fleet_jit(fleet, telemetry, sim_slices)
+    if not shard:
+        return _run_fleet_jit(fleet, telemetry, sim_slices)
+    mesh = fleet_mesh() if mesh is None else mesh
+    d = jax.tree.leaves(fleet)[0].shape[0]
+    pad = _fleet_pad(d, mesh)
+    new_fleet, outs = _run_fleet_sharded_jit(
+        _commit_to_mesh(_pad_fleet_axis(fleet, pad, axis=0), mesh, axis=0),
+        _commit_to_mesh(_pad_fleet_axis(telemetry, pad, axis=1), mesh, axis=1),
+        _commit_to_mesh(_pad_fleet_axis(sim_slices, pad, axis=1), mesh, axis=1),
+        mesh=mesh)
+    if pad:
+        new_fleet = jax.tree.map(lambda x: x[:d], new_fleet)
+        outs = jax.tree.map(lambda x: x[:, :d], outs)
+    return new_fleet, outs
 
 
-# surfaced for the single-compilation regression test; `_cache_size` is
-# private jax API, so its absence must degrade to None, not an import error
-run_fleet._cache_size = getattr(_run_fleet_jit, "_cache_size", None)
+# -- fleet-axis sharding: shard_map over D, bit-for-bit vs the vmap path ------
+
+#: mesh axis name the fleet (lane) axis is sharded over
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(num_devices: int | None = None):
+    """A 1-D device mesh over ``FLEET_AXIS`` (default: all local devices).
+
+    On CPU-only deployments, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* process
+    start to split the host into N devices (the ``tier1-multidevice`` CI job
+    runs the fleet equivalence suite exactly that way).
+    """
+    from repro.parallel.sharding import make_mesh_compat
+
+    devs = jax.devices()  # tracecheck: disable=TC007 — mesh discovery is this helper's purpose
+    n = len(devs) if num_devices is None else int(num_devices)
+    return make_mesh_compat((n,), (FLEET_AXIS,), devices=np.array(devs[:n]))
+
+
+def _fleet_pad(d: int, mesh) -> int:
+    """Lanes to add so every device holds an equal, safe shard of D."""
+    n_dev = mesh.shape[FLEET_AXIS]
+    per_dev = -(-d // n_dev)
+    if n_dev > 1:
+        # keep >= 2 lanes per device: a batch-1 vmapped while_loop inside
+        # shard_map trips an XLA sharding-propagation bug on jax 0.4.x —
+        # same workaround as the scenario engine's S axis.
+        per_dev = max(per_dev, 2)
+    return per_dev * n_dev - d
+
+
+def _pad_fleet_axis(tree, pad: int, axis: int):
+    """Pad the fleet axis by replicating lane 0 (sliced off by the caller)."""
+    if pad == 0:
+        return tree
+
+    def pad_leaf(x):
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, 1)
+        return jnp.concatenate(
+            [x, jnp.repeat(x[tuple(sl)], pad, axis=axis)], axis=axis)
+
+    return jax.tree.map(pad_leaf, tree)
+
+
+def _commit_to_mesh(tree, mesh, axis: int):
+    """Commit every leaf to the mesh, fleet axis sharded over ``FLEET_AXIS``.
+
+    The sharded jits cache on input *sharding*: without this, the first call
+    (uncommitted host arrays) and every steady-state call (the previous
+    call's ``NamedSharding`` outputs fed back as the carry — the serve
+    dispatch loop) would trace two separate programs.  ``device_put`` is a
+    no-op for already-matching leaves, so the steady state pays nothing.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    sharding = NamedSharding(mesh, P(*((None,) * axis), FLEET_AXIS))
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _run_fleet_sharded_jit(fleet, telemetry, sim_slices, *, mesh):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    return shard_map(
+        _run_fleet, mesh=mesh,
+        # fleet-state leaves lead with D; telemetry/sim leaves are [W, D, ..]
+        in_specs=(P(FLEET_AXIS), P(None, FLEET_AXIS), P(None, FLEET_AXIS)),
+        out_specs=(P(FLEET_AXIS), P(None, FLEET_AXIS)),
+        check_rep=False,
+    )(fleet, telemetry, sim_slices)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _fleet_step_masked_sharded_jit(fleet, telemetry, sim_slices, lane_active,
+                                   *, mesh):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    return shard_map(
+        _fleet_step_masked, mesh=mesh,
+        # one window: every input/output leaf leads with the D axis
+        in_specs=(P(FLEET_AXIS),) * 4,
+        out_specs=(P(FLEET_AXIS), P(FLEET_AXIS)),
+        check_rep=False,
+    )(fleet, telemetry, sim_slices, lane_active)
+
+
+# surfaced for the single-compilation regression tests; `_cache_size` is
+# private jax API, so its absence must degrade to None, not an import
+# error.  The sharded program is a distinct executable with its own cache,
+# so each counter sums both paths — a vmap-only workload and a sharded one
+# each still count 1.
+_run_fleet_caches = tuple(
+    getattr(f, "_cache_size", None)
+    for f in (_run_fleet_jit, _run_fleet_sharded_jit))
+run_fleet._cache_size = (
+    (lambda: sum(c() for c in _run_fleet_caches))
+    if all(_run_fleet_caches) else None)
+
+_fleet_step_caches = tuple(
+    getattr(f, "_cache_size", None)
+    for f in (_fleet_step_masked_jit, _fleet_step_masked_sharded_jit))
+fleet_step_masked._cache_size = (
+    (lambda: sum(c() for c in _fleet_step_caches))
+    if all(_fleet_step_caches) else None)
 
 
 def run_surf_experiment(

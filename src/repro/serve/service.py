@@ -90,6 +90,14 @@ class ServeConfig:
     poll_seconds: float = 0.05
     #: dispatched-but-unharvested batches to keep in flight
     inflight_depth: int = 1
+    #: shard the lane (D) axis over the device mesh: every dispatch runs
+    #: :func:`~repro.core.twin.fleet_step_masked` with ``shard=True``
+    #: (bit-for-bit vs the vmap path), spreading resident tenants across
+    #: devices.  Pick ``lanes`` as a multiple of the device count (>= 2 per
+    #: device) so dispatches skip the per-call padding copy.
+    shard: bool = False
+    #: explicit device mesh for ``shard=True`` (default: fleet_mesh())
+    mesh: "object | None" = None
 
     def __post_init__(self):
         bad = set(self.columns) - set(SIM_COLUMNS)
@@ -97,6 +105,8 @@ class ServeConfig:
             raise ValueError(
                 f"unknown sim columns {sorted(bad)}; choose from "
                 f"{SIM_COLUMNS}")
+        if self.mesh is not None and not self.shard:
+            raise ValueError("mesh given but shard=False")
 
 
 @dataclasses.dataclass
@@ -296,7 +306,9 @@ class TwinService:
         by_lane = {self._lanes.lane(t): ev for t, (ev, _) in ready.items()}
         telem, sim, active = build_fleet_inputs(
             by_lane, self.cfg.lanes, self.cfg.twin, self.cfg.columns)
-        new_fleet, outs = fleet_step_masked(self._fleet, telem, sim, active)
+        new_fleet, outs = fleet_step_masked(
+            self._fleet, telem, sim, active,
+            shard=self.cfg.shard, mesh=self.cfg.mesh)
         entries = []
         for tenant, (ev, key) in ready.items():
             lane = self._lanes.lane(tenant)

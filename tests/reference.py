@@ -278,6 +278,60 @@ def reference_readout(u_th, *, p_idle, p_max, r, power_cap_w=None,
     return out
 
 
+def reference_mape(real, sim, eps=1e-9):
+    """Scalar replica of ``repro.core.power.mape``: denominator
+    ``|real| + eps``, zero-real bins excluded, all-zero → NaN, in %."""
+    total, n = 0.0, 0
+    for rv, sv in zip(real, sim):
+        if abs(rv) > eps:
+            total += abs((rv - sv) / (abs(rv) + eps))
+            n += 1
+    return total / n * 100.0 if n else math.nan
+
+
+def reference_calibrate_per_host(u_th, real_power, candidates, fleet_params,
+                                 fleet_mape):
+    """Loop-based oracle for ``calibrate._per_host_refit`` (float64).
+
+    ``u_th`` is ``[T][H]``, ``real_power`` ``[T]``, ``candidates`` a list of
+    ``(p_idle, p_max, r)`` scalar tuples (the same grid the engine scores),
+    ``fleet_params`` a ``(p_idle, p_max, r)`` tuple of scalars or ``[H]``
+    lists.  Measured total power is attributed to hosts by their predicted
+    share under the fleet fit; each host argmins the grid against its share
+    column (first finite minimum wins, like the engine's argmin), hosts with
+    no finite score keep the fleet row, and the returned MAPE is the
+    *total-power* MAPE of the combined per-host prediction (fleet MAPE when
+    that is undefined).  Returns ``((p_idle_row, p_max_row, r_row), mape)``.
+    """
+    t_bins, h = len(u_th), len(u_th[0])
+
+    def fleet_row(v):
+        return list(v) if isinstance(v, (list, tuple)) else [v] * h
+
+    fpi, fpm, fr = (fleet_row(fleet_params[0]), fleet_row(fleet_params[1]),
+                    fleet_row(fleet_params[2]))
+    pred = [[opendc_power(u_th[t][j], fpi[j], fpm[j], fr[j])
+             for j in range(h)] for t in range(t_bins)]
+    rows = ([], [], [])
+    for j in range(h):
+        target = [real_power[t] * pred[t][j] / max(sum(pred[t]), 1e-9)
+                  for t in range(t_bins)]
+        best, best_m = None, math.inf
+        for c in candidates:
+            m = reference_mape(
+                target, [opendc_power(u_th[t][j], *c) for t in range(t_bins)])
+            if not math.isnan(m) and m < best_m:
+                best, best_m = c, m
+        chosen = best if best is not None else (fpi[j], fpm[j], fr[j])
+        for row, v in zip(rows, chosen):
+            row.append(v)
+    combined = [sum(opendc_power(u_th[t][j], rows[0][j], rows[1][j],
+                                 rows[2][j]) for j in range(h))
+                for t in range(t_bins)]
+    m = reference_mape(real_power, combined)
+    return rows, (fleet_mape if math.isnan(m) else m)
+
+
 def reference_scenario(workload, dc, scenario, *, t_bins, p_idle, p_max, r,
                        intensity=None, ambient=None, price=None,
                        max_starts_per_bin=64):

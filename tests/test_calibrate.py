@@ -1,5 +1,11 @@
-"""Self-Calibrator: grid search recovers hidden parameters; backends agree."""
+"""Self-Calibrator: grid search recovers hidden parameters; backends agree.
 
+Also pins the traced path against the host path (``calibrate_traced`` vs
+``calibrate_window``, refinement included, degenerate windows included) and
+the per-host mode against the pure-Python oracle in ``tests/reference.py``.
+"""
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,11 +13,13 @@ import pytest
 from repro.core.calibrate import (
     CalibrationSpec,
     SelfCalibrator,
+    calibrate_traced,
     calibrate_window,
     candidate_grid,
     evaluate_candidates,
 )
-from repro.core.power import PowerParams, opendc_power
+from repro.core.power import PowerParams, mape, opendc_power
+from reference import reference_calibrate_per_host
 
 RNG = np.random.default_rng(0)
 T, H = 192, 64
@@ -104,6 +112,167 @@ def test_joint_grid_clamps_narrow_span_base():
         U, real, CalibrationSpec(mode="joint", r_points=6, scale_points=5),
         narrow)
     assert np.isfinite(res.mape)
+
+
+# -- traced path vs host path (refinement included) ---------------------------
+
+def _objective(u, real, p: PowerParams) -> float:
+    """Window MAPE of a concrete parameter point (the argmin objective)."""
+    return float(mape(real, jnp.sum(opendc_power(u, p), axis=-1)))
+
+
+def _run_both(u, real, spec, base):
+    cand = candidate_grid(spec, base)
+    t_params, t_mape = jax.jit(calibrate_traced, static_argnames=("spec",))(
+        u, real, cand, spec, base)
+    w = calibrate_window(u, real, spec, base)
+    return (t_params, float(t_mape)), w
+
+
+@pytest.mark.parametrize("mode", ["r_only", "joint"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_traced_matches_window_with_refinement(mode, seed):
+    """Differential pin: ``calibrate_traced`` with ``refine_iters > 0`` must
+    land on the same operating point as the host-side ``calibrate_window``
+    on randomized windows.  The refine grids differ in the last ulp
+    (jnp.linspace vs np.linspace), so the assertion is objective-level: both
+    paths' returned parameters achieve the same window MAPE, and the
+    reported MAPE equals the achieved one."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.uniform(0.05, 0.95, (96, 16)).astype(np.float32))
+    hidden = PowerParams(p_idle=75.0, p_max=360.0,
+                         r=float(rng.uniform(1.5, 4.5)))
+    real = jnp.asarray(
+        np.asarray(opendc_power(u, hidden)).sum(1).astype(np.float32)
+        * (1.0 + 0.01 * rng.standard_normal(96).astype(np.float32)))
+    spec = CalibrationSpec(mode=mode, r_points=16, scale_points=5,
+                           refine_iters=2)
+    (t_params, t_mape), w = _run_both(u, real, spec, BASE)
+    m_t = _objective(u, real, jax.tree.map(float, t_params))
+    m_w = _objective(u, real, w.params)
+    assert m_t == pytest.approx(m_w, rel=1e-3, abs=1e-3)
+    assert t_mape == pytest.approx(m_t, rel=1e-3, abs=1e-3)
+    assert w.mape == pytest.approx(m_w, rel=1e-3, abs=1e-3)
+
+
+@pytest.mark.parametrize("mode", ["r_only", "joint"])
+def test_refined_all_zero_window_keeps_incumbent_both_paths(mode):
+    """Satellite regression (refine-path NaN escape): an all-zero-power
+    window scores NaN on the base grid AND every refined round.  The traced
+    path must fold refined rounds into its any-finite verdict and never let
+    a NaN-incumbent comparison crown a refined candidate — both paths keep
+    the incumbent base parameters with a NaN MAPE."""
+    zeros = jnp.zeros((T,), jnp.float32)
+    spec = CalibrationSpec(mode=mode, r_points=8, scale_points=3,
+                           refine_iters=2)
+    (t_params, t_mape), w = _run_both(U, zeros, spec, BASE)
+    assert w.params == BASE and np.isnan(w.mape)
+    assert float(t_params.p_idle) == BASE.p_idle
+    assert float(t_params.p_max) == BASE.p_max
+    assert float(t_params.r) == BASE.r
+    assert np.isnan(t_mape)
+
+
+def test_single_finite_bin_window_differential():
+    """Only one bin carries measured power: MAPE is defined by that single
+    bin and both paths (refinement on) must agree on the operating point."""
+    real_full = _truth(r=2.6)
+    real = jnp.zeros((T,), jnp.float32).at[7].set(real_full[7])
+    spec = CalibrationSpec(r_points=16, refine_iters=2)
+    (t_params, t_mape), w = _run_both(U, real, spec, BASE)
+    assert np.isfinite(t_mape) and np.isfinite(w.mape)
+    m_t = _objective(U, real, jax.tree.map(float, t_params))
+    m_w = _objective(U, real, w.params)
+    assert m_t == pytest.approx(m_w, rel=1e-3, abs=1e-3)
+
+
+# -- per-host mode ------------------------------------------------------------
+
+def _hetero_truth(rng, t, rows: PowerParams):
+    """Total power of a fleet whose hosts follow different power models."""
+    h = np.asarray(rows.r).shape[0]
+    u = rng.uniform(0.05, 0.95, (t, h)).astype(np.float32)
+    real = np.asarray(opendc_power(jnp.asarray(u), rows)).sum(1)
+    return jnp.asarray(u), jnp.asarray(real.astype(np.float32))
+
+
+def test_per_host_matches_reference_oracle():
+    """The per-host refit must agree with the loop-based float64 oracle:
+    same chosen row per host (grids are identical, hosts well-separated)
+    and the same combined-prediction MAPE."""
+    rng = np.random.default_rng(11)
+    hidden = PowerParams(p_idle=jnp.full((3,), 70.0),
+                         p_max=jnp.full((3,), 350.0),
+                         r=jnp.asarray([1.4, 2.6, 4.2], jnp.float32))
+    u, real = _hetero_truth(rng, 64, hidden)
+    spec = CalibrationSpec(r_points=48, per_host=True)
+    cand = candidate_grid(spec, BASE)
+    rows, m = calibrate_traced(u, real, cand, spec, BASE)
+
+    fleet_spec = CalibrationSpec(r_points=48)
+    fp, fm = calibrate_traced(u, real, cand, fleet_spec, BASE)
+    cands = list(zip(np.asarray(cand.p_idle).tolist(),
+                     np.asarray(cand.p_max).tolist(),
+                     np.asarray(cand.r).tolist()))
+    ref_rows, ref_m = reference_calibrate_per_host(
+        np.asarray(u, np.float64).tolist(),
+        np.asarray(real, np.float64).tolist(),
+        cands, (float(fp.p_idle), float(fp.p_max), float(fp.r)), float(fm))
+    np.testing.assert_allclose(np.asarray(rows.p_idle), ref_rows[0],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rows.p_max), ref_rows[1],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rows.r), ref_rows[2], rtol=1e-6)
+    assert float(m) == pytest.approx(ref_m, rel=1e-3)
+
+
+def test_per_host_beats_fleet_on_heterogeneous_fleet():
+    """The acceptance gate: on a heterogeneous synthetic fleet the per-host
+    rows achieve strictly lower window MAPE than the single fleet-level
+    parameter set."""
+    rng = np.random.default_rng(5)
+    hidden = PowerParams(
+        p_idle=jnp.full((8,), 70.0), p_max=jnp.full((8,), 350.0),
+        r=jnp.asarray(np.linspace(1.3, 4.7, 8), jnp.float32))
+    u, real = _hetero_truth(rng, 128, hidden)
+    cand = candidate_grid(CalibrationSpec(r_points=64), BASE)
+    _, fleet_m = calibrate_traced(
+        u, real, cand, CalibrationSpec(r_points=64), BASE)
+    rows, per_host_m = calibrate_traced(
+        u, real, cand, CalibrationSpec(r_points=64, per_host=True), BASE)
+    assert np.asarray(rows.r).shape == (8,)
+    assert float(per_host_m) < float(fleet_m)
+    # the rows actually differentiate hosts (not one row broadcast)
+    assert np.unique(np.asarray(rows.r)).size > 1
+
+
+def test_per_host_homogeneous_equals_fleet_rows_bitwise():
+    """On a homogeneous fleet every host's share target is the same signal,
+    so each host picks the same grid point: the rows must be the fleet-level
+    candidate broadcast bitwise (the incumbent path in [H]-row clothing)."""
+    real = _truth(r=2.9)
+    cand = candidate_grid(CalibrationSpec(r_points=64), BASE)
+    fp, _ = calibrate_traced(U, real, cand, CalibrationSpec(r_points=64),
+                             BASE)
+    rows, _ = calibrate_traced(
+        U, real, cand, CalibrationSpec(r_points=64, per_host=True), BASE)
+    np.testing.assert_array_equal(
+        np.asarray(rows.r), np.full((H,), float(fp.r), np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(rows.p_idle), np.full((H,), float(fp.p_idle), np.float32))
+
+
+def test_per_host_all_zero_window_keeps_fleet_fallback():
+    """An all-zero-power window in per-host mode: every host's share target
+    is all-zero (NaN MAPE), so every row falls back to the fleet result and
+    the NaN verdict survives."""
+    zeros = jnp.zeros((T,), jnp.float32)
+    spec = CalibrationSpec(r_points=8, per_host=True)
+    cand = candidate_grid(spec, BASE)
+    rows, m = calibrate_traced(U, zeros, cand, spec, BASE)
+    assert np.isnan(float(m))
+    np.testing.assert_array_equal(np.asarray(rows.r),
+                                  np.full((H,), 2.0, np.float32))
 
 
 def test_self_calibrator_pipelining():

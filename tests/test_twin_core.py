@@ -342,3 +342,336 @@ def test_restore_state_rejects_config_mismatch(tmp_path):
                         OrchestratorConfig(bins_per_window=24))
     with pytest.raises(ValueError, match="TwinConfig"):
         orch.restore_state(path)
+
+
+# -- fleet validation: mismatches name the offending leaf and lane ------------
+
+def test_stack_twin_states_names_leaf_and_lane_on_shape_mismatch():
+    other = TwinConfig(bins_per_window=12,
+                       dc=DatacenterConfig(num_hosts=4, cores_per_host=4))
+    small = init_twin_state(other)
+    # same-config object but different host axis is impossible, so force the
+    # shape mismatch alone: align the cfg and keep the 4-host leaves
+    import dataclasses as _dc
+    mismatched = _dc.replace(small, cfg=CFG_SMALL)
+    with pytest.raises(ValueError, match=r"hist_u.*lane 2"):
+        stack_twin_states([init_twin_state(CFG_SMALL),
+                           init_twin_state(CFG_SMALL), mismatched])
+
+
+def test_stack_twin_states_rejects_mixed_sim_u_presence():
+    import dataclasses as _dc
+    with_sim = _dc.replace(init_twin_state(CFG_SMALL),
+                           sim_u=jnp.zeros((24, 8), jnp.float32))
+    with pytest.raises(ValueError, match=r"lane 1.*sim_u"):
+        stack_twin_states([init_twin_state(CFG_SMALL), with_sim])
+
+
+def test_update_twin_state_lane_names_leaf_and_lane():
+    from repro.core.twin import update_twin_state_lane
+
+    fleet = stack_twin_states([init_twin_state(CFG_SMALL)] * 3)
+    import dataclasses as _dc
+    bad = _dc.replace(
+        init_twin_state(TwinConfig(
+            bins_per_window=12,
+            dc=DatacenterConfig(num_hosts=4, cores_per_host=4))),
+        cfg=CFG_SMALL)
+    with pytest.raises(ValueError, match=r"lane 2.*leaf hist_u"):
+        update_twin_state_lane(fleet, 2, bad)
+
+
+# -- resident DES: the state owns the full-horizon simulation -----------------
+
+def test_sim_in_state_twin_step_slices_own_window_bitwise():
+    """With ``sim_bins > 0`` and ``SimSlice.u_th=None`` the step must read
+    exactly the window's slice of ``state.sim_u`` — bitwise the same outputs
+    as passing the slice explicitly."""
+    rng = np.random.default_rng(21)
+    sim_u = rng.uniform(0, 1, (36, 8)).astype(np.float32)
+    cfg = TwinConfig(bins_per_window=12, dc=DC_SMALL, sim_bins=36)
+    ext = init_twin_state(CFG_SMALL)
+    res = init_twin_state(cfg, sim_u=sim_u)
+    for w in range(3):
+        u, p = _telem(w)
+        telem = make_telemetry(u, p)
+        ext, out_e = twin_step_jit(
+            ext, telem, SimSlice(u_th=jnp.asarray(sim_u[12 * w:12 * (w + 1)])))
+        res, out_r = twin_step_jit(res, telem, SimSlice())
+        for a, b in zip(jax.tree.leaves(out_e), jax.tree.leaves(out_r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(res.sim_u), sim_u)
+
+
+def test_sim_slice_without_u_th_or_sim_u_raises():
+    state = init_twin_state(CFG_SMALL)
+    u, p = _telem(0)
+    with pytest.raises(ValueError, match="sim_u"):
+        twin_step(state, make_telemetry(u, p), SimSlice())
+
+
+def test_init_twin_state_validates_sim_u():
+    cfg = TwinConfig(bins_per_window=12, dc=DC_SMALL, sim_bins=36)
+    with pytest.raises(ValueError, match=r"\[36, 8\]"):
+        init_twin_state(cfg, sim_u=np.zeros((24, 8), np.float32))
+    with pytest.raises(ValueError, match="sim_bins == 0"):
+        init_twin_state(CFG_SMALL, sim_u=np.zeros((36, 8), np.float32))
+
+
+def test_sim_in_state_checkpoint_roundtrip(tmp_path):
+    rng = np.random.default_rng(8)
+    sim_u = rng.uniform(0, 1, (24, 8)).astype(np.float32)
+    cfg = TwinConfig(bins_per_window=12, dc=DC_SMALL, sim_bins=24)
+    state = init_twin_state(cfg, sim_u=sim_u)
+    u, p = _telem(2)
+    state, _ = twin_step_jit(state, make_telemetry(u, p), SimSlice())
+    path = str(tmp_path / "sim.ckpt")
+    save_state(state, path)
+    back = load_state(path)
+    assert back.cfg.sim_bins == 24
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_state_layout_unchanged_by_new_features():
+    """``sim_u=None`` must be an empty subtree: the default state's leaf
+    list (and hence every existing golden/checkpoint) is unchanged."""
+    state = init_twin_state(CFG_SMALL)
+    assert state.sim_u is None
+    assert len(jax.tree.leaves(state)) == 18  # 3x3 params + 9 buffers
+
+
+# -- per-host calibration through the twin core -------------------------------
+
+def test_per_host_twin_beats_fleet_mean_on_heterogeneous_fleet():
+    """Acceptance: a heterogeneous synthetic fleet through the full twin
+    loop — per-host calibration achieves strictly lower window MAPE than
+    the fleet-mean path once calibration kicks in."""
+    from repro.core.calibrate import CalibrationSpec
+    from repro.core.power import PowerParams, opendc_power
+
+    hidden = PowerParams(
+        p_idle=jnp.full((8,), 70.0), p_max=jnp.full((8,), 350.0),
+        r=jnp.asarray(np.linspace(1.3, 4.7, 8), jnp.float32))
+    cfg_ph = TwinConfig(bins_per_window=12, dc=DC_SMALL,
+                        calibration=CalibrationSpec(per_host=True))
+    st_fleet = init_twin_state(CFG_SMALL)
+    st_ph = init_twin_state(cfg_ph)
+    assert np.asarray(st_ph.params.r).shape == (8,)
+    rng = np.random.default_rng(17)
+    m_fleet = m_ph = None
+    for _ in range(4):
+        u = rng.uniform(0, 1, (12, 8)).astype(np.float32)
+        real = np.asarray(opendc_power(jnp.asarray(u), hidden).sum(axis=-1))
+        telem = make_telemetry(u, real)
+        sl = SimSlice(u_th=jnp.asarray(u))
+        st_fleet, out_f = twin_step_jit(st_fleet, telem, sl)
+        st_ph, out_p = twin_step_jit(st_ph, telem, sl)
+        m_fleet, m_ph = float(out_f.mape), float(out_p.mape)
+    assert m_ph < m_fleet
+    assert np.unique(np.asarray(st_ph.params.r)).size > 1
+
+
+def test_per_host_twin_homogeneous_matches_fleet_path_bitwise():
+    """Acceptance: on a homogeneous fleet the per-host mode must reproduce
+    the incumbent fleet-mean path bitwise — same predictions, same MAPE
+    stream, rows equal to the fleet scalar broadcast."""
+    from repro.core.calibrate import CalibrationSpec
+    from repro.core.power import PowerParams, opendc_power
+
+    hidden = PowerParams(p_idle=70.0, p_max=350.0, r=3.2)
+    cfg_ph = TwinConfig(bins_per_window=12, dc=DC_SMALL,
+                        calibration=CalibrationSpec(per_host=True))
+    st_fleet = init_twin_state(CFG_SMALL)
+    st_ph = init_twin_state(cfg_ph)
+    rng = np.random.default_rng(29)
+    for _ in range(3):
+        u = rng.uniform(0, 1, (12, 8)).astype(np.float32)
+        real = np.asarray(opendc_power(jnp.asarray(u), hidden).sum(axis=-1))
+        telem = make_telemetry(u, real)
+        sl = SimSlice(u_th=jnp.asarray(u))
+        st_fleet, out_f = twin_step_jit(st_fleet, telem, sl)
+        st_ph, out_p = twin_step_jit(st_ph, telem, sl)
+        np.testing.assert_array_equal(np.asarray(out_f.prediction.power_w),
+                                      np.asarray(out_p.prediction.power_w))
+        np.testing.assert_array_equal(np.asarray(out_f.mape),
+                                      np.asarray(out_p.mape))
+        np.testing.assert_array_equal(
+            np.asarray(st_ph.params.r),
+            np.full((8,), float(np.asarray(st_fleet.params.r)), np.float32))
+
+
+def test_per_host_base_params_validation():
+    from repro.core.calibrate import CalibrationSpec
+    from repro.core.power import PowerParams
+
+    cfg_ph = TwinConfig(bins_per_window=12, dc=DC_SMALL,
+                        calibration=CalibrationSpec(per_host=True))
+    rows = PowerParams(p_idle=np.linspace(60, 90, 8).astype(np.float32),
+                       p_max=350.0, r=2.0)
+    st = init_twin_state(cfg_ph, rows)
+    np.testing.assert_array_equal(np.asarray(st.params.p_idle),
+                                  np.linspace(60, 90, 8).astype(np.float32))
+    with pytest.raises(ValueError, match=r"\[8\]"):
+        init_twin_state(cfg_ph, PowerParams(
+            p_idle=np.zeros((3,), np.float32) + 70, p_max=350.0, r=2.0))
+    with pytest.raises(ValueError, match="per_host=True"):
+        init_twin_state(CFG_SMALL, rows)
+
+
+# -- applying structural proposals (paper stage 3) ----------------------------
+
+def _run_orch(cfg, dc, days=0.5, seed=3):
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=seed), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    orch = Orchestrator(w, dc, t_bins, cfg)
+    truth = TraceGroundTruth(w, dc, t_bins)
+    for win in range(orch.num_windows):
+        orch.store.ingest(truth.window(win, cfg.bins_per_window))
+        orch.run_window(win)
+    return orch
+
+
+def test_sim_in_state_orchestrator_matches_external_cache_bitwise():
+    """Resident-DES mode must be a pure plumbing change: the same run,
+    window for window, bitwise."""
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    base = _run_orch(OrchestratorConfig(bins_per_window=12), dc)
+    res = _run_orch(OrchestratorConfig(bins_per_window=12,
+                                       sim_in_state=True), dc)
+    assert res.state.sim_u is not None
+    for a, b in zip(base.records, res.records):
+        np.testing.assert_array_equal(np.asarray(a.prediction.power_w),
+                                      np.asarray(b.prediction.power_w))
+        assert a.mape == b.mape
+
+
+def test_apply_proposal_scale_up_reseeds_resident_des():
+    from repro.core.feedback import Proposal, ProposalKind
+
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    orch = _run_orch(OrchestratorConfig(bins_per_window=12,
+                                        sim_in_state=True), dc)
+    t_bins = orch.t_bins
+    p = Proposal(kind=ProposalKind.SCALE_UP, window=3, detail="grow",
+                 impact={"num_hosts": 12}, created_at=0.0)
+    with pytest.raises(ValueError, match="not approved"):
+        orch.apply_proposal(p)
+    p.approved = True
+    window_before = int(orch.state.window)
+    slo_before = np.asarray(orch.state.slo_samples).copy()
+    orch.apply_proposal(p)
+    assert p.applied
+    assert orch.dc.num_hosts == 12
+    assert orch.state.cfg.dc.num_hosts == 12
+    # the twin's own simulation now covers the proposed topology
+    assert orch.state.sim_u.shape == (t_bins, 12)
+    # run accumulators migrated; history reset (old-topology telemetry)
+    assert int(orch.state.window) == window_before
+    np.testing.assert_array_equal(np.asarray(orch.state.slo_samples),
+                                  slo_before)
+    assert int(orch.state.hist_n) == 0
+    # stale 8-host telemetry is treated as not-landed, not a shape error
+    rec = orch.run_window(0)
+    assert rec.mape is None
+    assert np.isfinite(np.asarray(rec.prediction.power_w)).all()
+
+
+def test_apply_proposal_scheduler_change_keeps_history():
+    from repro.core.feedback import Proposal, ProposalKind
+
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    orch = _run_orch(OrchestratorConfig(bins_per_window=12,
+                                        sim_in_state=True), dc)
+    sim_before = np.asarray(orch.state.sim_u).copy()
+    hist_before = int(orch.state.hist_n)
+    p = Proposal(kind=ProposalKind.SCHEDULER_CHANGE, window=4, detail="bf",
+                 impact={"scenario": "s", "policy": "best_fit",
+                         "backfill_depth": 4, "mean_wait_bins": 0.0,
+                         "unplaced_jobs": 0, "energy_kwh": 1.0},
+                 created_at=0.0, approved=True)
+    orch.apply_proposal(p)
+    assert orch.policy == "best_fit" and orch.backfill_depth == 4
+    # same topology: calibration history survives the scheduler swap
+    assert int(orch.state.hist_n) == hist_before
+    # the resident DES really re-ran under the new scheduler
+    assert orch.state.sim_u.shape == sim_before.shape
+    rec = orch.run_window(0)
+    assert np.isfinite(np.asarray(rec.prediction.power_w)).all()
+
+
+def test_apply_proposal_rejects_non_structural_kinds():
+    from repro.core.feedback import Proposal, ProposalKind
+
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    orch = _run_orch(OrchestratorConfig(bins_per_window=12), dc)
+    p = Proposal(kind=ProposalKind.POWER_CAP, window=1, detail="cap",
+                 impact={}, created_at=0.0, approved=True)
+    with pytest.raises(ValueError, match="not a structural proposal"):
+        orch.apply_proposal(p)
+
+
+def test_apply_proposal_migrates_per_host_rows():
+    from repro.core.calibrate import CalibrationSpec
+    from repro.core.feedback import Proposal, ProposalKind
+    from repro.core.power import PowerParams
+
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    days = 0.25
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=3), dc)
+    orch = Orchestrator(
+        w, dc, int(days * BINS_PER_DAY),
+        OrchestratorConfig(bins_per_window=12, sim_in_state=True,
+                           calibration=CalibrationSpec(per_host=True)),
+        base_params=PowerParams(
+            p_idle=np.arange(8, dtype=np.float32) + 60.0,
+            p_max=350.0, r=2.0))
+    p = Proposal(kind=ProposalKind.SCALE_UP, window=0, detail="grow",
+                 impact={"num_hosts": 12}, created_at=0.0, approved=True)
+    orch.apply_proposal(p)
+    rows = np.asarray(orch.state.params.p_idle)
+    # existing rows survive; new hosts assume fleet-average hardware
+    np.testing.assert_array_equal(rows[:8],
+                                  np.arange(8, dtype=np.float32) + 60.0)
+    np.testing.assert_allclose(rows[8:], np.full(4, 63.5, np.float32))
+
+
+def test_per_host_rows_reach_whatif_prediction_and_survive_scale_up():
+    """ISSUE satellite (per-host rows dropped on scale-up): the twin's own
+    per-host calibrated rows must thread through
+    ``Orchestrator.evaluate_whatif`` — including a scale-up scenario, where
+    existing hosts keep their own curve and hypothetical added hosts assume
+    fleet-average hardware.  If any stage collapsed the rows to scalar
+    means, the heterogeneous and collapsed fleets would predict the same
+    trace; they must differ measurably on *both* lanes."""
+    from repro.core.calibrate import CalibrationSpec
+    from repro.core.power import PowerParams
+    from repro.core.scenarios import Scenario
+
+    dc = DatacenterConfig(num_hosts=8, cores_per_host=4)
+    days = 0.25
+    w = make_surf22_like(SurfTraceSpec(days=days, seed=5), dc)
+    t_bins = int(days * BINS_PER_DAY)
+    rows = PowerParams(
+        p_idle=np.asarray([55.0, 95.0] * 4, np.float32),
+        p_max=np.asarray([300.0, 420.0] * 4, np.float32),
+        r=np.asarray([1.5, 3.5] * 4, np.float32))
+    collapsed = PowerParams(p_idle=75.0, p_max=360.0, r=2.5)
+    orch = Orchestrator(
+        w, dc, t_bins,
+        OrchestratorConfig(bins_per_window=12,
+                           calibration=CalibrationSpec(per_host=True)),
+        base_params=rows)
+    orch_flat = Orchestrator(w, dc, t_bins,
+                             OrchestratorConfig(bins_per_window=12),
+                             base_params=collapsed)
+    scs = [Scenario(name="grow", num_hosts=12)]
+    res = orch.evaluate_whatif(scs, max_hosts=12)
+    res_flat = orch_flat.evaluate_whatif(scs, max_hosts=12)
+    p = np.asarray(res.prediction.power_w)
+    q = np.asarray(res_flat.prediction.power_w)
+    assert p.shape == q.shape and p.shape[0] == 2    # baseline + grow
+    assert np.isfinite(p).all()
+    for lane in range(p.shape[0]):
+        rel = np.abs(p[lane] - q[lane]) / np.abs(q[lane])
+        assert rel.max() > 1e-3

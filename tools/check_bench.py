@@ -52,6 +52,10 @@ COMPILE_COUNTS = {
     "BENCH_serve.json": (
         "serve.compiles",
     ),
+    "BENCH_fleet.json": (
+        "fleet.vmap_compiles",
+        "fleet.sharded_compiles",
+    ),
 }
 
 #: dotted paths that must be positive finite wall-clock seconds
@@ -78,6 +82,22 @@ WALL_CLOCKS = {
         "serve.warm_s",
         "serve.replay_s",
     ),
+    "BENCH_fleet.json": (
+        "fleet.vmap_cold_s",
+        "fleet.vmap_warm_s",
+        "fleet.sharded_cold_s",
+        "fleet.sharded_warm_s",
+        "fleet.vmap_window_step_s",
+        "fleet.sharded_window_step_s",
+    ),
+}
+
+#: dotted paths of sharded-vs-vmap cross-checks: must be ``true`` or an
+#: explicit ``"skipped: ..."`` reason, never null (the silently-dropped
+#: check is the PR-7 bug this tool exists to catch)
+BITWISE_CHECKS = {
+    "BENCH_whatif.json": ("new_axes_grid.sharded_bitwise_equal",),
+    "BENCH_fleet.json": ("fleet.sharded_bitwise_equal",),
 }
 
 
@@ -129,20 +149,22 @@ def check_snapshot(path: pathlib.Path) -> list[str]:
         if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
             errors.append(f"{path.name}: {wpath} = {v!r}, want finite > 0")
 
-    # the sharded cross-check must be an explicit outcome, never null
-    if path.name == "BENCH_whatif.json":
-        sbe = _get(snap, "new_axes_grid")["sharded_bitwise_equal"] \
-            if "new_axes_grid" in snap else None
+    # the sharded cross-checks must be explicit outcomes, never null
+    for bpath in BITWISE_CHECKS.get(path.name, ()):
+        try:
+            sbe = _get(snap, bpath)
+        except KeyError:
+            sbe = None
         if sbe is None:
             errors.append(
-                f"{path.name}: new_axes_grid.sharded_bitwise_equal is null — "
-                "record true (checked) or an explicit 'skipped: ...' reason")
+                f"{path.name}: {bpath} is null — record true (checked) or "
+                "an explicit 'skipped: ...' reason")
         elif isinstance(sbe, str):
             if not sbe.startswith("skipped:"):
-                errors.append(f"{path.name}: sharded_bitwise_equal string "
-                              f"must start with 'skipped:', got {sbe!r}")
+                errors.append(f"{path.name}: {bpath} string must start "
+                              f"with 'skipped:', got {sbe!r}")
         elif sbe is not True:
-            errors.append(f"{path.name}: sharded_bitwise_equal = {sbe!r} — "
+            errors.append(f"{path.name}: {bpath} = {sbe!r} — "
                           "the shard_map path diverged from vmap")
     return errors
 

@@ -43,6 +43,14 @@ JIT_ENTRYPOINTS: dict[str, tuple[str, ...]] = {
     # compiled program the streaming service (repro.serve) multiplexes
     # every tenant mix onto
     "repro.core.twin._fleet_step_masked": (),
+    # the traced calibration grid (fleet argmin + optional per-host refit,
+    # calibrate._per_host_refit) — jitted indirectly inside twin_step and
+    # directly by differential tests as jax.jit(..., static_argnames="spec")
+    "repro.core.calibrate.calibrate_traced": ("spec",),
+    # NOTE: the D-axis sharded fleet programs (twin._run_fleet_sharded_jit /
+    # twin._fleet_step_masked_sharded_jit, static over "mesh") are
+    # decorator-form module-level jits and auto-register; they wrap the two
+    # _run_fleet/_fleet_step_masked bodies listed above via shard_map.
 }
 
 #: Parameter names that are static *by repo convention* wherever they appear
